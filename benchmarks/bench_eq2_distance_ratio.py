@@ -1,0 +1,31 @@
+"""Eq. 2 reproduction: per-step modulo-distance ratio Bine/binomial -> 2/3,
+and the resulting <=33% global-traffic reduction bound.
+"""
+
+import numpy as np
+
+from repro.core import butterflies as bf
+from repro.core import negabinary as nb
+
+from .common import emit
+
+
+def run():
+    rows = []
+    for p in (64, 256, 1024, 4096):
+        s = nb.log2_int(p)
+        db = bf.modulo_distance_stats("bine_dh", p)
+        dr = bf.modulo_distance_stats("recdoub_dh", p)
+        for i in range(s):
+            rows.append((p, i, float(db[i]), float(dr[i]),
+                         float(db[i] / dr[i])))
+    emit(rows, ("p", "step", "bine_dist", "binomial_dist", "ratio"))
+    p = 4096
+    db = bf.modulo_distance_stats("bine_dh", p)
+    dr = bf.modulo_distance_stats("recdoub_dh", p)
+    print(f"# sum-distance ratio p={p}: {db.sum()/dr.sum():.4f} "
+          f"(Eq.2 asymptote 2/3 = {2/3:.4f})")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Fig. 1 reproduction: global-link bytes of an 8-node broadcast on a 2:1
+oversubscribed fat tree (2 nodes per leaf switch).
+
+Paper: distance-doubling binomial = 6n bytes on global links;
+distance-halving binomial = 3n; Bine matches 3n at p=8 and wins at scale.
+"""
+
+from repro.core import schedules as sc
+from repro.core import traffic as tf
+
+from .common import emit
+
+
+def run():
+    rows = []
+    for p, group in [(8, 2), (64, 8), (256, 16), (1024, 32)]:
+        topo = tf.GroupedTopo("fat2to1", group_size=group)
+        for algo in ("binomial_dd", "binomial_dh", "bine"):
+            s = sc.get_schedule("broadcast", algo, p)
+            g = tf.global_bytes(s, p, 1.0, topo)
+            rows.append(("broadcast", p, group, algo, g))
+    emit(rows, ("collective", "p", "group_size", "algo", "global_bytes_per_n"))
+    # the paper's exact Fig. 1 numbers
+    topo = tf.GroupedTopo("fig1", group_size=2)
+    dd = tf.global_bytes(sc.get_schedule("broadcast", "binomial_dd", 8), 8, 1.0, topo)
+    dh = tf.global_bytes(sc.get_schedule("broadcast", "binomial_dh", 8), 8, 1.0, topo)
+    assert (dd, dh) == (6.0, 3.0), (dd, dh)
+    print("# Fig.1 check: binomial_dd=6n binomial_dh=3n  OK")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fig. 8a/9a reproduction: best-allreduce-algorithm heatmap over
+(node count × vector size) under the α-β global-link model.
+
+Expected pattern (paper): ring wins large vectors at small node counts;
+Bine dominates the medium-size / large-node regime; recursive doubling
+('N') only at tiny sizes.
+"""
+
+from repro.core import schedules as sc
+from repro.core import traffic as tf
+
+from .common import emit
+
+ALGOS = {
+    "B": ("allreduce", "bine"),         # bine RS+AG (large) — paper
+    "b": ("allreduce", "bine_small"),   # bine recursive doubling (small)
+    "N": ("allreduce", "recdoub_small"),
+    "D": ("allreduce", "recdoub"),
+    "R": ("allreduce", "ring"),
+}
+
+
+def run(topo=tf.LUMI):
+    sizes = [32, 1024, 32768, 1 << 20, 16 << 20, 128 << 20, 512 << 20]
+    nodes = [16, 32, 64, 128, 256, 512]
+    rows = []
+    grid = []
+    for p in nodes:
+        scheds = {k: sc.get_schedule(c, a, p) for k, (c, a) in ALGOS.items()}
+        line = []
+        for n in sizes:
+            times = {k: tf.sched_time(s, p, n, topo,
+                                      segment_bytes=1 << 20)
+                     for k, s in scheds.items()}
+            best = min(times, key=times.get)
+            bine_best = min(times["B"], times["b"])
+            other_best = min(v for k, v in times.items() if k not in "Bb")
+            cell = (best if best not in "Bb"
+                    else f"{other_best/bine_best:.2f}x")
+            line.append(cell)
+            rows.append((p, n, best, times[best], bine_best / other_best))
+        grid.append((p, line))
+    emit(rows, ("nodes", "bytes", "best", "t_best_s", "bine_vs_best_ratio"))
+    print("# heatmap (rows=nodes, cols=sizes; letter = non-bine best, "
+          "'Kx' = bine wins by K):")
+    for p, line in grid:
+        print(f"# {p:5d}: " + " ".join(f"{c:>6s}" for c in line))
+
+
+if __name__ == "__main__":
+    run()

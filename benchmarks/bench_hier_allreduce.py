@@ -1,0 +1,50 @@
+"""Sec. 6.2 reproduction: hierarchical allreduce (intra-group RS ->
+inter-group allreduce on the shard -> intra-group AG) vs flat algorithms,
+on the TPU multi-pod topology (pods = the paper's fully-connected nodes,
+DCN = the slow inter-node fabric).
+"""
+
+from repro.core import schedules as sc
+from repro.core import traffic as tf
+
+from .common import emit
+
+
+def hier_time(p_in: int, p_out: int, n_bytes: float, topo) -> float:
+    """intra RS (fast links) + inter AR on n/p_in + intra AG."""
+    rs = sc.get_schedule("reduce_scatter", "bine", p_in)
+    ag = sc.get_schedule("allgather", "bine", p_in)
+    # intra-group phases: all groups in parallel on local links
+    t_rs = tf.sched_time(rs, p_in, n_bytes, topo)
+    t_ag = tf.sched_time(ag, p_in, n_bytes, topo)
+    ar = sc.get_schedule("allreduce", "bine", p_out)
+    # inter-group phase on the 1/p_in shard; all ranks cross groups
+    wide = tf.GroupedTopo("inter", group_size=1,
+                          alpha_local=topo.alpha_global,
+                          beta_local=topo.beta_global,
+                          alpha_global=topo.alpha_global,
+                          beta_global=topo.beta_global,
+                          uplinks_per_group=topo.uplinks_per_group)
+    t_ar = tf.sched_time(ar, p_out, n_bytes / p_in, wide)
+    return t_rs + t_ar + t_ag
+
+
+def run():
+    topo = tf.TPU_MULTIPOD
+    rows = []
+    for p_in, p_out in [(32, 2), (32, 4), (64, 8)]:
+        p = p_in * p_out
+        for n in (1 << 20, 16 << 20, 256 << 20):
+            flat = tf.sched_time(
+                sc.get_schedule("allreduce", "bine", p), p, n, topo)
+            flat_binom = tf.sched_time(
+                sc.get_schedule("allreduce", "recdoub", p), p, n, topo)
+            hier = hier_time(p_in, p_out, n, topo)
+            rows.append((p_in, p_out, n, flat, flat_binom, hier,
+                         flat / hier))
+    emit(rows, ("ranks_per_group", "groups", "bytes", "bine_flat_s",
+                "binomial_flat_s", "bine_hier_s", "hier_speedup"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Tables 3/4/5 reproduction: per-collective %win / avg gain / traffic
+reduction of Bine vs binomial across (node count × vector size) grids
+under the α-β global-link cost model, on LUMI-like (Dragonfly, Table 3),
+Leonardo-like (Dragonfly+, Table 4) and MN5-like (2:1 fat-tree, Table 5)
+topologies.
+
+Rank placement follows the paper's measurement conditions: jobs are
+*sampled allocations* (scheduler-like spread over multiple groups, nodes
+sorted — the block remapping of Sec. 2.2), not idealized group-aligned
+blocks.  Averages are over several sampled allocations, as the paper's
+tables average over real runs.
+
+Qualitative findings reproduced: Bine wins the majority of cells for most
+collectives, traffic reduction is bounded by 33% and grows with node
+count, and broadcast shows the largest cuts vs the Open-MPI-style
+distance-doubling binomial (the Fig. 1 effect).
+"""
+
+import numpy as np
+
+from repro.core import schedules as sc
+from repro.core import traffic as tf
+
+from .common import emit
+
+PAIRS = {
+    "allreduce": ("bine", "recdoub"),
+    "allgather": ("bine", "recdoub"),
+    "reduce_scatter": ("bine", "recdoub"),
+    "alltoall": ("bine", "bruck"),
+    "broadcast": ("bine", "binomial_dd"),   # Open MPI-style baseline
+    "reduce": ("bine", "binomial_dd"),
+    "gather": ("bine", "binomial"),
+    "scatter": ("bine", "binomial"),
+}
+
+NODES = [64, 128, 256, 512]
+SIZES = [1024, 32 * 1024, 1 << 20, 16 << 20]
+N_ALLOC = 5
+
+
+def run_system(name: str, topo, n_groups: int):
+    rng = np.random.RandomState(7)
+    rows = []
+    for coll, (a_bine, a_base) in sorted(PAIRS.items()):
+        wins = losses = ties = 0
+        gains, drops, reds = [], [], []
+        for p in NODES:
+            sb = sc.get_schedule(coll, a_bine, p)
+            sa = sc.get_schedule(coll, a_base, p)
+            placements = [tf.sample_allocation(rng, p, topo, n_groups)
+                          for _ in range(N_ALLOC)]
+            for n in SIZES:
+                tb_ = np.mean([tf.sched_time(sb, p, n, topo, pl)
+                               for pl in placements])
+                ta = np.mean([tf.sched_time(sa, p, n, topo, pl)
+                              for pl in placements])
+                if tb_ < ta * 0.995:
+                    wins += 1
+                    gains.append(ta / tb_ - 1)
+                elif ta < tb_ * 0.995:
+                    losses += 1
+                    drops.append(tb_ / ta - 1)
+                else:
+                    ties += 1
+            gb = np.mean([tf.global_bytes(sb, p, 1.0, topo, pl)
+                          for pl in placements])
+            ga = np.mean([tf.global_bytes(sa, p, 1.0, topo, pl)
+                          for pl in placements])
+            if ga > 0:
+                reds.append((ga - gb) / ga)
+        total = wins + losses + ties
+        rows.append((
+            name, coll, f"{100*wins/total:.0f}%", f"{100*losses/total:.0f}%",
+            f"{100*np.mean(gains):.0f}%" if gains else "-",
+            f"{100*max(gains):.0f}%" if gains else "-",
+            f"{100*np.mean(reds):.0f}%" if reds else "-",
+            f"{100*max(reds):.0f}%" if reds else "-",
+        ))
+    return rows
+
+
+def run():
+    rows = []
+    rows += run_system("lumi_dragonfly(T3)", tf.LUMI, 24)
+    rows += run_system("leonardo_dfly+(T4)", tf.LEONARDO, 23)
+    rows += run_system("mn5_fattree(T5)", tf.MARENOSTRUM5, 16)
+    emit(rows, ("system", "collective", "%win", "%loss", "avg_gain",
+                "max_gain", "avg_traffic_red", "max_traffic_red"))
+
+
+if __name__ == "__main__":
+    run()

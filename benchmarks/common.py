@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: CSV emitters, timing, system presets."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+from repro.core import traffic as tf
+
+#: the paper's four systems + the TPU multi-pod target
+SYSTEMS = {
+    "lumi": tf.LUMI,
+    "leonardo": tf.LEONARDO,
+    "mn5": tf.MARENOSTRUM5,
+    "tpu_multipod": tf.TPU_MULTIPOD,
+}
+
+VEC_SIZES = [32, 1024, 32 * 1024, 1 << 20, 16 << 20, 128 << 20]
+NODE_COUNTS = [16, 32, 64, 128, 256]
+
+
+def emit(rows: Iterable[tuple], header: tuple):
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(f"{x:.6g}" if isinstance(x, float) else str(x)
+                       for x in r))
+
+
+def time_call(fn: Callable, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us

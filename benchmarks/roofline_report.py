@@ -1,0 +1,51 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "results/dryrun"):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        cells[(r["arch"], r["shape"], r["mesh"], r["backend"])] = r
+    return cells
+
+
+def table(out_dir: str = "results/dryrun", mesh: str = "16x16",
+          backend: str = "bine") -> str:
+    cells = load(out_dir)
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_coll (DCN) | dominant | "
+        "MODEL/HLO FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m, b), r in sorted(cells.items()):
+        if m != mesh or b != backend:
+            continue
+        tc, tm, tl = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+        dcn = r["global_bytes_per_chip"] / 25e9
+        bound = max(tc, tm, tl)
+        # roofline fraction: how close the step is to its IDEAL bound —
+        # compute-bound for train/prefill, HBM-bandwidth-bound for decode
+        ideal = tm if "decode" in shape or "500k" in shape else tc
+        frac = ideal / bound if bound else 0.0
+        ur = r.get("useful_ratio") or 0.0
+        lines.append(
+            f"| {arch} | {shape} | {tc:.3f}s | {tm:.3f}s | {tl:.3f}s "
+            f"({dcn:.3f}s) | {r['dominant']} | {ur:.3f} | {frac:.2f} |")
+    return "\n".join(lines)
+
+
+def run():
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n== roofline table mesh={mesh} backend=bine ==")
+        print(table(mesh=mesh))
+
+
+if __name__ == "__main__":
+    run()

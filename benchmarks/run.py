@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all analytic benches
+  PYTHONPATH=src python -m benchmarks.run --with-jax # + 8-device microbench
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+BENCHES = [
+    ("fig1_broadcast_traffic", "Fig. 1: bcast global-link bytes"),
+    ("eq2_distance_ratio", "Eq. 2: distance ratio -> 2/3"),
+    ("fig5_alloc_traffic", "Fig. 5: allocation-sampled traffic reduction"),
+    ("table3_collectives", "Tables 3-5: per-collective win/loss + traffic"),
+    ("fig8_allreduce_heatmap", "Fig. 8a/9a: best-allreduce heatmap"),
+    ("fugaku_torus", "Sec. 5.4: torus + multi-dimensional Bine"),
+    ("hier_allreduce", "Sec. 6.2: hierarchical allreduce"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--with-jax", action="store_true",
+                    help="also run the 8-device shard_map microbench")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    names = [n for n, _ in BENCHES]
+    if args.with_jax:
+        names.append("jax_collectives")
+    if args.only:
+        names = [n for n in names if args.only in n]
+
+    for name in names:
+        desc = dict(BENCHES).get(name, name)
+        print(f"\n===== bench_{name}: {desc} =====")
+        t0 = time.time()
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        mod.run()
+        print(f"# bench_{name} done in {time.time()-t0:.1f}s")
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

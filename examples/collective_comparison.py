@@ -1,0 +1,67 @@
+"""Compare collective backends end to end: same model, same data — Bine vs
+binomial (recursive doubling) vs ring vs XLA built-ins, with the
+hierarchical (Sec. 6.2) variant on the multi-pod mesh.
+
+Prints per-backend loss curves (they must agree to fp tolerance — the
+algorithms differ only in the communication schedule) and the HLO
+collective footprint per step (total + DCN/global-link bytes).
+
+  PYTHONPATH=src python examples/collective_comparison.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import base  # noqa: E402
+from repro.launch import hlo as H  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.train.data import DataConfig, make_batch  # noqa: E402
+from repro.train.step import (TrainConfig, make_init_fns,  # noqa: E402
+                              make_train_step)
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = base.reduced(base.get_config("phi4-mini-3.8b"))
+    key = jax.random.key(0)
+    shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+    dcfg = DataConfig(global_batch=8, seq_len=64, vocab_size=cfg.vocab_size)
+    acfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=50)
+
+    print(f"{'backend':10s} {'loss@0':>8s} {'loss@11':>8s} "
+          f"{'coll MB/chip':>12s} {'DCN MB/chip':>12s} {'CP ops':>7s}")
+    for backend in ("bine", "recdoub", "ring", "bine_hier", "xla"):
+        tcfg = TrainConfig(backend=backend, dp_axes=("pod", "data"),
+                           adamw=acfg)
+        step_fn, shardings, _ = make_train_step(cfg, tcfg, mesh, shapes)
+        init_p, init_s = make_init_fns(cfg, tcfg, mesh, shapes)
+        with jax.set_mesh(mesh):
+            params = init_p(key)
+            state = init_s(params)
+            losses = []
+            compiled = None
+            for s in range(12):
+                b = make_batch(dcfg, s)
+                batch = {k: jax.device_put(v, shardings["batch"][k])
+                         for k, v in b.items()}
+                if compiled is None:
+                    compiled = step_fn.lower(params, state, batch).compile()
+                params, state, m = step_fn(params, state, batch)
+                losses.append(float(m["loss"]))
+        roof = H.roofline_from_compiled(compiled, 8, 4)
+        cp = roof.coll_op_counts.get("collective-permute", 0)
+        print(f"{backend:10s} {losses[0]:8.4f} {losses[-1]:8.4f} "
+              f"{roof.coll_bytes_per_chip/1e6:12.2f} "
+              f"{roof.global_bytes_per_chip/1e6:12.2f} {cp:7.0f}")
+    print("\nloss curves agree across backends (same math, different "
+          "schedules); Bine/bine_hier cut the global-link (pod-crossing) "
+          "bytes — the paper's metric.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .api import (CollectiveConfig, BINE, XLA, allreduce, reduce_scatter,
+                  allgather, all_to_all, broadcast, reduce, gather, scatter)

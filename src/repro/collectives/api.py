@@ -1,0 +1,133 @@
+"""Public collective API: backend dispatch (paper algorithms vs XLA built-ins).
+
+Backends
+  xla        : XLA's native lowering (psum / all_gather / psum_scatter /
+               all_to_all) — the production baseline on a single ICI torus.
+  bine       : the paper's algorithms (this work).
+  recdoub    : classical binomial/recursive-doubling butterflies.
+  ring       : bandwidth-optimal ring (latency-bound at scale).
+  bine_hier  : hierarchical (Sec. 6.2): bine RS/AG intra-pod + bine across.
+
+The allreduce auto-switches small/large at ``small_cutoff_bytes`` like the
+paper's implementations (Sec. 4.4/4.5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import shmap
+
+Axis = shmap.Axis
+
+
+@dataclass(frozen=True)
+class CollectiveConfig:
+    backend: str = "bine"             # bine | recdoub | ring | xla | bine_hier
+    small_cutoff_bytes: int = 16384   # allreduce small/large switch
+    inner_axis: Optional[Axis] = None  # for bine_hier: the fast (intra-pod) axis
+    outer_axis: Optional[Axis] = None
+
+    def replace(self, **kw):
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+XLA = CollectiveConfig(backend="xla")
+BINE = CollectiveConfig(backend="bine")
+
+
+def _nbytes(x) -> int:
+    return x.size * x.dtype.itemsize
+
+
+def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
+    b = cfg.backend
+    if b == "xla":
+        return lax.psum(x, axis)
+    if b == "bine_hier":
+        inner = cfg.inner_axis if cfg.inner_axis is not None else axis
+        outer = cfg.outer_axis
+        assert outer is not None, "bine_hier needs outer_axis"
+        return shmap.allreduce_hierarchical(x, inner, outer, "bine")
+    if b == "ring":
+        return shmap.allreduce_ring(x, axis)
+    if b in ("bine", "recdoub"):
+        if _nbytes(x) <= cfg.small_cutoff_bytes:
+            return shmap.allreduce_small(x, axis, b)
+        return shmap.allreduce_butterfly(x, axis, b)
+    raise ValueError(f"unknown backend {b!r}")
+
+
+def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
+    """Full vector (len divisible by axis size) -> own reduced block."""
+    b = cfg.backend
+    if b == "xla":
+        p = shmap.axis_size(axis)
+        v = x.reshape(-1)
+        return lax.psum_scatter(v.reshape(p, -1), axis, scatter_dimension=0,
+                                tiled=False)
+    if b == "ring":
+        return shmap.reduce_scatter(x, axis, "ring")
+    return shmap.reduce_scatter(x, axis, "bine" if b.startswith("bine") else b)
+
+
+def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
+    """Own block -> full vector in rank order."""
+    b = cfg.backend
+    if b == "xla":
+        return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
+    if b == "ring":
+        return shmap.allgather(x, axis, "ring")
+    return shmap.allgather(x, axis, "bine" if b.startswith("bine") else b)
+
+
+def all_to_all(x, axis: Axis, cfg: CollectiveConfig = BINE):
+    """[p, ...] row d to rank d  ->  [p, ...] row o from rank o."""
+    b = cfg.backend
+    if b == "xla":
+        return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+    algo = {"bine": "bine", "bine_hier": "bine", "recdoub": "recdoub",
+            "ring": "bruck", "bruck": "bruck"}[b]
+    return shmap.all_to_all(x, axis, algo)
+
+
+def broadcast(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
+    if cfg.backend == "xla":
+        # XLA has no direct bcast primitive at this level; emulate via select+psum
+        idx = shmap.axis_index(axis)
+        masked = jnp.where(idx == root, x, jnp.zeros_like(x))
+        return lax.psum(masked, axis)
+    algo = "bine" if cfg.backend.startswith("bine") else "binomial"
+    return shmap.broadcast(x, axis, root, algo)
+
+
+def reduce(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
+    if cfg.backend == "xla":
+        return lax.psum(x, axis)  # all ranks get it; root semantics upstream
+    algo = "bine" if cfg.backend.startswith("bine") else "binomial"
+    return shmap.reduce(x, axis, root, algo)
+
+
+def gather(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
+    if cfg.backend == "xla":
+        return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
+    algo = "bine" if cfg.backend.startswith("bine") else "binomial"
+    return shmap.gather(x, axis, root, algo)
+
+
+def scatter(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
+    if cfg.backend == "xla":
+        p = shmap.axis_size(axis)
+        idx = shmap.axis_index(axis)
+        # only root's x is significant: broadcast (masked psum), then slice
+        masked = jnp.where(idx == root, x, jnp.zeros_like(x))
+        v = lax.psum(masked, axis).reshape(p, -1)
+        return lax.dynamic_index_in_dim(v, idx, axis=0, keepdims=False)
+    algo = "bine" if cfg.backend.startswith("bine") else "binomial"
+    return shmap.scatter(x, axis, root, algo)

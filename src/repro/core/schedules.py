@@ -1,0 +1,379 @@
+"""Per-collective communication schedules (paper Sec. 4) for every algorithm.
+
+A schedule is a list of steps; each step is a list of ``Msg`` records
+``(src, dst, blocks)`` where ``blocks`` is the ordered tuple of vector-block
+indices carried by the message (block = 1/p of the vector for most
+collectives; for broadcast/reduce "small" the whole vector is block 0 and
+counts as p pseudo-blocks for byte accounting — see ``Msg.nblocks``).
+
+Algorithms:
+  trees       : bine_dh | bine_dd | binomial_dh | binomial_dd
+  butterflies : bine_dh | bine_dd | recdoub_dh | recdoub_dd
+  linear      : ring, bruck (alltoall baseline)
+
+These schedules are consumed by
+  * core.simulate   — numpy execution + oracle checks,
+  * core.traffic    — per-link / global-link byte counting,
+  * collectives.shmap — baked in as static ppermute step tables.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from . import butterflies as bf
+from . import trees as tr
+from .negabinary import log2_int
+
+BLOCK_ALL = -1  # sentinel: message carries the full vector
+
+
+@dataclass(frozen=True)
+class Msg:
+    src: int
+    dst: int
+    blocks: Tuple[int, ...]  # ordered block ids; (BLOCK_ALL,) = whole vector
+
+    def nblocks(self, p: int) -> int:
+        if self.blocks == (BLOCK_ALL,):
+            return p
+        return len(self.blocks)
+
+
+Step = List[Msg]
+Sched = List[Step]
+
+
+# ---------------------------------------------------------------------------
+# Broadcast / Reduce (small vectors): plain trees (paper Sec. 4.5)
+# ---------------------------------------------------------------------------
+
+def broadcast_sched(algo: str, p: int, root: int = 0) -> Sched:
+    tree = tr.rotate_schedule(tr.TREES[algo](p), root, p)
+    return [[Msg(a, b, (BLOCK_ALL,)) for a, b in step] for step in tree]
+
+
+def reduce_sched(algo: str, p: int, root: int = 0) -> Sched:
+    """Reduce = time-reversed broadcast; each edge flows child -> parent."""
+    tree = tr.rotate_schedule(tr.TREES[algo](p), root, p)
+    return [[Msg(b, a, (BLOCK_ALL,)) for a, b in step] for step in reversed(tree)]
+
+
+# ---------------------------------------------------------------------------
+# Gather / Scatter: trees with per-subtree block sets (paper Sec. 4.1/4.2)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _subtrees(algo: str, p: int) -> Tuple[Tuple[int, ...], ...]:
+    sub = tr.subtree_blocks(tr.TREES[algo](p), p)
+    return tuple(tuple(sorted(x)) for x in sub)
+
+
+def gather_sched(algo: str, p: int, root: int = 0) -> Sched:
+    """Each rank forwards its whole accumulated subtree to its parent.
+
+    Accumulated sets are replayed exactly (order preserved mod-p contiguous
+    for bine_dh / binomial trees, per paper Sec. 4.1).
+    """
+    tree = tr.TREES[algo](p)
+    held: List[List[int]] = [[r] for r in range(p)]
+    sched: Sched = []
+    for step in reversed(tree):
+        msgs: Step = []
+        for parent, child in step:
+            msgs.append(Msg(child, parent, tuple(held[child])))
+            held[parent] = _merge_mod_contig(held[parent], held[child], p)
+        sched.append(msgs)
+    assert sorted(held[0]) == list(range(p))
+    return _rotate_msgs(sched, root, p)
+
+
+def scatter_sched(algo: str, p: int, root: int = 0) -> Sched:
+    """Scatter = time-reversed gather: parent sends child's subtree blocks."""
+    g = gather_sched(algo, p, 0)
+    sched = [[Msg(m.dst, m.src, m.blocks) for m in step] for step in reversed(g)]
+    return _rotate_msgs(sched, root, p) if root else sched
+
+
+def _merge_mod_contig(a: List[int], b: List[int], p: int) -> List[int]:
+    """Merge two block lists, keeping mod-p contiguous order when possible."""
+    if (a[-1] + 1) % p == b[0] % p:
+        return a + b
+    if (b[-1] + 1) % p == a[0] % p:
+        return b + a
+    return a + b  # non-contiguous (bine_dd subtrees) — order by arrival
+
+
+def _rotate_msgs(sched: Sched, root: int, p: int) -> Sched:
+    if root % p == 0:
+        return sched
+    return [
+        [
+            Msg((m.src + root) % p, (m.dst + root) % p,
+                tuple((blk + root) % p for blk in m.blocks)
+                if m.blocks != (BLOCK_ALL,) else m.blocks)
+            for m in step
+        ]
+        for step in sched
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Reduce-scatter / Allgather: vector-halving/-doubling butterflies (Sec. 4.3)
+# ---------------------------------------------------------------------------
+
+def reduce_scatter_sched(algo: str, p: int) -> Sched:
+    """Vector-halving butterfly RS.  At step i, r sends the partial sums of
+    every block in its partner's next-level cone.
+
+    Result: rank r holds the full sum of block ``final_block(algo)[r]``
+    (identity block only after the Sec. 4.3.1 contiguity permutation).
+    """
+    s = log2_int(p)
+    tab = bf.partner_table(algo, p)
+    cs = bf.cones(algo, p)
+    sched: Sched = []
+    for i in range(s):
+        msgs: Step = []
+        for r in range(p):
+            q = int(tab[i, r])
+            msgs.append(Msg(r, q, tuple(sorted(cs[i + 1][q]))))
+        sched.append(msgs)
+    return sched
+
+
+def allgather_sched(algo: str, p: int) -> Sched:
+    """Vector-doubling butterfly AG: r sends every block it has accumulated."""
+    s = log2_int(p)
+    tab = bf.partner_table(algo, p)
+    held: List[List[int]] = [[r] for r in range(p)]
+    sched: Sched = []
+    for i in range(s):
+        msgs: Step = []
+        snapshot = [list(x) for x in held]
+        for r in range(p):
+            q = int(tab[i, r])
+            assert not set(snapshot[r]) & set(snapshot[q]), (
+                algo, p, i, r, "allgather exchange would duplicate blocks")
+            msgs.append(Msg(r, q, tuple(snapshot[r])))
+        for r in range(p):
+            held[r] = snapshot[r] + snapshot[int(tab[i, r])]
+        sched.append(msgs)
+    for r in range(p):
+        assert sorted(held[r]) == list(range(p))
+    return sched
+
+
+def allreduce_large_sched(algo_rs: str, algo_ag: str, p: int) -> Sched:
+    """Large-vector allreduce = RS (distance-doubling) + AG (distance-halving).
+
+    Block bookkeeping: the AG must redistribute exactly the blocks the RS
+    left behind, so its per-step block sets are the RS cones replayed
+    forward.  (paper Sec. 4.4)
+    """
+    # Block-exact view: the RS leaves rank r holding the full sum of block r
+    # (message *contents* may be non-contiguous in buffer space — that is the
+    # Sec. 4.3.1 permutation's job, handled positionally in collectives.shmap).
+    return reduce_scatter_sched(algo_rs, p) + allgather_sched(algo_ag, p)
+
+
+def allreduce_small_sched(algo: str, p: int) -> Sched:
+    """Small-vector allreduce: recursive doubling, full vector each step."""
+    s = log2_int(p)
+    tab = bf.partner_table(algo, p)
+    return [
+        [Msg(r, int(tab[i, r]), (BLOCK_ALL,)) for r in range(p)]
+        for i in range(s)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Alltoall: butterfly-routed (Bruck-like, paper Sec. 4.4)
+# ---------------------------------------------------------------------------
+
+def alltoall_sched(algo: str, p: int) -> Sched:
+    """Each rank starts with p blocks (one per destination).  At step i it
+    forwards to its partner every block whose *destination* lies in the
+    partner's next-level cone.  Every block reaches its destination after
+    s steps; each step moves exactly p/2 blocks per rank (n/2 bytes).
+    """
+    s = log2_int(p)
+    tab = bf.partner_table(algo, p)
+    cs = bf.cones(algo, p)
+    # held[r] = list of (dest, origin) pairs currently buffered at r
+    held: List[List[Tuple[int, int]]] = [
+        [(d, r) for d in range(p)] for r in range(p)
+    ]
+    sched: Sched = []
+    for i in range(s):
+        msgs: Step = []
+        moved: List[List[Tuple[int, int]]] = [[] for _ in range(p)]
+        kept: List[List[Tuple[int, int]]] = [[] for _ in range(p)]
+        for r in range(p):
+            q = int(tab[i, r])
+            qcone = cs[i + 1][q]
+            send = [x for x in held[r] if x[0] in qcone]
+            keep = [x for x in held[r] if x[0] not in qcone]
+            # encode (dest, origin) pairs as dest*p + origin (uniform n/p size)
+            msgs.append(Msg(r, q, tuple(d * p + o for d, o in send)))
+            moved[q].extend(send)
+            kept[r] = keep
+        for r in range(p):
+            held[r] = kept[r] + moved[r]
+        sched.append(msgs)
+    for r in range(p):
+        assert sorted(d for d, _ in held[r]) == [r] * p
+        assert sorted(o for _, o in held[r]) == list(range(p))
+    return sched
+
+
+def bruck_alltoall_sched(p: int) -> Sched:
+    """Classical Bruck alltoall baseline: step i sends, to rank r - 2**i,
+    every block whose relative destination distance has bit i set."""
+    s = log2_int(p)
+    held: List[List[Tuple[int, int]]] = [
+        [(d, r) for d in range(p)] for r in range(p)
+    ]
+    sched: Sched = []
+    for i in range(s):
+        msgs: Step = []
+        moved: List[List[Tuple[int, int]]] = [[] for _ in range(p)]
+        kept: List[List[Tuple[int, int]]] = [[] for _ in range(p)]
+        for r in range(p):
+            q = (r - (1 << i)) % p
+            send = [x for x in held[r] if ((x[0] - r) % p) >> i & 1]
+            keep = [x for x in held[r] if not ((x[0] - r) % p) >> i & 1]
+            msgs.append(Msg(r, q, tuple(d * p + o for d, o in send)))
+            moved[q].extend(send)
+            kept[r] = keep
+        for r in range(p):
+            held[r] = kept[r] + moved[r]
+        sched.append(msgs)
+    for r in range(p):
+        assert sorted(d for d, _ in held[r]) == [r] * p
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Ring baselines
+# ---------------------------------------------------------------------------
+
+def ring_reduce_scatter_sched(p: int) -> Sched:
+    """p-1 steps; step t: rank r sends partial block (r-t-1) mod p to r+1.
+
+    Block b hops b+1 → b+2 → … → b, accumulating every contribution, so
+    rank r ends holding the full sum of its own block r.
+    """
+    sched: Sched = []
+    for t in range(p - 1):
+        sched.append([Msg(r, (r + 1) % p, ((r - t - 1) % p,)) for r in range(p)])
+    return sched
+
+
+def ring_allgather_sched(p: int) -> Sched:
+    sched: Sched = []
+    for t in range(p - 1):
+        sched.append([Msg(r, (r + 1) % p, ((r - t) % p,)) for r in range(p)])
+    return sched
+
+
+def ring_allreduce_sched(p: int) -> Sched:
+    """Ring RS + ring AG (2(p-1) steps)."""
+    return ring_reduce_scatter_sched(p) + ring_allgather_sched(p)
+
+
+# ---------------------------------------------------------------------------
+# Composite large-vector bcast / reduce (paper Sec. 4.5)
+# ---------------------------------------------------------------------------
+
+def broadcast_large_sched(family: str, p: int, root: int = 0) -> Sched:
+    """scatter (distance-doubling tree) + allgather (distance-halving bfly)."""
+    if family == "bine":
+        sc = scatter_sched("bine_dd", p, root)
+        ag = allgather_sched("bine_dh", p)
+    else:
+        sc = scatter_sched("binomial_dh", p, root)   # MPICH-style
+        ag = allgather_sched("recdoub_dd", p)
+    return sc + ag
+
+
+def reduce_large_sched(family: str, p: int, root: int = 0) -> Sched:
+    """reduce-scatter (distance-doubling bfly) + gather (dist-halving tree)."""
+    if family == "bine":
+        rs = reduce_scatter_sched("bine_dd", p)
+        ga = gather_sched("bine_dh", p, root)
+    else:
+        rs = reduce_scatter_sched("recdoub_dd", p)
+        ga = gather_sched("binomial_dh", p, root)
+    return rs + ga
+
+
+# ---------------------------------------------------------------------------
+# Registry: collective -> {algorithm-name -> schedule builder}
+# ---------------------------------------------------------------------------
+
+def get_schedule(collective: str, algo: str, p: int, root: int = 0) -> Sched:
+    """Uniform accessor used by the simulator / traffic model / benchmarks."""
+    C = {
+        "broadcast": {
+            "bine": lambda: broadcast_sched("bine_dh", p, root),
+            "binomial_dh": lambda: broadcast_sched("binomial_dh", p, root),
+            "binomial_dd": lambda: broadcast_sched("binomial_dd", p, root),
+            "bine_large": lambda: broadcast_large_sched("bine", p, root),
+            "binomial_large": lambda: broadcast_large_sched("binomial", p, root),
+        },
+        "reduce": {
+            "bine": lambda: reduce_sched("bine_dh", p, root),
+            "binomial_dh": lambda: reduce_sched("binomial_dh", p, root),
+            "binomial_dd": lambda: reduce_sched("binomial_dd", p, root),
+            "bine_large": lambda: reduce_large_sched("bine", p, root),
+            "binomial_large": lambda: reduce_large_sched("binomial", p, root),
+        },
+        "gather": {
+            "bine": lambda: gather_sched("bine_dh", p, root),
+            "binomial": lambda: gather_sched("binomial_dh", p, root),
+        },
+        "scatter": {
+            # standalone scatter reverses the dh gather (Sec. 4.2); the
+            # dd variant exists for the composite large-vector broadcast
+            "bine": lambda: scatter_sched("bine_dh", p, root),
+            "bine_dd": lambda: scatter_sched("bine_dd", p, root),
+            "binomial": lambda: scatter_sched("binomial_dh", p, root),
+        },
+        "reduce_scatter": {
+            "bine": lambda: reduce_scatter_sched("bine_dd", p),
+            "recdoub": lambda: reduce_scatter_sched("recdoub_dd", p),
+            "ring": lambda: ring_reduce_scatter_sched(p),
+        },
+        "allgather": {
+            "bine": lambda: allgather_sched("bine_dh", p),
+            "recdoub": lambda: allgather_sched("recdoub_dh", p),
+            "ring": lambda: ring_allgather_sched(p),
+        },
+        "allreduce": {
+            "bine": lambda: allreduce_large_sched("bine_dd", "bine_dh", p),
+            "bine_small": lambda: allreduce_small_sched("bine_dh", p),
+            "recdoub": lambda: allreduce_large_sched("recdoub_dd", "recdoub_dh", p),
+            "recdoub_small": lambda: allreduce_small_sched("recdoub_dh", p),
+            "ring": lambda: ring_allreduce_sched(p),
+        },
+        "alltoall": {
+            # alltoall routing needs the future-cone partition → DD kinds.
+            # (every step carries n/2 regardless, so DH vs DD ordering does
+            # not change the per-step payload profile.)
+            "bine": lambda: alltoall_sched("bine_dd", p),
+            "bruck": lambda: bruck_alltoall_sched(p),
+            "recdoub": lambda: alltoall_sched("recdoub_dd", p),
+        },
+    }
+    return C[collective][algo]()
+
+
+COLLECTIVES = (
+    "allreduce", "allgather", "reduce_scatter", "alltoall",
+    "broadcast", "reduce", "gather", "scatter",
+)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, window=None, causal: bool = True,
+                        scale=None):
+    """q: [B, nkv, g, Tq, hd]; k, v: [B, nkv, Tk, hd] -> like q.
+
+    Plain masked softmax attention in fp32 — the correctness oracle the
+    Pallas kernel is swept against.
+    """
+    B, nkv, g, Tq, hd = q.shape
+    Tk = k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bngqh,bnkh->bngqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    denom = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bngqk,bnkh->bngqh", p / denom, v.astype(jnp.float32))
+    return o.astype(q.dtype)

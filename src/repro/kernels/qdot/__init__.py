@@ -1,0 +1,2 @@
+from .ops import dequant_accumulate
+from .ref import dequant_accumulate_ref

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the dequantize-accumulate kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_accumulate_ref(q, scales, acc):
+    return acc + q.astype(jnp.float32) * scales.astype(jnp.float32)

@@ -1,0 +1,42 @@
+"""Fused RMSNorm Pallas kernel: one VMEM pass per row block.
+
+Rows are tiled (bn, d) into VMEM; mean-square, rsqrt and the (1+w) scale
+fuse into a single read-modify-write — on TPU this is one HBM round trip
+instead of the 3+ of the unfused jnp composition (read x for the square
+reduction, read x again for the scale, write y).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = (y * (1.0 + w)[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm_kernel(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+                   interpret: bool = True):
+    """x: [N, d]; w: [d] -> [N, d]."""
+    N, d = x.shape
+    bn = min(block_rows, N)
+    assert N % bn == 0, (N, bn)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

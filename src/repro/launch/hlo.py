@@ -1,0 +1,636 @@
+"""HLO analysis: multiplicity-aware FLOP / byte / collective accounting.
+
+``compiled.cost_analysis()`` counts ``while`` (lax.scan) bodies exactly
+ONCE — a layer-scanned transformer under-reports FLOPs by ~n_layers and,
+worse, GSPMD-inserted model-axis collectives inside the layer scan vanish
+from naive collective-byte sums.  This module re-derives the roofline
+terms by parsing ``compiled.as_text()`` with the call graph made explicit:
+
+  * while ops carry ``backend_config={"known_trip_count":{"n":"K"}}`` —
+    body (and condition) costs are multiplied by K, nested loops multiply;
+  * FLOPs: every ``dot`` (2·|result|·|contracted|) anywhere in the module,
+    weighted by its computation's multiplicity (elementwise FLOPs are
+    ignored — transformer compute is dot-dominated);
+  * bytes: per executed op, operands + result (the cost-analysis
+    convention), with fusions counted as single units (their internals
+    never touch HBM).  Pure-convert fusions count zero: the CPU backend
+    wraps every bf16 dot in f32 converts that do not exist on the TPU
+    target (normalization documented in EXPERIMENTS.md);
+  * collectives: kind, payload bytes, source_target_pairs / replica_groups,
+    times multiplicity — split into intra-pod (ICI) and inter-pod (DCN
+    "global links", the paper's metric).
+
+TPU v5e per-chip constants for the roofline denominators.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# --- TPU v5e per-chip constants (assignment-specified) ---
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (intra-pod)
+DCN_BW = 25e9                # B/s per chip across pods (global links)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+
+
+def _shape_list(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(s: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(s):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_sig: str             # "f32[128,512]" or "(s32[], bf16[...])"
+    operands: List[str]
+    line: str
+    is_root: bool = False
+
+    @property
+    def result_bytes(self) -> int:
+        return _bytes_of(self.result_sig)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> sig
+    is_fusion_body: bool = False
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)\((.*)$")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_CALLS_MULTI = re.compile(r"(?:branch_computations|called_computations)=\{([^}]*)\}")
+_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_WHILE_ATTR = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count\D+(\d+)')
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\[\[.*?\]\])")
+# XLA iota form: replica_groups=[G,S]<=[d0,d1,...]T(p0,p1,...)
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+#: ops that move no HBM bytes
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "add-dependency", "iota", "partition-id",
+             "replica-id"}
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and "(" in stripped and "=" not in \
+                stripped.split("(", 1)[0]:
+            m = _COMP_HEAD.match(stripped)
+            if m:
+                cur = Computation(name=m.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        om = _OP_LINE.match(line)
+        if not om:
+            continue
+        name, sig, kind, rest = om.groups()
+        ops_str = rest.split(")", 1)[0] if ")" in rest else rest
+        operands = _OPERAND.findall(ops_str)
+        op = Op(name=name, kind=kind, result_sig=sig, operands=operands,
+                line=line, is_root="ROOT" in line.split("%")[0])
+        cur.ops.append(op)
+        cur.symbols[name] = sig
+    # mark fusion bodies (computations referenced by calls= on fusion ops)
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind == "fusion":
+                cm = _CALLS.search(op.line)
+                if cm and cm.group(1) in comps:
+                    comps[cm.group(1)].is_fusion_body = True
+    return comps
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    m = _TRIP.search(op.line)
+    if m:
+        return int(m.group(1))
+    wm = _WHILE_ATTR.search(op.line)
+    if wm and wm.group(1) in comps:
+        consts = [int(x) for x in _CONST_S32.findall(
+            "\n".join(o.line for o in comps[wm.group(1)].ops))]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def compute_multiplicities(comps: Dict[str, Computation],
+                           entry: str) -> Dict[str, float]:
+    """multiplier[comp] = how many times it executes per step."""
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    if entry not in comps:
+        return mult
+    mult[entry] = 1.0
+    for _ in range(64):  # fixed point over the (acyclic) call graph
+        changed = False
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for op in comp.ops:
+                targets: List[Tuple[str, float]] = []
+                if op.kind == "while":
+                    wm = _WHILE_ATTR.search(op.line)
+                    if wm:
+                        k = float(_trip_count(op, comps))
+                        targets += [(wm.group(1), k), (wm.group(2), k)]
+                elif op.kind in ("fusion", "call", "async-start"):
+                    cm = _CALLS.search(op.line)
+                    if cm:
+                        targets.append((cm.group(1), 1.0))
+                elif op.kind == "conditional":
+                    bm = _CALLS_MULTI.search(op.line)
+                    if bm:
+                        for t in _OPERAND.findall(bm.group(1)):
+                            targets.append((t, 1.0))
+                else:
+                    tm = _TO_APPLY.search(op.line)
+                    if tm:
+                        targets.append((tm.group(1), 1.0))
+                for t, k in targets:
+                    if t in mult:
+                        new = m * k
+                        if new > mult[t]:
+                            mult[t] = new
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+# ---------------------------------------------------------------------------
+# FLOPs
+# ---------------------------------------------------------------------------
+
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def dot_flops(op: Op, comp: Computation) -> float:
+    """2 · |result| · |contracted| from the result shape and lhs dims."""
+    res = _shape_list(op.result_sig)
+    if not res:
+        return 0.0
+    _, rshape = res[0]
+    n_res = 1
+    for d in rshape:
+        n_res *= d
+    lm = _LHS_CONTRACT.search(op.line)
+    if not lm or not op.operands:
+        return 0.0
+    lhs_sig = comp.symbols.get(op.operands[0])
+    if lhs_sig is None:
+        return 0.0
+    ls = _shape_list(lhs_sig)
+    if not ls:
+        return 0.0
+    _, lshape = ls[0]
+    contracted = 1
+    dims = lm.group(1)
+    if dims:
+        for d in dims.split(","):
+            contracted *= lshape[int(d)]
+    return 2.0 * n_res * contracted
+
+
+def module_flops(comps: Dict[str, Computation],
+                 mult: Dict[str, float]) -> float:
+    total = 0.0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind == "dot":
+                total += m * dot_flops(op, comp)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Bytes (memory traffic)
+# ---------------------------------------------------------------------------
+
+def _is_convert_only(comp: Computation) -> bool:
+    kinds = {o.kind for o in comp.ops}
+    return kinds <= {"parameter", "convert", "copy", "bitcast", "constant",
+                     "get-tuple-element", "tuple", "broadcast", "reshape",
+                     "transpose"} and "convert" in kinds
+
+
+_PARAM_IDX = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  comps: Dict[str, Computation]) -> float:
+    """Bytes accessed by one fusion, XLA-cost-analysis style.
+
+    XLA widens loop carries ("wide." buffers stacking all iterations) and
+    fuses dynamic-slice reads / dynamic-update-slice writes over them; the
+    real traffic is the slice, not the buffer:
+      * result: if the fusion root is a dynamic-update-slice, charge the
+        update operand's size;
+      * operands: a parameter consumed only by dynamic-slice ops charges
+        the slice result sizes; a parameter that is the in-place target
+        (operand 0) of a dynamic-update-slice charges nothing (the buffer
+        aliases through); anything else charges its full size.
+    """
+    cm = _CALLS.search(op.line)
+    called = comps.get(cm.group(1)) if cm else None
+    if called is None:
+        b = op.result_bytes
+        for o in op.operands:
+            sig = comp.symbols.get(o)
+            if sig is not None:
+                b += _bytes_of(sig)
+        return b
+    # map parameter index -> param op name
+    param_name = {}
+    for o in called.ops:
+        if o.kind == "parameter":
+            pm = _PARAM_IDX.search(o.line)
+            if pm:
+                param_name[int(pm.group(1))] = o.name
+    root = next((o for o in called.ops if o.is_root), None)
+    # result charge
+    if root is not None and root.kind == "dynamic-update-slice" and \
+            len(root.operands) >= 2:
+        upd_sig = called.symbols.get(root.operands[1])
+        res = _bytes_of(upd_sig) if upd_sig else op.result_bytes
+    elif root is not None and root.kind == "tuple":
+        res = 0
+        for o in root.operands:
+            # tuple element produced by DUS -> charge the update
+            prod = next((q for q in called.ops if q.name == o), None)
+            if prod is not None and prod.kind == "dynamic-update-slice" \
+                    and len(prod.operands) >= 2:
+                us = called.symbols.get(prod.operands[1])
+                res += _bytes_of(us) if us else prod.result_bytes
+            else:
+                sig = called.symbols.get(o)
+                res += _bytes_of(sig) if sig else 0
+    else:
+        res = op.result_bytes
+    # operand charges
+    total = float(res)
+    for i, o in enumerate(op.operands):
+        sig = comp.symbols.get(o)
+        if sig is None:
+            continue
+        full = _bytes_of(sig)
+        pname = param_name.get(i)
+        if pname is None:
+            total += full
+            continue
+        uses = [q for q in called.ops if pname in q.operands]
+        if uses and all(
+                (q.kind == "dynamic-slice" and q.operands
+                 and q.operands[0] == pname)
+                or (q.kind == "dynamic-update-slice" and q.operands
+                    and q.operands[0] == pname)
+                for q in uses):
+            charged = 0
+            for q in uses:
+                if q.kind == "dynamic-slice":
+                    charged += q.result_bytes
+                # DUS target: aliases through, no read charge
+            total += min(charged, full)
+        else:
+            total += full
+    return total
+
+
+def module_bytes(comps: Dict[str, Computation],
+                 mult: Dict[str, float]) -> float:
+    total = 0.0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or comp.is_fusion_body:
+            continue
+        for op in comp.ops:
+            if op.kind in _FREE_OPS or op.kind == "while":
+                continue
+            if op.kind == "fusion":
+                cm = _CALLS.search(op.line)
+                if cm and cm.group(1) in comps and _is_convert_only(
+                        comps[cm.group(1)]):
+                    continue  # CPU bf16<->f32 shims: absent on TPU
+                total += m * _fusion_bytes(op, comp, comps)
+                continue
+            if op.kind == "dynamic-slice":
+                total += m * 2.0 * op.result_bytes      # read + write slice
+                continue
+            if op.kind == "dynamic-update-slice" and len(op.operands) >= 2:
+                us = comp.symbols.get(op.operands[1])
+                ub = _bytes_of(us) if us else op.result_bytes
+                total += m * 2.0 * ub                    # read + write update
+                continue
+            b = op.result_bytes
+            for o in op.operands:
+                sig = comp.symbols.get(o)
+                if sig is not None:
+                    b += _bytes_of(sig)
+            total += m * b
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Collectives
+# ---------------------------------------------------------------------------
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    mult: float = 1.0
+    pairs: List[Tuple[int, int]] = field(default_factory=list)
+    groups: List[List[int]] = field(default_factory=list)
+
+    def _group_size(self, n_chips: int) -> int:
+        if self.groups:
+            return max(1, len(self.groups[0]))
+        return n_chips
+
+    def wire_bytes_per_chip(self, n_chips: int) -> float:
+        """Bytes each participating chip puts on the wire, per execution
+        (×mult).  collective-permute: each listed source sends the payload,
+        averaged over chips.  all-reduce: 2(g-1)/g·n.  all-gather:
+        (g-1)/g·result.  reduce-scatter: (g-1)·result (operand = g·result).
+        all-to-all: (g-1)/g·n."""
+        g = self._group_size(n_chips)
+        b = self.result_bytes
+        if self.kind == "collective-permute":
+            frac = len(self.pairs) / n_chips if self.pairs else 1.0
+            w = b * frac
+        elif self.kind == "all-reduce":
+            w = 2.0 * b * (g - 1) / g
+        elif self.kind == "all-gather":
+            w = b * (g - 1) / g
+        elif self.kind == "reduce-scatter":
+            w = b * (g - 1)
+        elif self.kind == "all-to-all":
+            w = b * (g - 1) / g
+        else:
+            w = b
+        return w * self.mult
+
+    def global_wire_bytes_per_chip(self, n_chips: int, pod: int) -> float:
+        """Subset crossing pod boundaries (DCN global links)."""
+        if pod >= n_chips:
+            return 0.0
+        if self.kind == "collective-permute":
+            cross = sum(1 for s, d in self.pairs if s // pod != d // pod)
+            return self.result_bytes * cross / n_chips * self.mult
+        g = self._group_size(n_chips)
+        groups = self.groups or [list(range(n_chips))]
+        total = 0.0
+        for grp in groups:
+            pods = {r // pod for r in grp}
+            k = len(pods)
+            if k <= 1:
+                continue
+            b = self.result_bytes
+            if self.kind == "all-reduce":
+                per = 2.0 * b * (k - 1) / k
+            elif self.kind == "all-gather":
+                per = b * (k - 1) / k
+            elif self.kind == "reduce-scatter":
+                per = b * g * (k - 1) / k / max(g, 1)
+            elif self.kind == "all-to-all":
+                per = b * (k - 1) / k
+            else:
+                per = b
+            total += per * len(grp)
+        return total / n_chips * self.mult
+
+
+def _iota_groups(m) -> List[List[int]]:
+    """Expand XLA's iota replica-group form into explicit member lists."""
+    import numpy as _np
+    G, S = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    arr = _np.arange(int(_np.prod(dims))).reshape(dims)
+    if m.group(4):
+        perm = [int(x) for x in m.group(4).split(",")]
+        arr = arr.transpose(perm)
+    return arr.reshape(G, S).tolist()
+
+
+def module_collectives(comps: Dict[str, Computation],
+                       mult: Dict[str, float]) -> List[CollectiveOp]:
+    out: List[CollectiveOp] = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            kind = op.kind
+            if kind.endswith("-done"):
+                continue
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base not in _COLL_KINDS:
+                continue
+            if kind.endswith("-start"):
+                sig = comp.symbols.get(op.operands[0]) if op.operands else None
+                rbytes = _bytes_of(sig) if sig else op.result_bytes // 2
+            else:
+                rbytes = op.result_bytes
+            c = CollectiveOp(kind=base, result_bytes=rbytes, mult=m)
+            pm = _PAIRS_RE.search(op.line)
+            if pm:
+                nums = re.findall(r"\{(\d+),(\d+)\}", "{" + pm.group(1) + "}")
+                c.pairs = [(int(a), int(b)) for a, b in nums]
+            gm = _GROUPS_RE.search(op.line)
+            if gm:
+                body = gm.group(1)
+                c.groups = [
+                    [int(x) for x in re.findall(r"\d+", grp)]
+                    for grp in re.findall(r"[\{\[]([\d,\s]+)[\}\]]", body[1:-1])
+                ]
+            else:
+                im = _IOTA_GROUPS_RE.search(op.line)
+                if im:
+                    c.groups = _iota_groups(im)
+            out.append(c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Roofline:
+    n_chips: int
+    pod_size: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    global_bytes_per_chip: float
+    coll_op_counts: Dict[str, float]
+    raw_cost_flops: float = 0.0
+    raw_cost_bytes: float = 0.0
+
+    @property
+    def hlo_flops(self) -> float:
+        """Whole-job FLOPs (per-chip × chips)."""
+        return self.flops_per_chip * self.n_chips
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        ici = (self.coll_bytes_per_chip - self.global_bytes_per_chip) / ICI_BW
+        dcn = self.global_bytes_per_chip / DCN_BW
+        return ici + dcn
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "global_bytes_per_chip": self.global_bytes_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "coll_op_counts": self.coll_op_counts,
+            "raw_cost_flops": self.raw_cost_flops,
+            "raw_cost_bytes": self.raw_cost_bytes,
+        }
+
+
+def analyze_text(text: str, n_chips: int, pod_size: int) -> Roofline:
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    mult = compute_multiplicities(comps, entry)
+    flops = module_flops(comps, mult)
+    mem = module_bytes(comps, mult)
+    colls = module_collectives(comps, mult)
+    coll = sum(c.wire_bytes_per_chip(n_chips) for c in colls)
+    glob = sum(c.global_wire_bytes_per_chip(n_chips, pod_size) for c in colls)
+    counts: Dict[str, float] = {}
+    for c in colls:
+        counts[c.kind] = counts.get(c.kind, 0.0) + c.mult
+    return Roofline(
+        n_chips=n_chips, pod_size=pod_size,
+        flops_per_chip=flops, hbm_bytes_per_chip=mem,
+        coll_bytes_per_chip=coll, global_bytes_per_chip=glob,
+        coll_op_counts=counts)
+
+
+def explain(text: str, top: int = 25):
+    """Top byte/flop contributors: (computation, op kind, result sig, total)."""
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    mult = compute_multiplicities(comps, entry)
+    rows_b, rows_f = [], []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind == "dot":
+                rows_f.append((m * dot_flops(op, comp), cname, op.kind,
+                               op.result_sig, m))
+            if comp.is_fusion_body or op.kind in _FREE_OPS or \
+                    op.kind == "while":
+                continue
+            if op.kind == "fusion":
+                cm = _CALLS.search(op.line)
+                if cm and cm.group(1) in comps and _is_convert_only(
+                        comps[cm.group(1)]):
+                    continue
+                rows_b.append((m * _fusion_bytes(op, comp, comps), cname,
+                               op.kind, op.result_sig, m))
+                continue
+            b = op.result_bytes
+            for o in op.operands:
+                sig = comp.symbols.get(o)
+                if sig is not None:
+                    b += _bytes_of(sig)
+            rows_b.append((m * b, cname, op.kind, op.result_sig, m))
+    rows_b.sort(reverse=True)
+    rows_f.sort(reverse=True)
+    return rows_b[:top], rows_f[:top]
+
+
+def roofline_from_compiled(compiled, n_chips: int, pod_size: int) -> Roofline:
+    roof = analyze_text(compiled.as_text(), n_chips, pod_size)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        roof.raw_cost_flops = float(ca.get("flops", 0.0))
+        roof.raw_cost_bytes = float(ca.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+    return roof

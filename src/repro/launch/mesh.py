@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import, and everything else must keep seeing the real device count.
+
+Axis semantics:
+  * "pod"   — TPU pods connected by DCN (the paper's "global links");
+  * "data"  — data parallelism within a pod (ICI);
+  * "model" — tensor parallelism within a pod (ICI).
+
+The flattened ("pod","data") gradient axis is pod-major, so rank id
+distance approximates pod locality — the block-placement assumption under
+which Bine trees cut global-link traffic (paper Sec. 2.2).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def pod_size(mesh) -> int:
+    """Chips per pod (= everything under the 'pod' axis)."""
+    total = mesh.size
+    npods = mesh.shape.get("pod", 1) if hasattr(mesh.shape, "get") else (
+        dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1))
+    return total // npods

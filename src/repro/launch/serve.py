@@ -1,0 +1,92 @@
+"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+
+  python -m repro.launch.serve --arch gemma3-4b --reduced --mesh 2,4 \\
+      --batch 4 --prompt-len 64 --decode-tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.models import transformer as T
+from repro.serve.engine import ServeConfig, make_serve_fns
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-tokens", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = cfgbase.get_config(args.arch)
+    if args.reduced:
+        cfg = cfgbase.reduced(cfg)
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("pod", "data", "model")[-len(shape):]
+    else:
+        shape, axes = (n_dev, 1), ("data", "model")
+    mesh = jax.make_mesh(shape, axes)
+    dp_axes = tuple(a for a in axes if a in ("pod", "data"))
+
+    scfg = ServeConfig(dp_axes=dp_axes)
+    S = args.prompt_len + args.decode_tokens
+    prefill_fn, decode_fn, shardings = make_serve_fns(
+        cfg, scfg, mesh, args.batch, S)
+
+    key = jax.random.key(args.seed)
+    params = jax.jit(lambda k: T.init_params(k, cfg))(key)
+    rng = np.random.RandomState(args.seed)
+    if cfg.frontend:
+        prompt = jnp.asarray(rng.randn(args.batch, args.prompt_len,
+                                       cfg.frontend_dim), jnp.float32)
+    else:
+        prompt = jnp.asarray(rng.randint(
+            0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
+
+    with jax.set_mesh(mesh):
+        t0 = time.time()
+        logits, state = prefill_fn(params, prompt)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+        print(f"[serve] prefill {args.batch}x{args.prompt_len}: "
+              f"{t_prefill*1e3:.0f}ms")
+
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs = [np.asarray(toks)]
+        t0 = time.time()
+        for i in range(args.decode_tokens - 1):
+            if cfg.frontend:
+                # audio/vlm stubs decode over token ids mapped through the
+                # (stub) frame embedding — use random frames for the demo
+                step_in = jnp.asarray(
+                    rng.randn(args.batch, 1, cfg.frontend_dim), jnp.float32)
+            else:
+                step_in = toks
+            logits, state = decode_fn(params, state, step_in)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            outs.append(np.asarray(toks))
+        jax.block_until_ready(logits)
+        t_dec = time.time() - t0
+        n = args.decode_tokens - 1
+        print(f"[serve] decode {n} steps: {t_dec*1e3:.0f}ms "
+              f"({args.batch * max(n,1) / max(t_dec, 1e-9):.1f} tok/s)")
+        gen = np.concatenate(outs, axis=1)
+        print("[serve] sample token ids:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,356 @@
+"""State-space & recurrent layers: Mamba2 (SSD, chunked) and xLSTM blocks.
+
+All recurrences use chunkwise-parallel forms so training lowers to
+scan-over-chunks (bounded activations, TPU-friendly matmuls):
+  * Mamba2: SSD chunked algorithm (arXiv:2405.21060) — intra-chunk
+    quadratic attention-like term + inter-chunk state carry.
+  * mLSTM: chunkwise linear attention with exponential gating and running
+    max stabilizer (arXiv:2405.04517).
+  * sLSTM: scalar-memory recurrence; inherently sequential -> time scan
+    (small [B,d] state), chunk-level remat.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense, init_dense, rmsnorm, init_rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg) -> dict:
+    """Projections are SPLIT (z/x/B/C/dt instead of one in_proj) so channel
+    tensor-parallelism shards d_inner cleanly: z/x column-shard over the
+    model axis; B/C/dt (state projections shared across channels) and the
+    tiny B/C convs replicate.  A_log/D/dt_bias shard over heads."""
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head_dim
+    ds = cfg.ssm_state
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "m_z": init_dense(ks[0], d, din, dt),
+        "m_x": init_dense(ks[1], d, din, dt),
+        "m_B": init_dense(ks[2], d, ds, dt),
+        "m_C": init_dense(ks[3], d, ds, dt),
+        "m_dt": init_dense(ks[4], d, nh, dt),
+        "conv_x": (jax.random.normal(ks[5], (cfg.ssm_conv, din),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_B": (jax.random.normal(ks[6], (cfg.ssm_conv, ds),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_C": (jax.random.normal(ks[7], (cfg.ssm_conv, ds),
+                                     jnp.float32) * 0.2).astype(dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_rmsnorm(din, dt),
+        "out_proj": init_dense(jax.random.fold_in(key, 9), din, d, dt),
+    }
+
+
+def _causal_conv(x, w):
+    """x: [B,T,C], w: [K,C] depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + pad[:, k:k + x.shape[1], :] * w[k][None, None, :]
+    return out
+
+
+def mamba2(p, cfg, x, state=None, return_state: bool = False):
+    """SSD forward.  x: [B,T,d].
+
+    state (decode): dict(conv [B,K-1,C], ssm [B,nh,hd,dstate]) or None.
+    Chunked scan over T for training; single-step recurrence for decode."""
+    B, T, d = x.shape
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    ds = cfg.ssm_state
+
+    z = dense(x, p["m_z"])                       # [B,T,din]
+    xr = dense(x, p["m_x"])                      # [B,T,din]
+    Br = dense(x, p["m_B"])                      # [B,T,ds]
+    Cr = dense(x, p["m_C"])                      # [B,T,ds]
+    dt_raw = dense(x, p["m_dt"])                 # [B,T,nh]
+
+    if state is None:
+        conv_x_in, conv_B_in, conv_C_in = xr, Br, Cr
+        xr = _causal_conv(xr, p["conv_x"])
+        Br = _causal_conv(Br, p["conv_B"])
+        Cr = _causal_conv(Cr, p["conv_C"])
+        K1 = cfg.ssm_conv - 1
+        new_conv = ({"x": conv_x_in[:, T - K1:], "B": conv_B_in[:, T - K1:],
+                     "C": conv_C_in[:, T - K1:]} if return_state else None)
+    else:
+        # decode: T == 1; per-stream conv state
+        cs = state["conv"]
+        hx = jnp.concatenate([cs["x"], xr], axis=1)          # [B,K,din]
+        hB = jnp.concatenate([cs["B"], Br], axis=1)
+        hC = jnp.concatenate([cs["C"], Cr], axis=1)
+        xr = jnp.einsum("bkc,kc->bc", hx, p["conv_x"])[:, None, :]
+        Br = jnp.einsum("bkc,kc->bc", hB, p["conv_B"])[:, None, :]
+        Cr = jnp.einsum("bkc,kc->bc", hC, p["conv_C"])[:, None, :]
+        new_conv = {"x": hx[:, 1:], "B": hB[:, 1:], "C": hC[:, 1:]}
+    from . import sharding as _sh
+    xs = jax.nn.silu(xr).reshape(B, T, nh, hd)
+    if state is None and nh % max(1, _sh.model_parallel()) == 0:
+        xs = _sh.shard(xs, None, None, _sh.MODEL_AXIS, None)  # channel TP
+    Bm = jax.nn.silu(Br)                          # [B,T,ds]
+    Cm = jax.nn.silu(Cr)                          # [B,T,ds]
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + p["dt_bias"][None, None, :])     # [B,T,nh]
+    A = -jnp.exp(p["A_log"])                                   # [nh]
+    decay = dt_v * A[None, None, :]                            # log-decay per step
+
+    if state is not None:
+        # single-step: S' = exp(decay)·S + dt·B⊗x ; y = C·S' + D·x
+        S = state["ssm"]                                       # [B,nh,hd,ds]
+        g = jnp.exp(decay[:, 0, :])[:, :, None, None]
+        upd = (dt_v[:, 0, :, None, None]
+               * xs[:, 0, :, :, None].astype(jnp.float32)
+               * Bm[:, 0, None, None, :].astype(jnp.float32))
+        S = S * g + upd
+        y = jnp.einsum("bhps,bs->bhp", S, Cm[:, 0].astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(B, 1, din).astype(x.dtype)
+        out = dense(rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps),
+                    p["out_proj"])
+        return out, {"conv": new_conv, "ssm": S}
+
+    # ---- chunked SSD ----
+    Q = min(cfg.ssm_chunk, T)
+    assert T % Q == 0
+    nQ = T // Q
+    xs_c = xs.reshape(B, nQ, Q, nh, hd)
+    B_c = Bm.reshape(B, nQ, Q, ds)
+    C_c = Cm.reshape(B, nQ, Q, ds)
+    dc = decay.reshape(B, nQ, Q, nh)              # log decays
+    dtc = dt_v.reshape(B, nQ, Q, nh)
+
+    cum = jnp.cumsum(dc, axis=2)                  # [B,nQ,Q,nh] inclusive
+    total = cum[:, :, -1:, :]                     # chunk total log decay
+
+    def chunk(S, inp):
+        xq, bq, cq, cumq, totq, dtq = inp         # per-chunk slices (scanned)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+        diff = cumq[:, :, None, :] - cumq[:, None, :, :]      # [B,Q,Q,nh]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        sc = jnp.einsum("bis,bjs->bij", cq.astype(jnp.float32),
+                        bq.astype(jnp.float32))               # [B,Q,Q]
+        W = sc[..., None] * L                                 # [B,Q,Q,nh]
+        xw = xq.astype(jnp.float32) * dtq[..., None]          # dt-weighted x
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xw)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bis,bhps,bih->bihp",
+                             cq.astype(jnp.float32), S, jnp.exp(cumq))
+        # state update: S' = exp(total)·S + Σ_j exp(total-cum_j)·dt_j·B_j⊗x_j
+        w_state = jnp.exp(totq - cumq)                        # [B,Q,nh]
+        S = S * jnp.exp(totq[:, 0])[:, :, None, None] + jnp.einsum(
+            "bjh,bjhp,bjs->bhps", w_state, xw, bq.astype(jnp.float32))
+        return S, y_intra + y_inter
+
+    S0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, nh, hd, ds), jnp.float32))
+    xs_s = jnp.moveaxis(xs_c, 1, 0)
+    inp = (xs_s, jnp.moveaxis(B_c, 1, 0), jnp.moveaxis(C_c, 1, 0),
+           jnp.moveaxis(cum, 1, 0), jnp.moveaxis(total, 1, 0),
+           jnp.moveaxis(dtc, 1, 0))
+    S_fin, ys = lax.scan(chunk, S0, inp)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, nh, hd)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, T, din).astype(x.dtype)
+    out = dense(rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps),
+                p["out_proj"])
+    if return_state:
+        return out, {"conv": new_conv, "ssm": S_fin}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (chunkwise) and sLSTM (time scan)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg) -> dict:
+    """mLSTM block, xLSTM-paper structure: up-projection by proj_factor=2,
+    per-head block-diagonal q/k/v inside the inner dim, gated output,
+    down-projection back to d.  (arXiv:2405.04517 Fig. 10)"""
+    d = cfg.d_model
+    di = 2 * d                           # proj_factor = 2
+    nh = cfg.n_heads
+    hd = di // nh
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    blk = 1.0 / math.sqrt(hd)
+    return {
+        "wup": init_dense(ks[0], d, di, dt),       # value branch up-proj
+        "wgate": init_dense(ks[1], d, di, dt),     # output-gate branch
+        # block-diagonal projections: [nh, hd, hd]
+        "wq": (jax.random.normal(ks[2], (nh, hd, hd), jnp.float32) * blk).astype(dt),
+        "wk": (jax.random.normal(ks[3], (nh, hd, hd), jnp.float32) * blk).astype(dt),
+        "wv": (jax.random.normal(ks[4], (nh, hd, hd), jnp.float32) * blk).astype(dt),
+        "wgi": init_dense(ks[5], di, nh, dt),      # input gate (pre-exp)
+        "wgf": init_dense(ks[6], di, nh, dt),      # forget gate
+        "norm": init_rmsnorm(di, dt),
+        "down": init_dense(ks[7], di, d, dt),
+    }
+
+
+def mlstm(p, cfg, x, state=None, return_state: bool = False):
+    """Chunkwise mLSTM: linear attention with exp-gating, log-space stable.
+
+    x: [B,T,d]; state: dict(C [B,nh,hd,hd], n [B,nh,hd], m [B,nh]) for decode.
+    Works in the 2x up-projected inner dim with block-diagonal q/k/v.
+    """
+    B, T, d = x.shape
+    u = dense(x, p["wup"])                                    # [B,T,di]
+    di = u.shape[-1]
+    nh = cfg.n_heads
+    hd = di // nh
+    uh = u.reshape(B, T, nh, hd)
+    q = jnp.einsum("btnh,nhg->btng", uh, p["wq"]) / math.sqrt(hd)
+    k = jnp.einsum("btnh,nhg->btng", uh, p["wk"])
+    v = jnp.einsum("btnh,nhg->btng", uh, p["wv"])
+    i_pre = dense(u, p["wgi"]).astype(jnp.float32)             # [B,T,nh]
+    f_pre = dense(u, p["wgf"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)                          # log forget
+
+    if state is not None:  # decode single step
+        C, n, m = state["C"], state["n"], state["m"]
+        m_new = jnp.maximum(logf[:, 0] + m, i_pre[:, 0])
+        fg = jnp.exp(logf[:, 0] + m - m_new)[:, :, None, None]
+        ig = jnp.exp(i_pre[:, 0] - m_new)[:, :, None, None]
+        kv = k[:, 0, :, :, None].astype(jnp.float32) \
+            * v[:, 0, :, None, :].astype(jnp.float32)
+        C = C * fg + ig * kv
+        n = n * fg[..., 0] + ig[..., 0] * k[:, 0].astype(jnp.float32)
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n))
+        y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        out = _mlstm_out(p, cfg, x, y)
+        return out, {"C": C, "n": n, "m": m_new}
+
+    Q = min(cfg.ssm_chunk, T)
+    assert T % Q == 0
+    nQ = T // Q
+    qs = jnp.moveaxis(q.reshape(B, nQ, Q, nh, hd), 1, 0)
+    ks_ = jnp.moveaxis(k.reshape(B, nQ, Q, nh, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nQ, Q, nh, hd), 1, 0)
+    is_ = jnp.moveaxis(i_pre.reshape(B, nQ, Q, nh), 1, 0)
+    fs = jnp.moveaxis(logf.reshape(B, nQ, Q, nh), 1, 0)
+
+    def chunk(carry, inp):
+        C, n, m = carry                     # [B,nh,hd,hd], [B,nh,hd], [B,nh]
+        qq, kk, vv, ii, ff = inp
+        cumf = jnp.cumsum(ff, axis=1)                          # [B,Q,nh]
+        totf = cumf[:, -1, :]
+        # log weights: intra a_ij = Σ_{l>j..i} f + i_j ; inter b_i = cumf_i + m
+        la = cumf[:, :, None, :] - cumf[:, None, :, :] + ii[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        la = jnp.where(tri, la, -jnp.inf)                      # [B,i,j,nh]
+        lb = cumf + m[:, None, :]                              # [B,i(nh)] inter
+        m_i = jnp.maximum(jnp.max(la, axis=2), lb)             # [B,Q,nh]
+        wa = jnp.exp(la - m_i[:, :, None, :])                  # intra weights
+        wb = jnp.exp(lb - m_i)                                 # inter weight
+        qf = qq.astype(jnp.float32)
+        sc = jnp.einsum("bihk,bjhk->bijh", qf, kk.astype(jnp.float32))
+        num = jnp.einsum("bijh,bijh,bjhv->bihv", sc, wa, vv.astype(jnp.float32))
+        num = num + wb[..., None] * jnp.einsum("bihk,bhkv->bihv", qf, C)
+        den = jnp.einsum("bijh,bijh->bih", sc, wa) \
+            + wb * jnp.einsum("bihk,bhk->bih", qf, n)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # carry update in max-stabilized space
+        m_new = jnp.maximum(totf + m, jnp.max(totf[:, None] - cumf + ii, axis=1))
+        wk = jnp.exp(totf[:, None] - cumf + ii - m_new[:, None])  # [B,Q,nh]
+        C = C * jnp.exp(totf + m - m_new)[:, :, None, None] + jnp.einsum(
+            "bjh,bjhk,bjhv->bhkv", wk, kk.astype(jnp.float32),
+            vv.astype(jnp.float32))
+        n = n * jnp.exp(totf + m - m_new)[:, :, None] + jnp.einsum(
+            "bjh,bjhk->bhk", wk, kk.astype(jnp.float32))
+        return (C, n, m_new), y
+
+    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    if state is not None:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    (C, n, m), ys = lax.scan(chunk, (C0, n0, m0), (qs, ks_, vs, is_, fs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, di).astype(x.dtype)
+    out = _mlstm_out(p, cfg, x, y)
+    if return_state:
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def _mlstm_out(p, cfg, x, y):
+    """Gated output + down-projection: y in the inner (2x) dim -> d."""
+    og = jax.nn.sigmoid(dense(x, p["wgate"]))
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * og
+    return dense(y, p["down"])
+
+
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 9)
+    p = {}
+    for name, kk in zip(["wi", "wf", "wz", "wo"], ks[:4]):
+        p[name] = init_dense(kk, d, d, dt)
+    for name, kk in zip(["ri", "rf", "rz", "ro"], ks[4:8]):
+        p[name] = (jax.random.normal(kk, (d,), jnp.float32) * 0.1).astype(dt)
+    p["out"] = init_dense(ks[8], d, d, dt)
+    p["norm"] = init_rmsnorm(d, dt)
+    return p
+
+
+def slstm(p, cfg, x, state=None, return_state: bool = False):
+    """sLSTM with exponential gating + stabilizer; diagonal recurrence
+    (per-unit recurrent weights) keeps the time scan cheap.  x: [B,T,d]."""
+    B, T, d = x.shape
+    zi = dense(x, p["wi"]).astype(jnp.float32)
+    zf = dense(x, p["wf"]).astype(jnp.float32)
+    zz = dense(x, p["wz"]).astype(jnp.float32)
+    zo = dense(x, p["wo"]).astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        xi, xf, xz, xo = inp
+        it = xi + h * p["ri"].astype(jnp.float32)
+        ft = xf + h * p["rf"].astype(jnp.float32)
+        zt = jnp.tanh(xz + h * p["rz"].astype(jnp.float32))
+        ot = jax.nn.sigmoid(xo + h * p["ro"].astype(jnp.float32))
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        ig = jnp.exp(it - m_new)
+        fg = jnp.exp(logf + m - m_new)
+        c = fg * c + ig * zt
+        n = fg * n + ig
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    z0 = jnp.zeros((B, d), jnp.float32)
+    m0 = jnp.full((B, d), -1e30, jnp.float32)
+    carry = (z0, z0, z0, m0) if state is None else (
+        state["c"], state["n"], state["h"], state["m"])
+    xs = (jnp.moveaxis(zi, 1, 0), jnp.moveaxis(zf, 1, 0),
+          jnp.moveaxis(zz, 1, 0), jnp.moveaxis(zo, 1, 0))
+    (c, n, h, m), hs = lax.scan(step, carry, xs)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    out = dense(rmsnorm(y, p["norm"], cfg.norm_eps), p["out"])
+    if return_state:
+        return out, {"c": c, "n": n, "h": h, "m": m}
+    return out

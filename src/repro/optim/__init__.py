@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, adamw_init_leaf, adamw_update_leaf, lr_at

@@ -1,0 +1,62 @@
+"""AdamW with fp32 master weights, leaf-at-a-time (ZeRO-friendly).
+
+The ZeRO layer slices each leaf along its chosen dim; these functions are
+shape-agnostic so they run identically on a full leaf (replicated group)
+or on a 1/n_dp shard.  Step count lives outside (train state).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init_leaf(param_slice) -> Dict[str, jax.Array]:
+    """Optimizer state for one (possibly sliced) leaf: fp32 master + m + v."""
+    master = param_slice.astype(jnp.float32)
+    return {
+        "master": master,
+        "m": jnp.zeros_like(master),
+        "v": jnp.zeros_like(master),
+    }
+
+
+def adamw_update_leaf(cfg: AdamWConfig, st: Dict, grad, step, lr
+                      ) -> Tuple[jax.Array, Dict]:
+    """One AdamW step on a leaf slice.  Returns (new_param_slice_f32, state)."""
+    g = grad.astype(jnp.float32)
+    m = cfg.b1 * st["m"] + (1 - cfg.b1) * g
+    v = cfg.b2 * st["v"] + (1 - cfg.b2) * (g * g)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m / (1 - cfg.b1 ** t)
+    vhat = v / (1 - cfg.b2 ** t)
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * st["master"]
+    master = st["master"] - lr * upd
+    return master, {"master": master, "m": m, "v": v}

@@ -1,0 +1,135 @@
+"""Serving layer: batched prefill + single-token decode under GSPMD.
+
+Decode uses the full mesh in *auto* mode (no manual axes — there is no
+gradient sync to schedule):
+  * batch over the DP axes (("pod","data") on the multi-pod mesh),
+  * KV caches sequence-sharded over "model" (flash-decoding style: the
+    per-shard partial softmax statistics combine through the model-axis
+    reductions GSPMD inserts for the softmax max/sum),
+  * recurrent (Mamba2/xLSTM) states sharded over batch only — they are
+    O(1) in sequence length, which is what makes long_500k runnable for
+    the SSM/hybrid archs.
+
+Caches for sliding-window layers are ring buffers bounded by the window,
+so mixtral (SWA 4096) and gemma3 (5:1 local:global) hold far less than
+seq_len state — the sub-quadratic structure long_500k exploits.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    dp_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+
+def _dp(scfg: ServeConfig):
+    return scfg.dp_axes if len(scfg.dp_axes) > 1 else scfg.dp_axes[0]
+
+
+def cache_specs(model_cfg, scfg: ServeConfig, B: int, S_len: int, mesh):
+    """PartitionSpec pytree mirroring init_decode_state output."""
+    dp = _dp(scfg)
+    n_dp = int(np.prod([mesh.shape[a] for a in scfg.dp_axes]))
+    n_tp = mesh.shape[scfg.model_axis]
+    bspec = dp if B % n_dp == 0 and B >= n_dp else None
+
+    def kv_spec(width: int):
+        # sequence-shard KV over the model axis when divisible (flash-
+        # decoding); else shard kv-heads if divisible; else replicate.
+        if width % n_tp == 0:
+            return P(bspec, scfg.model_axis, None, None)
+        if model_cfg.n_kv_heads % n_tp == 0:
+            return P(bspec, None, scfg.model_axis, None)
+        return P(bspec, None, None, None)
+
+    segs = []
+    for block, n in T.segments(model_cfg):
+        if block.kind in ("attn", "moe", "shared_attn"):
+            W = S_len if block.window is None else min(block.window, S_len)
+            s = kv_spec(W)
+            seg = {"k": P(None, *s), "v": P(None, *s)}
+        elif block.kind == "mamba2":
+            cp = P(None, bspec, None, None)
+            seg = {"conv": {"x": cp, "B": cp, "C": cp},
+                   "ssm": P(None, bspec, None, None, None)}
+        elif block.kind == "mlstm":
+            seg = {"C": P(None, bspec, None, None, None),
+                   "n": P(None, bspec, None, None),
+                   "m": P(None, bspec, None)}
+        elif block.kind == "slstm":
+            z = P(None, bspec, None)
+            seg = {"c": z, "n": z, "h": z, "m": z}
+        else:
+            raise ValueError(block.kind)
+        segs.append(seg)
+    return {"segments": segs, "pos": P()}
+
+
+def make_serve_fns(model_cfg, scfg: ServeConfig, mesh, B: int, S_len: int):
+    """Returns (prefill_fn, decode_fn, shardings).
+
+    prefill(params, inputs [B,T]) -> (logits [B,1,V], state)
+    decode(params, state, tokens [B,1]) -> (logits [B,1,V], state)
+    """
+    from repro.models import sharding as _sh
+    from repro.models.sharding import param_specs
+
+    _sh.set_model_parallel(mesh.shape.get(scfg.model_axis, 1))
+    dp = _dp(scfg)
+    cspecs = cache_specs(model_cfg, scfg, B, S_len, mesh)
+
+    def ns(s):
+        return NamedSharding(mesh, s)
+
+    state_shardings = jax.tree.map(
+        ns, cspecs, is_leaf=lambda x: isinstance(x, P))
+
+    def prefill_fn(params, inputs):
+        logits, state = T.prefill(params, model_cfg, inputs)
+        state = _constrain_state(state, cspecs)
+        return logits, state
+
+    def decode_fn(params, state, tokens):
+        logits, state = T.decode_step(params, model_cfg, state, tokens)
+        state = _constrain_state(state, cspecs)
+        return logits, state
+
+    n_in = 3 if model_cfg.frontend else 2
+    in_spec = P(dp) if B % int(np.prod([mesh.shape[a] for a in scfg.dp_axes])) == 0 else P()
+    shardings = {
+        "inputs": ns(in_spec),
+        "state": state_shardings,
+    }
+    return (jax.jit(prefill_fn, out_shardings=(None, state_shardings)),
+            jax.jit(decode_fn, donate_argnums=(1,),
+                    out_shardings=(None, state_shardings)),
+            shardings)
+
+
+def _constrain_state(state, cspecs):
+    def one(x, s):
+        if not isinstance(s, P):
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, s)
+        except (ValueError, TypeError, RuntimeError):
+            return x
+    return {
+        "segments": [
+            jax.tree.map(one, seg, spec)
+            for seg, spec in zip(state["segments"], cspecs["segments"])
+        ],
+        "pos": state["pos"],
+    }

@@ -1,0 +1,131 @@
+"""Sharded checkpointing: async save, restore-from-latest, resharding.
+
+Format: one directory per step —
+  step_<N>/
+    manifest.json   tree structure, shapes, dtypes, step, mesh shape
+    arrays.npz      flat leaves keyed by index
+
+Saves run on a background thread (training continues while the previous
+step serializes — the async checkpoint the fault-tolerance story needs).
+Restore supports *elastic resharding*: checkpoints hold the logical
+(global) arrays, so a restore onto a different mesh/dp-degree just
+re-slices — the optimizer-state layout is recomputed from the new n_dp.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save(path: str, step: int, tree: Any, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Synchronous save of a pytree of (host-gatherable) arrays."""
+    d = os.path.join(path, f"step_{step:08d}")
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat, treedef = _flatten_with_paths(tree)
+    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(flat),
+        "shapes": [list(np.shape(x)) for x in flat],
+        "dtypes": [str(np.asarray(x).dtype) for x in flat],
+        "extra": extra or {},
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.rename(tmp, d)
+    _gc(path, keep)
+    return d
+
+
+def _gc(path: str, keep: int):
+    steps = sorted(all_steps(path))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, f"step_{s:08d}"), ignore_errors=True)
+
+
+def all_steps(path: str) -> List[int]:
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for n in os.listdir(path):
+        if n.startswith("step_") and not n.endswith(".tmp"):
+            if os.path.exists(os.path.join(path, n, "manifest.json")):
+                out.append(int(n[5:]))
+    return sorted(out)
+
+
+def latest_step(path: str) -> Optional[int]:
+    s = all_steps(path)
+    return s[-1] if s else None
+
+
+def restore(path: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Shapes must match the logical (global) shapes."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_like, treedef = jax.tree.flatten(like)
+    assert manifest["n_leaves"] == len(flat_like), (
+        f"leaf count mismatch: ckpt {manifest['n_leaves']} vs {len(flat_like)}")
+    flat = []
+    for i, lk in enumerate(flat_like):
+        arr = data[f"a{i}"]
+        assert tuple(arr.shape) == tuple(np.shape(lk)), (
+            f"leaf {i}: ckpt {arr.shape} vs expected {np.shape(lk)}")
+        flat.append(arr.astype(lk.dtype if hasattr(lk, "dtype") else arr.dtype))
+    return jax.tree.unflatten(treedef, flat)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread; at most one in flight."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[Exception] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             block: bool = False):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # device->host before bg
+
+        def work():
+            try:
+                save(self.path, step, host_tree, extra, self.keep)
+            except Exception as e:      # pragma: no cover
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error:
+            raise self.last_error

@@ -1,0 +1,320 @@
+"""The training step: partial-auto shard_map with Bine gradient collectives.
+
+Distribution (DESIGN.md Sec. 5):
+  * manual axes = the DP ranks (("pod","data") on the multi-pod mesh) —
+    gradient reduce-scatter, optimizer update on 1/n_dp shards (ZeRO-1),
+    and parameter allgather all run on OUR schedules (Bine by default);
+  * auto axis = "model" — tensor-parallel collectives lower through GSPMD
+    from with_sharding_constraint hints.
+
+The rank order of the flattened ("pod","data") axis is pod-major, so rank
+distance ≈ pod locality: exactly the paper's block-placement assumption,
+and the lever that lets distance-doubling Bine reduce-scatter keep its
+*largest* messages inside a pod while only the smallest cross the DCN.
+
+Backends: bine (paper) | recdoub (binomial butterflies) | ring | xla
+(psum_scatter/all_gather) | bine_hier (Sec. 6.2: intra-pod first).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.collectives import shmap
+from repro.models import transformer as T
+from repro.models.sharding import constrain_params, param_specs
+from repro.optim.adamw import AdamWConfig, adamw_init_leaf, adamw_update_leaf, lr_at
+from repro.train import zero
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    backend: str = "bine"            # bine | recdoub | ring | xla | bine_hier
+    dp_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    accum_steps: int = 1
+    clip_norm: float = 1.0
+    wire_dtype: str = "float32"      # float32 | bfloat16 (gradient compression)
+    adamw: AdamWConfig = AdamWConfig()
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def opt_dp_order(self) -> Tuple[str, ...]:
+        # bine_hier reduce-scatters data-first (intra-pod first), producing a
+        # data-major block layout along the zero dim.
+        if self.backend == "bine_hier" and len(self.dp_axes) > 1:
+            return tuple(reversed(self.dp_axes))
+        return self.dp_axes
+
+
+# ---------------------------------------------------------------------------
+# Gradient collectives (per-leaf, dim-general)
+# ---------------------------------------------------------------------------
+
+def _rs_leaf(tcfg: TrainConfig, g, zd: int):
+    """Reduce over DP ranks; scatter along zd (or full allreduce if zd<0)."""
+    axes = tcfg.dp_axes
+    wire = g.astype(jnp.dtype(tcfg.wire_dtype))
+    b = tcfg.backend
+    if zd < 0:
+        if b == "xla":
+            return lax.psum(wire, axes)
+        if b == "ring":
+            return shmap.allreduce_ring(wire, axes)
+        if b == "bine_hier" and len(axes) > 1:
+            return shmap.allreduce_hierarchical(wire, axes[1:], axes[0], "bine")
+        algo = {"bine": "bine", "recdoub": "recdoub"}.get(b, "bine")
+        if wire.size <= 4096:
+            return shmap.allreduce_small(wire, axes, algo)
+        return shmap.allreduce_butterfly(wire, axes, algo)
+    if b == "xla":
+        return lax.psum_scatter(wire, axes, scatter_dimension=zd, tiled=True)
+    if b == "bine_hier" and len(axes) > 1:
+        # intra-pod (data) first: the big messages stay on ICI
+        out = wire
+        for ax in reversed(axes):          # data, then pod
+            out = shmap.reduce_scatter_dim(out, zd, ax, "bine")
+        return out
+    algo = {"bine": "bine", "recdoub": "recdoub", "ring": "ring"}[b]
+    return shmap.reduce_scatter_dim(wire, zd, axes, algo)
+
+
+def _ag_leaf(tcfg: TrainConfig, x, zd: int):
+    """Inverse allgather along zd over the DP ranks."""
+    if zd < 0:
+        return x
+    axes = tcfg.dp_axes
+    b = tcfg.backend
+    if b == "xla":
+        return lax.all_gather(x, axes, axis=zd, tiled=True)
+    if b == "bine_hier" and len(axes) > 1:
+        out = x
+        for ax in axes:                    # pod, then data (inverse order)
+            out = shmap.allgather_dim(out, zd, ax, "bine")
+        return out
+    algo = {"bine": "bine", "recdoub": "recdoub", "ring": "ring"}[b]
+    return shmap.allgather_dim(x, zd, axes, algo)
+
+
+def _scalar_allreduce(tcfg: TrainConfig, x):
+    if tcfg.backend == "xla":
+        return lax.psum(x, tcfg.dp_axes)
+    return shmap.allreduce_small(x, tcfg.dp_axes, "bine")
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+def init_train_state(model_cfg, tcfg: TrainConfig, params, n_dp: int,
+                     dp_rank: Optional[int] = None):
+    """Build (sharded) optimizer state.
+
+    Host-side path (dp_rank given): slice leaves for one rank.
+    SPMD path (dp_rank None): call under shard_map/jit where params are the
+    global view; slicing is expressed as reduce-scatter of params later, so
+    here we slice with static indexing per rank via axis_index (manual).
+    """
+    layout = zero.zero_layout(model_cfg, params, n_dp)
+
+    def one(p, zd):
+        if zd < 0 or dp_rank is None:
+            return adamw_init_leaf(p)
+        return adamw_init_leaf(zero.slice_leaf(p, zd, n_dp, dp_rank))
+
+    opt = jax.tree.map(one, params, layout)
+    return {"opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def init_train_state_spmd(model_cfg, tcfg: TrainConfig, params, n_dp: int):
+    """Init opt shards inside shard_map: slice each leaf at this rank."""
+    layout = zero.zero_layout(model_cfg, params, n_dp)
+    ranks = shmap.axis_index(tcfg.opt_dp_order)
+
+    def one(p, zd):
+        if zd < 0:
+            return adamw_init_leaf(p)
+        k = p.shape[zd] // n_dp
+        sl = lax.dynamic_slice_in_dim(p, ranks * k, k, axis=zd)
+        return adamw_init_leaf(sl)
+
+    opt = jax.tree.map(one, params, layout)
+    return {"opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# The step
+# ---------------------------------------------------------------------------
+
+def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
+    """Returns (jitted step, in/out shardings dict).
+
+    step(params, state, batch) -> (params, state, metrics)
+    """
+    n_dp = int(np.prod([mesh.shape[a] for a in tcfg.dp_axes]))
+    from repro.models import sharding as _sh
+    _sh.set_model_parallel(mesh.shape.get(tcfg.model_axis, 1))
+    layout = zero.zero_layout(model_cfg, params_shapes, n_dp)
+    pspecs = param_specs(model_cfg, params_shapes)
+
+    dp = tcfg.dp_axes if len(tcfg.dp_axes) > 1 else tcfg.dp_axes[0]
+
+    def body(params, state, batch):
+        params = constrain_params(model_cfg, params)
+        opt, step = state["opt"], state["step"]
+
+        # ---- forward/backward (optionally microbatched) ----
+        def lfn(p, mb):
+            loss, metrics = T.loss_fn(p, model_cfg, mb)
+            return loss, metrics
+
+        if tcfg.accum_steps > 1:
+            A = tcfg.accum_steps
+            mbs = jax.tree.map(
+                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                g_acc, me_acc = carry
+                (loss, me), g = jax.value_and_grad(lfn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                me_acc = jax.tree.map(lambda a, b: a + b, me_acc, me)
+                return (g_acc, me_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            me0 = {"loss": 0., "ce": 0., "z_loss": 0., "aux_loss": 0.,
+                   "tokens": 0.}
+            me0 = jax.tree.map(jnp.float32, me0)
+            (grads, metrics), _ = lax.scan(acc_body, (g0, me0), mbs)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            metrics = jax.tree.map(lambda m: m / A, metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lfn, has_aux=True)(params, batch)
+
+        # ---- DP gradient reduce-scatter (the paper's collectives) ----
+        g_shards = jax.tree.map(
+            lambda g, zd: _rs_leaf(tcfg, g, zd).astype(jnp.float32) / n_dp,
+            grads, layout)
+
+        # ---- global grad-norm clip (norm over shards + replicated once) ----
+        sq_shard = sum(jnp.sum(jnp.square(g)) for g, zd in zip(
+            jax.tree.leaves(g_shards), jax.tree.leaves(layout)) if zd >= 0)
+        sq_repl = sum(jnp.sum(jnp.square(g)) for g, zd in zip(
+            jax.tree.leaves(g_shards), jax.tree.leaves(layout)) if zd < 0)
+        gnorm = jnp.sqrt(_scalar_allreduce(tcfg, sq_shard) + sq_repl)
+        scale = jnp.minimum(1.0, tcfg.clip_norm / (gnorm + 1e-9)) \
+            if tcfg.clip_norm > 0 else jnp.ones(())
+
+        # ---- sharded AdamW + parameter allgather ----
+        lr = lr_at(tcfg.adamw, step)
+
+        def upd(st, g, zd, pdt):
+            new_master, st2 = adamw_update_leaf(
+                tcfg.adamw, st, g * scale, step, lr)
+            newp = _ag_leaf(tcfg, new_master.astype(pdt), zd)
+            return newp, st2
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_opt = treedef.flatten_up_to(opt)
+        flat_g = treedef.flatten_up_to(g_shards)
+        flat_zd = treedef.flatten_up_to(layout)
+        new_p, new_opt = [], []
+        for pleaf, st, g, zd in zip(flat_p, flat_opt, flat_g, flat_zd):
+            np_, st2 = upd(st, g, zd, pleaf.dtype)
+            new_p.append(np_)
+            new_opt.append(st2)
+        new_params = jax.tree.unflatten(treedef, new_p)
+        new_opt = jax.tree.unflatten(treedef, new_opt)
+        new_params = constrain_params(model_cfg, new_params)
+
+        metrics = {k: _scalar_allreduce(tcfg, v) / n_dp
+                   for k, v in metrics.items()}
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_params, {"opt": new_opt, "step": step + 1}, metrics
+
+    # ---- specs ----
+    param_in = jax.tree.map(lambda _: P(), params_shapes)
+    opt_manual = jax.tree.map(
+        lambda leaf, zd: {k: zero.shard_spec_manual(leaf.ndim, zd,
+                                                    tcfg.opt_dp_order)
+                          for k in ("master", "m", "v")},
+        params_shapes, layout)
+    state_in = {"opt": opt_manual, "step": P()}
+    batch_in = jax.tree.map(lambda _: P(dp), {"inputs": 0, "targets": 0})
+    metrics_out = P()
+
+    smapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(param_in, state_in, batch_in),
+        out_specs=(param_in, state_in,
+                   {"loss": metrics_out, "ce": metrics_out,
+                    "z_loss": metrics_out, "aux_loss": metrics_out,
+                    "tokens": metrics_out, "grad_norm": metrics_out,
+                    "lr": metrics_out}),
+        axis_names=set(tcfg.dp_axes), check_vma=False)
+
+    # outer-jit shardings (also used by the dry-run's ShapeDtypeStructs)
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    opt_sharding = jax.tree.map(
+        lambda leaf, spec, zd: {
+            k: ns(_merge_spec(spec, zd, tcfg.opt_dp_order, leaf.ndim))
+            for k in ("master", "m", "v")},
+        params_shapes, pspecs, layout)
+    shardings = {
+        "params": jax.tree.map(lambda s: ns(s), pspecs),
+        "state": {"opt": opt_sharding, "step": ns(P())},
+        "batch": {"inputs": ns(P(dp)), "targets": ns(P(dp))},
+    }
+    jitted = jax.jit(smapped, donate_argnums=(0, 1))
+    return jitted, shardings, layout
+
+
+def _merge_spec(model_spec, zd: int, dp_axes, ndim: int):
+    out = list(tuple(model_spec) + (None,) * (ndim - len(tuple(model_spec))))
+    if zd >= 0:
+        out[zd] = tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+    return P(*out)
+
+
+def make_init_fns(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
+    """jitted init of params (replicated over DP, model-sharded) and of the
+    sharded train state (opt shards built in-place, no full fp32 copy)."""
+    n_dp = int(np.prod([mesh.shape[a] for a in tcfg.dp_axes]))
+    from repro.models import sharding as _sh
+    _sh.set_model_parallel(mesh.shape.get(tcfg.model_axis, 1))
+    param_in = jax.tree.map(lambda _: P(), params_shapes)
+    layout = zero.zero_layout(model_cfg, params_shapes, n_dp)
+    opt_manual = jax.tree.map(
+        lambda leaf, zd: {k: zero.shard_spec_manual(leaf.ndim, zd,
+                                                    tcfg.opt_dp_order)
+                          for k in ("master", "m", "v")},
+        params_shapes, layout)
+
+    def init_p(key):
+        return constrain_params(model_cfg, T.init_params(key, model_cfg))
+
+    def init_s(params):
+        return init_train_state_spmd(model_cfg, tcfg, params, n_dp)
+
+    init_params_fn = jax.jit(init_p)
+    init_state_fn = jax.jit(jax.shard_map(
+        init_s, mesh=mesh, in_specs=(param_in,),
+        out_specs={"opt": opt_manual, "step": P()},
+        axis_names=set(tcfg.dp_axes), check_vma=False))
+    return init_params_fn, init_state_fn

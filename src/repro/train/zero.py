@@ -1,0 +1,81 @@
+"""ZeRO-1 leaf partitioning: choose, per parameter leaf, the dimension to
+shard optimizer state / gradient reduce-scatter over the DP ranks.
+
+Rules (per leaf):
+  * candidate dims: not the model-sharded dim (specs from
+    models.sharding.param_specs), size divisible by n_dp;
+  * pick the largest candidate (fewest leftovers elsewhere);
+  * no candidate -> the leaf joins the *replicated* group: its gradient is
+    allreduced and its optimizer state replicated (norms, gates — tiny).
+
+The chosen dim also defines the leaf's optimizer-state sharding spec for
+the outer jit: P(dp_axes) at zero_dim, model axis at its param position.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import param_specs
+
+
+def _choose_dim(shape, spec, n_dp: int) -> int:
+    """Return zero_dim or -1 (replicated)."""
+    best, best_size = -1, 0
+    spec = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for d, size in enumerate(shape):
+        if spec[d] is not None:
+            continue
+        if size % n_dp != 0:
+            continue
+        if size > best_size:
+            best, best_size = d, size
+    return best
+
+
+def zero_layout(cfg, params_shapes, n_dp: int):
+    """Pytree of zero_dim ints (-1 = replicated) mirroring the params."""
+    specs = param_specs(cfg, params_shapes)
+    return jax.tree.map(
+        lambda leaf, spec: _choose_dim(leaf.shape, spec, n_dp),
+        params_shapes, specs)
+
+
+def opt_state_specs(cfg, params_shapes, layout, dp_axes: Tuple[str, ...]):
+    """PartitionSpec pytree for the optimizer state (per leaf: dict of
+    master/m/v with identical sharding): DP axes at zero_dim, model axis
+    kept at the param's position."""
+    specs = param_specs(cfg, params_shapes)
+
+    def one(leaf, spec, zd):
+        spec = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+        out = list(spec)
+        if zd >= 0:
+            out[zd] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        s = P(*out)
+        return {"master": s, "m": s, "v": s}
+
+    return jax.tree.map(one, params_shapes, specs, layout)
+
+
+def shard_spec_manual(leaf_ndim: int, zd: int, dp_axes):
+    """shard_map in_spec for an opt-state leaf (manual axes only)."""
+    out = [None] * leaf_ndim
+    if zd >= 0:
+        out[zd] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*out)
+
+
+def slice_leaf(leaf, zd: int, n_dp: int, rank: int):
+    """Host-side slicing used by init/checkpoint resharding."""
+    if zd < 0:
+        return leaf
+    k = leaf.shape[zd] // n_dp
+    idx = [slice(None)] * leaf.ndim
+    idx[zd] = slice(rank * k, (rank + 1) * k)
+    return leaf[tuple(idx)]

@@ -1,0 +1,43 @@
+"""Shared test helpers.
+
+NOTE: no XLA_FLAGS here — unit tests must see the real (single) device.
+Multi-device tests spawn subprocesses with their own
+--xla_force_host_platform_device_count (see ``run_subprocess``).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 900) -> str:
+    """Run a python snippet with N forced host devices; fail on nonzero."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess
+
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("ci")

@@ -1,0 +1,63 @@
+"""Butterfly pairing properties + the Eq. 2 distance ratio."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import butterflies as bf
+from repro.core import negabinary as nb
+
+POWERS = [2, 4, 8, 16, 32, 64, 128, 256]
+
+
+@given(st.sampled_from(POWERS), st.sampled_from(sorted(bf.BUTTERFLIES)))
+def test_involution_no_fixed_points(p, kind):
+    bf.partner_table(kind, p)  # validates internally
+
+
+@given(st.sampled_from(POWERS), st.sampled_from(bf.CONE_KINDS))
+def test_cone_partition(p, kind):
+    bf.cones(kind, p)          # validates internally
+    bf.half_choice(kind, p)
+    bf.final_block(kind, p)
+
+
+def test_eq2_exact_distances():
+    """δ_bine(i) = |(1-(-2)^(s-i))/3|; δ_binomial(i) = 2^(s-i-1)."""
+    for p in (64, 256, 1024):
+        s = nb.log2_int(p)
+        db = bf.modulo_distance_stats("bine_dh", p)
+        dr = bf.modulo_distance_stats("recdoub_dh", p)
+        for i in range(s):
+            k = s - i
+            expect = abs(nb.bine_delta(k))
+            expect = min(expect, p - expect)
+            assert db[i] == expect
+            assert dr[i] == 2 ** (k - 1)
+
+
+def test_eq2_ratio_approaches_two_thirds():
+    p = 4096
+    db = bf.modulo_distance_stats("bine_dh", p)
+    dr = bf.modulo_distance_stats("recdoub_dh", p)
+    # early steps (large distances): ratio within 5% of 2/3
+    for i in range(4):
+        assert abs(db[i] / dr[i] - 2 / 3) < 0.05
+
+
+def test_total_distance_reduction():
+    """Σ_i δ_bine < Σ_i δ_binomial for p >= 8 (the locality win)."""
+    for p in (8, 32, 128, 512):
+        db = bf.modulo_distance_stats("bine_dh", p).sum()
+        dr = bf.modulo_distance_stats("recdoub_dh", p).sum()
+        assert db < dr
+
+
+def test_final_block_bine_is_reverse_v():
+    # Sec. 4.3.1: the RS-induced block permutation is reverse(v(r))
+    from repro.core.negabinary import reverse_bits, v_table
+    for p in (4, 8, 16, 32, 64):
+        s = nb.log2_int(p)
+        fb = bf.final_block("bine_dd", p)
+        rv = np.array([reverse_bits(int(v), s) for v in v_table(p)])
+        assert (fb == rv).all()

@@ -1,0 +1,67 @@
+"""Negabinary algebra: paper worked examples + hypothesis properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import negabinary as nb
+
+POWERS = [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+
+
+def test_paper_examples():
+    assert nb.int_to_neg(2) == 0b110            # Sec. 2.3.1: 2 = 110₋₂
+    assert nb.neg_to_int(0b011) == -1           # 011₋₂ = -1
+    assert nb.max_positive(6) == 21             # 010101₋₂ = 16+4+1
+    assert nb.max_positive(3) == 5              # 101₋₂
+    assert nb.rank2nb(2, 8) == 0b110
+    assert nb.rank2nb(6, 8) == 0b010            # 6-8 = -2 = 010₋₂
+    assert nb.trailing_run(0b1000, 4) == 3      # Sec. 2.3.2 examples
+    assert nb.trailing_run(0b1011, 4) == 2
+    assert nb.nb2rank(0b0111, 16) == 3          # 0 -> 3 -> 4 path
+
+
+def test_bine_delta_is_k_ones():
+    # Eq. 3: delta(k) = value of k ones in negabinary = (1-(-2)^k)/3
+    for k in range(1, 20):
+        assert nb.bine_delta(k) == nb.neg_to_int(nb.ones(k))
+
+
+@given(st.integers(min_value=-(2**40), max_value=2**40))
+def test_neg_roundtrip(n):
+    assert nb.neg_to_int(nb.int_to_neg(n)) == n
+
+
+@given(st.sampled_from(POWERS), st.data())
+def test_rank_roundtrip(p, data):
+    r = data.draw(st.integers(min_value=0, max_value=p - 1))
+    lab = nb.rank2nb(r, p)
+    assert 0 <= lab < p, "label must fit in s bits"
+    assert nb.nb2rank(lab, p) == r
+
+
+@given(st.sampled_from(POWERS))
+def test_rank_labels_bijective(p):
+    labs = {nb.rank2nb(r, p) for r in range(p)}
+    assert len(labs) == p
+
+
+@given(st.sampled_from(POWERS))
+def test_v_labels_bijective(p):
+    nb.v_inverse(p)  # raises if not a bijection
+
+
+@given(st.sampled_from(POWERS), st.data())
+def test_mod_distance_symmetry(p, data):
+    r = data.draw(st.integers(0, p - 1))
+    q = data.draw(st.integers(0, p - 1))
+    d = nb.mod_distance(r, q, p)
+    assert d == nb.mod_distance(q, r, p)
+    assert 0 <= d <= p // 2
+
+
+def test_reverse_bits():
+    assert nb.reverse_bits(0b110, 3) == 0b011
+    for s in range(1, 10):
+        for x in range(1 << s):
+            assert nb.reverse_bits(nb.reverse_bits(x, s), s) == x

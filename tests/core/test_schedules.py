@@ -1,0 +1,48 @@
+"""End-to-end schedule correctness through the numpy simulator."""
+
+import pytest
+
+from repro.core import simulate as sim
+
+ALGOS = {
+    "broadcast": ["bine", "binomial_dh", "binomial_dd", "bine_large",
+                  "binomial_large"],
+    "reduce": ["bine", "binomial_dh", "binomial_dd", "bine_large",
+               "binomial_large"],
+    "gather": ["bine", "binomial"],
+    "scatter": ["bine", "bine_dd", "binomial"],
+    "reduce_scatter": ["bine", "recdoub", "ring"],
+    "allgather": ["bine", "recdoub", "ring"],
+    "allreduce": ["bine", "bine_small", "recdoub", "recdoub_small", "ring"],
+    "alltoall": ["bine", "bruck", "recdoub"],
+}
+ROOTED = ("broadcast", "reduce", "gather", "scatter")
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 32, 64])
+@pytest.mark.parametrize("coll", sorted(ALGOS))
+def test_collective(p, coll):
+    for algo in ALGOS[coll]:
+        roots = [0, 1, p - 1] if coll in ROOTED and p > 2 else [0]
+        for root in roots:
+            sim.check(coll, algo, p, root)
+
+
+@pytest.mark.parametrize("coll", sorted(ALGOS))
+def test_collective_large_p(coll):
+    for algo in ALGOS[coll]:
+        sim.check(coll, algo, 128, 0)
+
+
+def test_message_counts():
+    """Butterfly collectives move n(p-1)/p bytes per rank over log2 p steps."""
+    from repro.core import schedules as sc
+    for p in (8, 16, 32):
+        for algo in ("bine", "recdoub"):
+            rs = sc.get_schedule("reduce_scatter", algo, p)
+            assert len(rs) == p.bit_length() - 1
+            per_rank = sum(m.nblocks(p) for step in rs for m in step) / p
+            assert per_rank == p - 1  # blocks (of n/p) == n(p-1)/p bytes
+        ring = sc.get_schedule("reduce_scatter", "ring", p)
+        per_rank = sum(m.nblocks(p) for step in ring for m in step) / p
+        assert per_rank == p - 1

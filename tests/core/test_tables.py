@@ -1,0 +1,41 @@
+"""Static table layer: every table self-validates during construction."""
+
+import pytest
+
+from repro.core import tables as tb
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 32, 64])
+def test_butterfly_tables(p):
+    for kind in ("bine_dd", "recdoub_dd"):
+        t = tb.butterfly_tables(kind, p)
+        assert t.s == p.bit_length() - 1
+        assert sorted(t.final_block.tolist()) == list(range(p))
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 32])
+def test_tree_tables(p):
+    for algo in ("bine_dh", "binomial_dh", "binomial_dd"):
+        for root in (0, p // 2, p - 1):
+            t = tb.tree_tables(algo, p, root)
+            assert t.recv_step[root] == -1
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 32])
+def test_gather_scatter_tables(p):
+    for algo in ("bine_dh", "binomial_dh"):
+        for root in (0, 1):
+            tb.gather_tables(algo, p, root)
+    for algo in ("bine_dd", "bine_dh", "binomial_dh"):
+        for root in (0, p - 1):
+            tb.scatter_tables(algo, p, root)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 32])
+def test_alltoall_tables(p):
+    for algo in ("bine_dd", "bruck", "recdoub_dd"):
+        t = tb.alltoall_tables(algo, p)
+        # every slot table row is a permutation of destinations
+        import numpy as np
+        for r in range(p):
+            assert sorted(t.final_slots[r].tolist()) == list(range(p))

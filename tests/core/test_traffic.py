@@ -1,0 +1,76 @@
+"""Global-link traffic model: Fig. 1 numbers, the 33% bound, Fig. 5 shape."""
+
+import numpy as np
+import pytest
+
+from repro.core import schedules as sc
+from repro.core import traffic as tf
+
+
+def test_fig1_broadcast_global_bytes():
+    """8 nodes, 2 per group: distance-doubling 6n vs distance-halving 3n."""
+    topo = tf.GroupedTopo("fig1", group_size=2)
+    dd = tf.global_bytes(sc.get_schedule("broadcast", "binomial_dd", 8),
+                         8, 1.0, topo)
+    dh = tf.global_bytes(sc.get_schedule("broadcast", "binomial_dh", 8),
+                         8, 1.0, topo)
+    assert dd == 6.0 and dh == 3.0
+
+
+@pytest.mark.parametrize("p,group", [(64, 4), (128, 8), (256, 16), (256, 8)])
+def test_allreduce_traffic_reduction_within_bound(p, group):
+    """Bine vs binomial butterflies on block placement: reduction in
+    [0, 33%+eps] (Eq. 2 bound; small-p wraparound can make it negative,
+    per the paper's Fig. 5 outliers discussion)."""
+    topo = tf.GroupedTopo("t", group_size=group)
+    red = tf.traffic_reduction("allreduce", "bine", "recdoub", p, 1 << 20,
+                               topo)
+    assert red <= 0.34, red
+
+
+def test_traffic_reduction_positive_on_unaligned_groups():
+    """Paper Fig. 5 regime: groups that are NOT powers of two (real systems:
+    124/180/160 nodes per group).  On power-of-2-ALIGNED groups binomial's
+    2^k distances are boundary-optimal and Bine can lose — the paper's wins
+    come from unaligned groups and scattered allocations (and motivate the
+    hierarchical variant on pod-aligned TPU meshes, Sec. 6.2)."""
+    topo = tf.GroupedTopo("t", group_size=10)
+    reds = [tf.traffic_reduction("allreduce", "bine", "recdoub", p,
+                                 1 << 20, topo) for p in (128, 512)]
+    assert reds[-1] > 0.0, reds
+    # scheduler-like sampled allocations (the paper's measurement
+    # condition): consistently positive median, like Tables 3-5
+    lumi = tf.GroupedTopo("lumi_like", group_size=124)
+    dist = tf.allocation_reduction_distribution(
+        "allreduce", "bine", "recdoub", 256, lumi, n_jobs=15)
+    assert np.median(dist) > 0.05, np.median(dist)
+    # aligned power-of-2 groups: no positivity guarantee (documented)
+    topo8 = tf.GroupedTopo("t8", group_size=8)
+    red8 = tf.traffic_reduction("allreduce", "bine", "recdoub", 512,
+                                1 << 20, topo8)
+    assert red8 <= 0.34
+
+
+def test_allocation_distribution_bounded():
+    topo = tf.GroupedTopo("lumi_like", group_size=124)
+    dist = tf.allocation_reduction_distribution(
+        "allreduce", "bine", "recdoub", 256, topo, n_jobs=12)
+    assert (dist <= 0.34).all()          # no outliers above the bound
+    assert np.median(dist) > -0.5
+
+
+def test_sched_time_monotone_in_bytes():
+    topo = tf.LUMI
+    s = sc.get_schedule("allreduce", "bine", 64)
+    t1 = tf.sched_time(s, 64, 1 << 10, topo)
+    t2 = tf.sched_time(s, 64, 1 << 24, topo)
+    assert t2 > t1
+
+
+def test_torus_hops():
+    t = tf.TorusTopo("t", dims=(4, 4, 4))
+    assert t.hops(0, 0) == 0
+    assert t.hops(0, 1) == 1
+    # wraparound: coordinate distance min(d, dim-d)
+    a = t.coords(0)
+    assert t.hops(0, 3) == 1  # 0 -> 3 on a ring of 4

@@ -1,0 +1,80 @@
+"""Tree construction properties: cover, uniqueness, paper figures."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import negabinary as nb
+from repro.core import trees as tr
+
+POWERS = [2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def test_fig4_16_node_tree():
+    # Fig. 4: rank 8 receives at step 1 (u=3 for 1000); at step 2 it sends
+    # to rank 7 (labels 1000 vs 1011 differ in the last 2 bits).
+    assert tr.bine_dh_join_step(8, 16) == 1
+    assert tr.bine_dh_peer(8, 16, 2) == 7
+
+
+@given(st.sampled_from(POWERS), st.sampled_from(sorted(tr.TREES)))
+def test_tree_cover_and_uniqueness(p, kind):
+    sched = tr.TREES[kind](p)
+    assert len(sched) == nb.log2_int(p)
+    has = {0}
+    for step in sched:
+        new = set()
+        for src, dst in step:
+            assert src in has, f"{kind}: {src} sends before receiving"
+            assert dst not in has and dst not in new, \
+                f"{kind}: {dst} receives twice"
+            new.add(dst)
+        has |= new
+    assert has == set(range(p)), f"{kind}: not all ranks covered"
+
+
+@given(st.sampled_from(POWERS))
+def test_bine_join_step_matches_schedule(p):
+    sched = tr.bine_dh_tree(p)
+    for i, step in enumerate(sched):
+        for _, dst in step:
+            assert tr.bine_dh_join_step(dst, p) == i
+    sched = tr.bine_dd_tree(p)
+    for i, step in enumerate(sched):
+        for _, dst in step:
+            assert tr.bine_dd_join_step(dst, p) == i
+
+
+@given(st.sampled_from(POWERS), st.data())
+def test_rotation(p, data):
+    root = data.draw(st.integers(0, p - 1))
+    sched = tr.rotate_schedule(tr.bine_dh_tree(p), root, p)
+    has = {root}
+    for step in sched:
+        for src, dst in step:
+            assert src in has
+            has.add(dst)
+    assert has == set(range(p))
+
+
+@given(st.sampled_from(POWERS))
+def test_subtrees_partition(p):
+    for kind in ("bine_dh", "bine_dd"):
+        sched = tr.TREES[kind](p)
+        sub = tr.subtree_blocks(sched, p)
+        assert sorted(sub[0]) == list(range(p))     # root's subtree = all
+        for r in range(p):
+            assert r in sub[r]
+
+
+def test_dd_subtree_low_bits_shared():
+    # Sec. 3.2.3: all ranks in a dd-subtree share the low bits of v
+    p = 16
+    from repro.core.negabinary import v_table
+    vt = v_table(p)
+    sched = tr.bine_dd_tree(p)
+    sub = tr.subtree_blocks(sched, p)
+    for r in range(1, p):
+        i = tr.bine_dd_join_step(r, p)
+        mask = (1 << (i + 1)) - 1
+        for q in sub[r]:
+            assert (vt[q] & mask) == (vt[r] & mask)

@@ -1,0 +1,69 @@
+"""HLO analyzer: scan trip-count multiplication, dot flops exactness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.launch import hlo as H
+
+
+def test_scan_flops_exact():
+    W = jnp.zeros((256, 512), jnp.bfloat16)
+
+    def scanned(x):
+        def body(c, _):
+            return (c @ W @ W.T), None
+        out, _ = lax.scan(body, x, None, length=7)
+        return out
+
+    x = jnp.zeros((128, 256), jnp.bfloat16)
+    compiled = jax.jit(scanned).lower(x).compile()
+    roof = H.roofline_from_compiled(compiled, 1, 1)
+    expect = 7 * 2 * (2 * 128 * 256 * 512)
+    assert abs(roof.flops_per_chip / expect - 1) < 0.01
+    # the raw cost_analysis must show the while-once undercount we correct
+    assert roof.raw_cost_flops < roof.flops_per_chip / 2
+
+
+def test_nested_scan_flops():
+    W = jnp.zeros((128, 128), jnp.float32)
+
+    def nested(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ W, None
+            c, _ = lax.scan(inner, c, None, length=3)
+            return c, None
+        out, _ = lax.scan(outer, x, None, length=5)
+        return out
+
+    x = jnp.zeros((64, 128), jnp.float32)
+    compiled = jax.jit(nested).lower(x).compile()
+    roof = H.roofline_from_compiled(compiled, 1, 1)
+    expect = 15 * 2 * 64 * 128 * 128
+    assert abs(roof.flops_per_chip / expect - 1) < 0.01
+
+
+def test_bytes_scale_with_trip_count():
+    W = jnp.zeros((512, 512), jnp.float32)
+
+    def loop(n):
+        def f(x):
+            def body(c, _):
+                return jnp.tanh(c @ W), None
+            out, _ = lax.scan(body, x, None, length=n)
+            return out
+        return f
+
+    x = jnp.zeros((512, 512), jnp.float32)
+    r2 = H.roofline_from_compiled(jax.jit(loop(2)).lower(x).compile(), 1, 1)
+    r8 = H.roofline_from_compiled(jax.jit(loop(8)).lower(x).compile(), 1, 1)
+    ratio = r8.hbm_bytes_per_chip / max(r2.hbm_bytes_per_chip, 1)
+    assert 2.5 < ratio < 6.0, ratio   # ~4x (8/2), allowing boilerplate
+
+
+def test_shape_parsing():
+    assert H._bytes_of("f32[128,512]") == 128 * 512 * 4
+    assert H._bytes_of("bf16[8,8]") == 128
+    assert H._bytes_of("(s32[], bf16[128,256])") == 4 + 128 * 256 * 2

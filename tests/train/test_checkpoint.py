@@ -1,0 +1,55 @@
+"""Checkpoint save/restore/gc + async writer."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"a": rng.randn(4, 8).astype(np.float32),
+            "b": {"c": rng.randn(3).astype(np.float32),
+                  "d": np.int32(7)}}
+
+
+def test_save_restore(tmp_path):
+    path = str(tmp_path)
+    t = _tree()
+    ckpt.save(path, 10, t)
+    assert ckpt.latest_step(path) == 10
+    like = {"a": np.zeros((4, 8), np.float32),
+            "b": {"c": np.zeros(3, np.float32), "d": np.int32(0)}}
+    out = ckpt.restore(path, 10, like)
+    np.testing.assert_array_equal(out["a"], t["a"])
+    np.testing.assert_array_equal(out["b"]["c"], t["b"]["c"])
+    assert out["b"]["d"] == 7
+
+
+def test_gc_keeps_latest(tmp_path):
+    path = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(path, s, _tree(s), keep=2)
+    assert ckpt.all_steps(path) == [4, 5]
+
+
+def test_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path)
+    ckpt.save(path, 1, _tree())
+    like = {"a": np.zeros((4, 9), np.float32),
+            "b": {"c": np.zeros(3, np.float32), "d": np.int32(0)}}
+    with pytest.raises(AssertionError):
+        ckpt.restore(path, 1, like)
+
+
+def test_async_checkpointer(tmp_path):
+    path = str(tmp_path)
+    c = ckpt.AsyncCheckpointer(path, keep=2)
+    for s in (10, 20, 30):
+        c.save(s, _tree(s))
+    c.wait()
+    assert ckpt.latest_step(path) == 30
+    out = ckpt.restore(path, 30, _tree())
+    np.testing.assert_array_equal(out["a"], _tree(30)["a"])

@@ -1,0 +1,86 @@
+"""Fault tolerance: restart-from-checkpoint, elastic re-mesh, stragglers."""
+
+import numpy as np
+import pytest
+
+from repro.train.runtime import (DeviceFailure, FailureInjector,
+                                 StragglerMonitor, TrainLoop, TrainLoopConfig)
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(alpha=0.5, ratio=2.0, warmup=2)
+    for s in range(6):
+        assert not m.observe(s, 0.1)
+    assert m.observe(6, 0.5)            # 5x the EWMA -> flagged
+    assert not m.observe(7, 0.1)
+    assert len(m.flagged) == 1
+
+
+class _ToyBuilder:
+    """Quadratic toy model: deterministic, mesh-free, exercises the loop."""
+
+    def __init__(self):
+        self.builds = 0
+
+    def __call__(self, shrink):
+        self.builds += 1
+        lr = 0.1
+
+        def step(params, state, batch):
+            x, y = batch
+            w = params["w"]
+            grad = 2 * (w * x - y) * x
+            w2 = w - lr * grad.mean()
+            return ({"w": w2}, {"step": state["step"] + 1},
+                    {"loss": ((w * x - y) ** 2).mean()})
+
+        def init_p(key):
+            return {"w": np.float32(0.0)}
+
+        def init_s(params):
+            return {"step": np.int32(0)}
+
+        def put_batch(b):
+            return b
+
+        def data_at(s):
+            rng = np.random.RandomState(s)
+            x = rng.randn(32).astype(np.float32)
+            return x, 3.0 * x
+
+        return step, init_p, init_s, put_batch, data_at
+
+
+def test_restart_after_failure(tmp_path):
+    build = _ToyBuilder()
+    inj = FailureInjector(schedule={7: False})
+    loop = TrainLoop(TrainLoopConfig(total_steps=15, ckpt_every=5,
+                                     ckpt_dir=str(tmp_path)), build, inj)
+    out = loop.run(key=None)
+    assert out["restarts"] == 1
+    steps = [h["step"] for h in out["history"]]
+    assert steps.count(5) == 2 or steps.count(6) == 2, \
+        "should replay from the last checkpoint"
+    assert out["history"][-1]["step"] == 14
+    assert out["history"][-1]["loss"] < out["history"][0]["loss"]
+
+
+def test_elastic_remesh_on_permanent_failure(tmp_path):
+    build = _ToyBuilder()
+    inj = FailureInjector(schedule={6: True})       # permanent -> shrink
+    loop = TrainLoop(TrainLoopConfig(total_steps=12, ckpt_every=4,
+                                     ckpt_dir=str(tmp_path)), build, inj)
+    out = loop.run(key=None)
+    assert out["shrink"] == 1
+    assert build.builds == 2                         # re-built on new mesh
+    assert out["history"][-1]["step"] == 11
+
+
+def test_too_many_restarts_raises(tmp_path):
+    build = _ToyBuilder()
+    inj = FailureInjector(schedule={i: False for i in range(1, 12)})
+    loop = TrainLoop(TrainLoopConfig(total_steps=10, ckpt_every=100,
+                                     ckpt_dir=str(tmp_path), max_restarts=3),
+                     build, inj)
+    with pytest.raises(DeviceFailure):
+        loop.run(key=None)

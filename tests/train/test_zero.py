@@ -1,0 +1,43 @@
+"""ZeRO-1 layout selection logic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base
+from repro.models import sharding
+from repro.models import transformer as T
+from repro.train import zero
+
+
+def test_layout_avoids_model_dims_and_divides():
+    cfg = base.get_config("qwen3-32b")
+    sharding.set_model_parallel(16)
+    try:
+        shapes = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                                jax.random.key(0))
+        layout = zero.zero_layout(cfg, shapes, 32)
+        specs = sharding.param_specs(cfg, shapes)
+        flat = zip(jax.tree.leaves(shapes), jax.tree.leaves(layout),
+                   jax.tree.leaves(specs, is_leaf=lambda x: isinstance(
+                       x, type(specs))))
+        n_sharded = 0
+        for leaf, zd in zip(jax.tree.leaves(shapes), jax.tree.leaves(layout)):
+            if zd >= 0:
+                assert leaf.shape[zd] % 32 == 0, (leaf.shape, zd)
+                n_sharded += 1
+        # the big leaves must all be sharded
+        big = [l for l in jax.tree.leaves(shapes) if np.prod(l.shape) > 1e6]
+        big_sharded = [
+            zd for l, zd in zip(jax.tree.leaves(shapes),
+                                jax.tree.leaves(layout))
+            if np.prod(l.shape) > 1e6]
+        assert all(zd >= 0 for zd in big_sharded), "big leaf not ZeRO-sharded"
+    finally:
+        sharding.set_model_parallel(1)
+
+
+def test_slice_leaf_roundtrip():
+    leaf = np.arange(4 * 6 * 5).reshape(4, 6, 5)
+    parts = [zero.slice_leaf(leaf, 1, 3, r) for r in range(3)]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1), leaf)
