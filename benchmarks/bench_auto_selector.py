@@ -1,0 +1,102 @@
+"""Auto-selector benchmark: modeled time of backend="auto" vs every fixed
+backend, per (topology, collective, p, vector size).
+
+For each sweep point the decision table picks a backend; this script
+verifies auto is never worse than the best fixed candidate (it is the
+argmin by construction — any regression means the cached table is stale
+or the lookup snapped badly) and reports the speedup of auto over the
+WORST fixed backend, i.e. what hard-coding the wrong algorithm costs.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_auto_selector.py [--topo NAME]
+      [--collective NAME] [--csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from common import emit  # noqa: E402  (benchmarks/ is the cwd convention)
+
+from repro.topology import (CANDIDATES, PRESETS, get_topology, load_table,
+                            predict_time)
+
+P_SWEEP = (4, 8, 16, 32, 64, 128)
+SIZE_SWEEP = (1 << 10, 1 << 14, 1 << 18, 1 << 22, 1 << 26)
+
+#: slack for float noise in the "auto >= best fixed" check; the table and
+#: this script call the same deterministic model, so equality is expected
+MODEL_NOISE = 1.005
+
+
+def sweep(topo_name: str, collectives=None):
+    table = load_table(topo_name)
+    rows = []
+    violations = []
+    for coll in (collectives or sorted(CANDIDATES)):
+        cands = CANDIDATES[coll]
+        for p in P_SWEEP:
+            topo = get_topology(topo_name, p)
+            for nbytes in SIZE_SWEEP:
+                fixed = {b: predict_time(coll, b, p, nbytes, topo)
+                         for b in cands}
+                chosen = table.lookup(coll, p, nbytes)
+                t_auto = fixed[chosen]
+                t_best = min(fixed.values())
+                t_worst = max(fixed.values())
+                if t_auto > t_best * MODEL_NOISE:
+                    violations.append((coll, p, nbytes, chosen, fixed))
+                rows.append((topo_name, coll, p, nbytes, chosen,
+                             t_auto * 1e6, t_best * 1e6,
+                             t_worst / max(t_auto, 1e-30)))
+    return rows, violations
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topo", default=None, choices=PRESETS,
+                    help="one preset (default: all)")
+    ap.add_argument("--collective", default=None)
+    ap.add_argument("--csv", action="store_true",
+                    help="raw CSV instead of the summary")
+    args = ap.parse_args(argv)
+
+    topos = [args.topo] if args.topo else list(PRESETS)
+    colls = [args.collective] if args.collective else None
+    all_rows = []
+    all_violations = []
+    for t in topos:
+        rows, violations = sweep(t, colls)
+        all_rows.extend(rows)
+        all_violations.extend((t,) + v for v in violations)
+
+    if args.csv:
+        emit(all_rows, ("topology", "collective", "p", "bytes", "auto_backend",
+                        "auto_us", "best_fixed_us", "speedup_vs_worst"))
+    else:
+        for t in topos:
+            trows = [r for r in all_rows if r[0] == t]
+            picks = {}
+            for r in trows:
+                picks[r[4]] = picks.get(r[4], 0) + 1
+            worst_case = max(r[7] for r in trows)
+            import statistics
+            mean_case = statistics.geometric_mean(r[7] for r in trows)
+            print(f"{t}: {len(trows)} points, picks={picks}, "
+                  f"auto vs worst-fixed: x{mean_case:.2f} geomean, "
+                  f"x{worst_case:.2f} max")
+
+    if all_violations:
+        print(f"\nFAIL: auto worse than best fixed at {len(all_violations)} "
+              "points (stale decision table?):", file=sys.stderr)
+        for v in all_violations[:10]:
+            print("  ", v, file=sys.stderr)
+        return 1
+    print("\nOK: auto >= best fixed backend (within model noise) at every "
+          f"point ({len(all_rows)} sweep points)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

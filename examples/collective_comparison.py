@@ -21,6 +21,7 @@ from repro.launch import hlo as H  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.optim.adamw import AdamWConfig  # noqa: E402
 from repro.train.data import DataConfig, make_batch  # noqa: E402
+from repro.compat import set_mesh  # noqa: E402
 from repro.train.step import (TrainConfig, make_init_fns,  # noqa: E402
                               make_train_step)
 
@@ -40,7 +41,7 @@ def main():
                            adamw=acfg)
         step_fn, shardings, _ = make_train_step(cfg, tcfg, mesh, shapes)
         init_p, init_s = make_init_fns(cfg, tcfg, mesh, shapes)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             params = init_p(key)
             state = init_s(params)
             losses = []

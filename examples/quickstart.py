@@ -16,6 +16,7 @@ from repro.configs import base  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.optim.adamw import AdamWConfig  # noqa: E402
 from repro.train.data import DataConfig, make_batch  # noqa: E402
+from repro.compat import set_mesh  # noqa: E402
 from repro.train.step import (TrainConfig, make_init_fns,  # noqa: E402
                               make_train_step)
 
@@ -35,7 +36,7 @@ def main():
     init_p, init_s = make_init_fns(cfg, tcfg, mesh, shapes)
     dcfg = DataConfig(global_batch=8, seq_len=64, vocab_size=cfg.vocab_size)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_p(key)
         state = init_s(params)
         print(f"arch={cfg.name} (reduced) params="

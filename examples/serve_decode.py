@@ -18,6 +18,7 @@ import numpy as np  # noqa: E402
 from repro.configs import base  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.serve.engine import ServeConfig, make_serve_fns  # noqa: E402
+from repro.compat import set_mesh
 
 
 def main():
@@ -44,7 +45,7 @@ def main():
         prompt = jnp.asarray(rng.randint(
             0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         t0 = time.time()
         logits, state = prefill_fn(params, prompt)
         jax.block_until_ready(logits)

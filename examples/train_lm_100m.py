@@ -23,6 +23,7 @@ from repro.models import transformer as T  # noqa: E402
 from repro.optim.adamw import AdamWConfig  # noqa: E402
 from repro.train import checkpoint as ckpt  # noqa: E402
 from repro.train.data import DataConfig, Prefetcher  # noqa: E402
+from repro.compat import set_mesh  # noqa: E402
 from repro.train.step import (TrainConfig, make_init_fns,  # noqa: E402
                               make_train_step)
 
@@ -52,7 +53,7 @@ def main():
                       vocab_size=cfg.vocab_size)
     cpr = ckpt.AsyncCheckpointer(args.ckpt_dir)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_p(key)
         state = init_s(params)
         pf = Prefetcher(dcfg)

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 smoke: the exact verify command CI and ROADMAP.md use.
+# Works from any cwd; extra args are forwarded to pytest
+# (e.g. scripts/tier1.sh tests/topology -k auto).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

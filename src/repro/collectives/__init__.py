@@ -1,2 +1,3 @@
-from .api import (CollectiveConfig, BINE, XLA, allreduce, reduce_scatter,
-                  allgather, all_to_all, broadcast, reduce, gather, scatter)
+from .api import (CollectiveConfig, BINE, XLA, AUTO, allreduce,
+                  reduce_scatter, allgather, all_to_all, broadcast, reduce,
+                  gather, scatter, resolve_backend, allreduce_uses_small)

@@ -7,9 +7,15 @@ Backends
   recdoub    : classical binomial/recursive-doubling butterflies.
   ring       : bandwidth-optimal ring (latency-bound at scale).
   bine_hier  : hierarchical (Sec. 6.2): bine RS/AG intra-pod + bine across.
+  auto       : topology-aware selection — at trace time (shapes are static)
+               the decision table for ``cfg.topology`` picks the predicted-
+               fastest backend for (collective, axis size, payload bytes);
+               see ``repro.topology``.  Zero runtime cost.
 
 The allreduce auto-switches small/large at ``small_cutoff_bytes`` like the
-paper's implementations (Sec. 4.4/4.5).
+paper's implementations (Sec. 4.4/4.5); the boundary is INCLUSIVE — a
+vector of exactly ``small_cutoff_bytes`` takes the small (full-vector
+recursive-doubling) path.
 """
 
 from __future__ import annotations
@@ -28,10 +34,11 @@ Axis = shmap.Axis
 
 @dataclass(frozen=True)
 class CollectiveConfig:
-    backend: str = "bine"             # bine | recdoub | ring | xla | bine_hier
-    small_cutoff_bytes: int = 16384   # allreduce small/large switch
+    backend: str = "bine"             # bine | recdoub | ring | xla | bine_hier | auto
+    small_cutoff_bytes: int = 16384   # allreduce small/large switch (inclusive)
     inner_axis: Optional[Axis] = None  # for bine_hier: the fast (intra-pod) axis
     outer_axis: Optional[Axis] = None
+    topology: str = "tpu_multipod"    # decision-table preset for backend="auto"
 
     def replace(self, **kw):
         import dataclasses
@@ -40,13 +47,45 @@ class CollectiveConfig:
 
 XLA = CollectiveConfig(backend="xla")
 BINE = CollectiveConfig(backend="bine")
+AUTO = CollectiveConfig(backend="auto")
 
 
 def _nbytes(x) -> int:
     return x.size * x.dtype.itemsize
 
 
+def resolve_backend(collective: str, p: int, nbytes: int,
+                    cfg: CollectiveConfig) -> str:
+    """Concrete backend for this call site (identity unless backend="auto")."""
+    if cfg.backend != "auto":
+        return cfg.backend
+    from repro.topology import select_backend
+    return select_backend(collective, p, nbytes, cfg.topology)
+
+
+def _resolve(cfg: CollectiveConfig, collective: str, x, axis: Axis,
+             gathered: bool = False) -> CollectiveConfig:
+    """Resolve backend="auto" for this call site.
+
+    The decision table is keyed on the FULL-vector payload (the
+    ``core.traffic.msg_bytes`` convention).  For the collectives whose
+    input is one rank's block (allgather/gather), pass ``gathered=True``
+    to scale the local size up by the axis size."""
+    if cfg.backend != "auto":
+        return cfg
+    p = shmap.axis_size(axis)
+    nbytes = _nbytes(x) * (p if gathered else 1)
+    b = resolve_backend(collective, p, nbytes, cfg)
+    return cfg.replace(backend=b)
+
+
+def allreduce_uses_small(nbytes: int, cfg: CollectiveConfig) -> bool:
+    """The small/large switch, exposed for tests: INCLUSIVE at the cutoff."""
+    return nbytes <= cfg.small_cutoff_bytes
+
+
 def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
+    cfg = _resolve(cfg, "allreduce", x, axis)
     b = cfg.backend
     if b == "xla":
         return lax.psum(x, axis)
@@ -58,7 +97,7 @@ def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
     if b == "ring":
         return shmap.allreduce_ring(x, axis)
     if b in ("bine", "recdoub"):
-        if _nbytes(x) <= cfg.small_cutoff_bytes:
+        if allreduce_uses_small(_nbytes(x), cfg):
             return shmap.allreduce_small(x, axis, b)
         return shmap.allreduce_butterfly(x, axis, b)
     raise ValueError(f"unknown backend {b!r}")
@@ -66,6 +105,7 @@ def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
 
 def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
     """Full vector (len divisible by axis size) -> own reduced block."""
+    cfg = _resolve(cfg, "reduce_scatter", x, axis)
     b = cfg.backend
     if b == "xla":
         p = shmap.axis_size(axis)
@@ -79,6 +119,7 @@ def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
 
 def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
     """Own block -> full vector in rank order."""
+    cfg = _resolve(cfg, "allgather", x, axis, gathered=True)
     b = cfg.backend
     if b == "xla":
         return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
@@ -89,6 +130,7 @@ def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
 
 def all_to_all(x, axis: Axis, cfg: CollectiveConfig = BINE):
     """[p, ...] row d to rank d  ->  [p, ...] row o from rank o."""
+    cfg = _resolve(cfg, "alltoall", x, axis)
     b = cfg.backend
     if b == "xla":
         return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
@@ -97,17 +139,33 @@ def all_to_all(x, axis: Axis, cfg: CollectiveConfig = BINE):
     return shmap.all_to_all(x, axis, algo)
 
 
+def _psum_exact(dtype) -> bool:
+    """Masked-psum emulation is exact only for dtypes whose additive
+    identity composes losslessly: floats/complex (one nonzero contributor,
+    the rest exact zeros).  bool has no '+' at all, and integer psum may
+    wrap or be rejected by backends — those route through all_gather."""
+    return (jnp.issubdtype(dtype, jnp.floating)
+            or jnp.issubdtype(dtype, jnp.complexfloating))
+
+
 def broadcast(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
+    cfg = _resolve(cfg, "broadcast", x, axis)
     if cfg.backend == "xla":
-        # XLA has no direct bcast primitive at this level; emulate via select+psum
-        idx = shmap.axis_index(axis)
-        masked = jnp.where(idx == root, x, jnp.zeros_like(x))
-        return lax.psum(masked, axis)
+        # XLA has no direct bcast primitive at this level; emulate.
+        if _psum_exact(x.dtype):
+            idx = shmap.axis_index(axis)
+            mask = jnp.broadcast_to(idx == root, x.shape)
+            masked = lax.select(mask, x, jnp.zeros_like(x))
+            return lax.psum(masked, axis)
+        # non-additive dtypes (bool/int): gather all ranks, keep root's row
+        g = lax.all_gather(x, axis, axis=0, tiled=False)
+        return g[root]
     algo = "bine" if cfg.backend.startswith("bine") else "binomial"
     return shmap.broadcast(x, axis, root, algo)
 
 
 def reduce(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
+    cfg = _resolve(cfg, "reduce", x, axis)
     if cfg.backend == "xla":
         return lax.psum(x, axis)  # all ranks get it; root semantics upstream
     algo = "bine" if cfg.backend.startswith("bine") else "binomial"
@@ -115,6 +173,7 @@ def reduce(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
 
 
 def gather(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
+    cfg = _resolve(cfg, "gather", x, axis, gathered=True)
     if cfg.backend == "xla":
         return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
     algo = "bine" if cfg.backend.startswith("bine") else "binomial"
@@ -122,12 +181,19 @@ def gather(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
 
 
 def scatter(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
+    cfg = _resolve(cfg, "scatter", x, axis)
     if cfg.backend == "xla":
         p = shmap.axis_size(axis)
         idx = shmap.axis_index(axis)
-        # only root's x is significant: broadcast (masked psum), then slice
-        masked = jnp.where(idx == root, x, jnp.zeros_like(x))
-        v = lax.psum(masked, axis).reshape(p, -1)
+        if _psum_exact(x.dtype):
+            # only root's x is significant: bcast (select+psum), then slice
+            mask = jnp.broadcast_to(idx == root, x.shape)
+            masked = lax.select(mask, x, jnp.zeros_like(x))
+            v = lax.psum(masked, axis).reshape(p, -1)
+        else:
+            # non-additive dtypes: gather, keep root's row (exact for
+            # bool/ints — no arithmetic involved)
+            v = lax.all_gather(x, axis, axis=0, tiled=False)[root].reshape(p, -1)
         return lax.dynamic_index_in_dim(v, idx, axis=0, keepdims=False)
     algo = "bine" if cfg.backend.startswith("bine") else "binomial"
     return shmap.scatter(x, axis, root, algo)

@@ -17,6 +17,7 @@ block-placement assumption).
 from __future__ import annotations
 
 import math
+from contextlib import contextmanager
 from functools import partial
 from typing import Sequence, Tuple, Union
 
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import compat
 from repro.core import tables as tb
 
 Axis = Union[str, Tuple[str, ...]]
@@ -32,11 +34,43 @@ Axis = Union[str, Tuple[str, ...]]
 
 def axis_size(axis: Axis) -> int:
     if isinstance(axis, (tuple, list)):
-        return int(np.prod([lax.axis_size(a) for a in axis]))
-    return int(lax.axis_size(axis))
+        return int(np.prod([compat.axis_size(a) for a in axis]))
+    return compat.axis_size(axis)
+
+
+#: stack of {axis name -> traced index} pushed by ``axis_index_hints``
+_INDEX_HINTS: list = []
+
+
+@contextmanager
+def axis_index_hints(hints):
+    """Supply per-axis rank indices as *data* instead of ``lax.axis_index``.
+
+    Under partial-auto shard_map on jax 0.4.x, ``lax.axis_index`` of a
+    manual axis lowers to a PartitionId instruction the SPMD partitioner
+    rejects (and new-jax Shardy rejects it in nested manual regions).  The
+    caller passes each manual axis an ``arange`` sharded over that axis and
+    registers the per-shard element here; every collective in this module
+    then picks up the hint transparently.
+    """
+    _INDEX_HINTS.append(dict(hints))
+    try:
+        yield
+    finally:
+        _INDEX_HINTS.pop()
 
 
 def axis_index(axis: Axis):
+    if isinstance(axis, (tuple, list)):
+        # row-major flatten, matching the tuple-axis convention of
+        # axis_size and the schedule tables
+        idx = axis_index(axis[0])
+        for a in axis[1:]:
+            idx = idx * compat.axis_size(a) + axis_index(a)
+        return idx
+    for hints in reversed(_INDEX_HINTS):
+        if axis in hints:
+            return hints[axis]
     return lax.axis_index(axis)
 
 

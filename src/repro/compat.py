@@ -1,0 +1,95 @@
+"""Version compatibility shims for the jax API surface we use.
+
+The repo targets the modern public API (``jax.shard_map``, ``jax.set_mesh``)
+but must also run on jax 0.4.x, where
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` with a slightly
+    different signature: the manual axes are expressed through their
+    complement (``auto=`` = the axes GSPMD keeps), and replication checking
+    is called ``check_rep`` instead of ``check_vma``;
+  * there is no ``jax.set_mesh``; the equivalent ambient-mesh context is
+    entering the ``Mesh`` object itself (``with mesh:``).
+
+Import from here instead of using ``jax.shard_map`` / ``jax.set_mesh``
+directly:
+
+    from repro.compat import shard_map, set_mesh
+
+Known 0.4.x partial-auto limitations (why the train step goes fully manual
+there, see ``train.step._manual_axes``): the SPMD partitioner cannot lower
+``lax.ppermute`` of a manual axis, crashes on any while loop (``lax.scan``)
+in the body, and rejects auto-axis ``with_sharding_constraint`` under
+multiple manual axes; ``lax.axis_index`` of a manual axis lowers to an
+unsupported PartitionId (worked around via ``shmap.axis_index_hints``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+#: new-jax (Shardy) lowering rejects ``lax.axis_index`` inside a *nested*
+#: manual shard_map ("axis already bound by parent manual computation");
+#: the classic GSPMD path on jax 0.4.x does not have that limitation.
+NESTED_AXIS_INDEX_OK = not HAS_NATIVE_SHARD_MAP
+
+
+if HAS_NATIVE_SHARD_MAP:
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma: Optional[bool] = None):
+        kw = {}
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs, **kw)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def _ambient_mesh():
+        """The mesh entered via ``with mesh:`` (our 0.4.x ``set_mesh``)."""
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m.empty:
+            raise ValueError(
+                "compat.shard_map on jax 0.4.x needs an explicit mesh= or an "
+                "ambient mesh (wrap the call in `with compat.set_mesh(mesh):`)")
+        return m
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma: Optional[bool] = None):
+        if mesh is None:
+            mesh = _ambient_mesh()
+        kw = {}
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                kw["auto"] = auto
+        # 0.4.x replication tracking predates the vma machinery and rejects
+        # some valid partial-auto programs; only enable it when asked for.
+        kw["check_rep"] = bool(check_vma) if check_vma is not None else False
+        return _shard_map_04(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+
+
+if hasattr(jax.lax, "axis_size"):
+    def axis_size(name) -> int:
+        return int(jax.lax.axis_size(name))
+else:
+    def axis_size(name) -> int:
+        """0.4.x: ``core.axis_frame(name)`` resolves to the bound size."""
+        from jax import core
+        return int(core.axis_frame(name))
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    def set_mesh(mesh):
+        """0.4.x: the Mesh object is itself the ambient-mesh context."""
+        return mesh

@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import base as cfgbase
 from repro.launch import hlo as H
 from repro.launch.mesh import dp_axes as mesh_dp_axes, make_production_mesh
+from repro.compat import set_mesh
 
 
 def sds(shape, dtype, sharding=None):
@@ -153,7 +154,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
     pod = 256
     t0 = time.time()
     spec = input_specs(arch, shape, mesh, backend)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = spec["step"].lower(*spec["args"])
         t_lower = time.time() - t0
         t0 = time.time()

@@ -16,6 +16,7 @@ import numpy as np
 from repro.configs import base as cfgbase
 from repro.models import transformer as T
 from repro.serve.engine import ServeConfig, make_serve_fns
+from repro.compat import set_mesh
 
 
 def main(argv=None):
@@ -57,7 +58,7 @@ def main(argv=None):
         prompt = jnp.asarray(rng.randint(
             0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         t0 = time.time()
         logits, state = prefill_fn(params, prompt)
         logits.block_until_ready()

@@ -26,6 +26,7 @@ from repro.train import checkpoint as ckpt
 from repro.train.data import DataConfig, Prefetcher, make_batch
 from repro.train.runtime import StragglerMonitor
 from repro.train.step import TrainConfig, make_init_fns, make_train_step
+from repro.compat import set_mesh
 
 
 def main(argv=None):
@@ -39,7 +40,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--backend", default="bine",
-                    choices=["bine", "recdoub", "ring", "xla", "bine_hier"])
+                    choices=["bine", "recdoub", "ring", "xla", "bine_hier",
+                             "auto"])
+    ap.add_argument("--topology", default="tpu_multipod",
+                    help="decision-table preset for --backend auto")
     ap.add_argument("--wire-dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--accum", type=int, default=1)
@@ -69,7 +73,7 @@ def main(argv=None):
                        total_steps=args.steps)
     tcfg = TrainConfig(backend=args.backend, dp_axes=dp_axes,
                        accum_steps=args.accum, adamw=acfg,
-                       wire_dtype=args.wire_dtype)
+                       wire_dtype=args.wire_dtype, topology=args.topology)
 
     key = jax.random.key(args.seed)
     params_shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
@@ -88,7 +92,7 @@ def main(argv=None):
     cpr = ckpt.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
     monitor = StragglerMonitor()
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_p(key)
         state = init_s(params)
         start = 0

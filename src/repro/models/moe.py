@@ -31,11 +31,32 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from .layers import dense, init_dense
 
-#: payload threshold for the log-vs-linear alltoall switch (paper: log
-#: algorithms win for small vectors / large rank counts)
-A2A_SMALL_BYTES = 1 << 18
+#: decision-table preset for the dispatch/combine alltoall (paper Sec.
+#: 4.4/5.1.2: log algorithms win small payloads — the decode regime —
+#: linear wins large ones).  The old fixed A2A_SMALL_BYTES threshold is
+#: replaced by the topology-aware selector; override per deployment.
+A2A_TOPOLOGY = "tpu_multipod"
+
+
+def a2a_backend(n: int, buffer_bytes: int, topology: str = None) -> str:
+    """Alltoall algorithm for the EP dispatch/combine.
+
+    ``buffer_bytes`` is the full per-rank alltoall buffer (all n
+    destination blocks — the decision table's full-vector convention).
+    Consults the topology decision table (repro.topology).  Returns "xla"
+    (linear lax.all_to_all) when the nested-manual limitation applies:
+    new-jax Shardy rejects lax.axis_index inside a nested manual region,
+    which the log butterflies need for their step tables.
+    """
+    if not compat.NESTED_AXIS_INDEX_OK:
+        return "xla"
+    from repro.topology import select_backend
+    return select_backend("alltoall", n, buffer_bytes,
+                          topology or A2A_TOPOLOGY)
 
 
 def init_moe(key, cfg) -> dict:
@@ -65,6 +86,18 @@ def _route(router_w, cfg, xt):
     return gate_vals, gate_idx, aux
 
 
+def _model_axis_is_manual() -> bool:
+    """True when tracing inside a region that is already manual over the
+    model axis (0.4.x full-manual train step): the EP path's nested
+    shard_map over that axis cannot apply there — fall back to dense."""
+    from .sharding import MODEL_AXIS
+    try:
+        compat.axis_size(MODEL_AXIS)
+        return True
+    except Exception:
+        return False
+
+
 def moe(p, cfg, x) -> Tuple[jax.Array, jax.Array]:
     """x: [B, T, d] -> (out [B, T, d], aux_loss scalar)."""
     from . import sharding as sh
@@ -72,7 +105,7 @@ def moe(p, cfg, x) -> Tuple[jax.Array, jax.Array]:
     n = sh.model_parallel()
     B, T, d = x.shape
     EB = cfg.n_experts * cfg.ep_blocks
-    if n > 1 and EB % n == 0 and T % n == 0:
+    if n > 1 and EB % n == 0 and T % n == 0 and not _model_axis_is_manual():
         return _moe_ep(p, cfg, x, n)
     return _moe_dense(p, cfg, x)
 
@@ -140,7 +173,8 @@ def _moe_ep(p, cfg, x, n: int) -> Tuple[jax.Array, jax.Array]:
     # capacity per (source chip, dest chip): balanced-expert expectation
     # x cf headroom; static so the alltoall payload is fixed-size
     cap = max(int(math.ceil(NL * K * nb / n * cfg.capacity_factor)), 4)
-    payload = cap * d * jnp.dtype(cfg.dtype).itemsize
+    # full per-rank dispatch buffer: n destinations x cap slots x d
+    a2a = a2a_backend(n, n * cap * d * jnp.dtype(cfg.dtype).itemsize)
 
     def body(xl, router, wi, wg, wo, idx_arr):
         # xl: [B, T/n, d]; wi/wg: [Lb, d, ffb]; wo: [Lb, ffb, d]
@@ -176,13 +210,18 @@ def _moe_ep(p, cfg, x, n: int) -> Tuple[jax.Array, jax.Array]:
         send = send[:n * cap].reshape(n, cap, d)
         send_blk = send_blk[:n * cap].reshape(n, cap)
 
-        # ---- dispatch alltoall ----
-        # NOTE: inside this nested manual region we use lax.all_to_all for
-        # both regimes; the paper's log-vs-linear size switch (Sec. 4.4)
-        # lives in the top-level collectives API (coll.all_to_all "bine"),
-        # blocked here by the Shardy axis_index nesting limitation.
-        recv = lax.all_to_all(send, MODEL_AXIS, 0, 0, tiled=False)
-        recv_blk = lax.all_to_all(send_blk, MODEL_AXIS, 0, 0, tiled=False)
+        # ---- dispatch alltoall (selector-chosen algorithm) ----
+        # a2a comes from the topology decision table: the log butterflies
+        # for payloads/rank-counts where they are predicted faster, XLA's
+        # linear alltoall otherwise.  On new-jax Shardy, a2a_backend pins
+        # "xla" (lax.axis_index is rejected in nested manual regions).
+        if a2a == "xla":
+            recv = lax.all_to_all(send, MODEL_AXIS, 0, 0, tiled=False)
+            recv_blk = lax.all_to_all(send_blk, MODEL_AXIS, 0, 0, tiled=False)
+        else:
+            algo = "bruck" if a2a in ("bruck", "ring") else a2a
+            recv = coll.all_to_all(send, MODEL_AXIS, algo)
+            recv_blk = coll.all_to_all(send_blk, MODEL_AXIS, algo)
 
         # ---- local expert blocks ----
         idx0 = idx_arr[0] * Lb
@@ -203,7 +242,11 @@ def _moe_ep(p, cfg, x, n: int) -> Tuple[jax.Array, jax.Array]:
         y = y.reshape(n, cap, d).astype(xl.dtype)
 
         # ---- combine alltoall (reverse) ----
-        back = lax.all_to_all(y, MODEL_AXIS, 0, 0, tiled=False)
+        if a2a == "xla":
+            back = lax.all_to_all(y, MODEL_AXIS, 0, 0, tiled=False)
+        else:
+            back = coll.all_to_all(y, MODEL_AXIS,
+                                   "bruck" if a2a in ("bruck", "ring") else a2a)
         back = back.reshape(n * cap, d)
 
         # gather each (token,k,block) partial, weight, scatter-add
@@ -212,7 +255,7 @@ def _moe_ep(p, cfg, x, n: int) -> Tuple[jax.Array, jax.Array]:
         out = jnp.zeros((Nl, d), part.dtype).at[stok].add(part)
         return out.reshape(B, T // n, d), aux
 
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         body,
         in_specs=(P(None, MODEL_AXIS, None), P(), P(MODEL_AXIS, None, None),
                   P(MODEL_AXIS, None, None), P(MODEL_AXIS, None, None),

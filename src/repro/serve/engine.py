@@ -32,6 +32,10 @@ from repro.models import transformer as T
 class ServeConfig:
     dp_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
+    #: "auto" consults the topology decision table (repro.topology) to
+    #: build the serving collective plan; "xla" pins the GSPMD defaults.
+    backend: str = "auto"
+    topology: str = "tpu_multipod"
 
 
 def _dp(scfg: ServeConfig):
@@ -77,6 +81,42 @@ def cache_specs(model_cfg, scfg: ServeConfig, B: int, S_len: int, mesh):
     return {"segments": segs, "pos": P()}
 
 
+def collective_plan(model_cfg, scfg: ServeConfig, mesh, B: int) -> Dict[str, str]:
+    """Topology-aware backend recommendations for the serving collectives.
+
+    Decode runs in auto (GSPMD) mode, so these are advisory: they record,
+    per decode-step collective, which algorithm the cost model predicts
+    fastest on ``scfg.topology`` at this batch/model size.  Consumed by
+    benchmarks/monitoring (and by future manual-decode paths); returned as
+    ``shardings["plan"]`` from ``make_serve_fns``.
+    """
+    if scfg.backend != "auto":
+        return {}
+    from repro.topology import select_backend
+
+    n_tp = int(mesh.shape.get(scfg.model_axis, 1))
+    n_dp = int(np.prod([mesh.shape[a] for a in scfg.dp_axes]))
+    itemsize = jnp.dtype(model_cfg.dtype).itemsize
+    plan: Dict[str, str] = {}
+    if n_tp > 1:
+        # flash-decoding partial-softmax combine over the model axis
+        attn_bytes = B * model_cfg.n_heads * model_cfg.head_dim * itemsize
+        plan["decode_attn_allreduce"] = select_backend(
+            "allreduce", n_tp, attn_bytes, scfg.topology)
+        # vocab-sharded logits re-assembly for sampling
+        logit_bytes = B * model_cfg.vocab_size * 4
+        plan["logits_allgather"] = select_backend(
+            "allgather", n_tp, logit_bytes, scfg.topology)
+    if n_dp > 1:
+        # batched token scatter/gather between the frontend and the mesh
+        tok_bytes = B * 4
+        plan["token_scatter"] = select_backend(
+            "scatter", n_dp, tok_bytes, scfg.topology)
+        plan["token_gather"] = select_backend(
+            "gather", n_dp, tok_bytes, scfg.topology)
+    return plan
+
+
 def make_serve_fns(model_cfg, scfg: ServeConfig, mesh, B: int, S_len: int):
     """Returns (prefill_fn, decode_fn, shardings).
 
@@ -111,6 +151,7 @@ def make_serve_fns(model_cfg, scfg: ServeConfig, mesh, B: int, S_len: int):
     shardings = {
         "inputs": ns(in_spec),
         "state": state_shardings,
+        "plan": collective_plan(model_cfg, scfg, mesh, B),
     }
     return (jax.jit(prefill_fn, out_shardings=(None, state_shardings)),
             jax.jit(decode_fn, donate_argnums=(1,),

@@ -1,0 +1,28 @@
+"""Topology-aware collective backend auto-selection.
+
+The paper's central observation (Sec. 5, Fig. 8) is that no single
+collective algorithm wins everywhere: Bine minimizes global-link traffic,
+ring wins on bandwidth at scale, binomial/recursive-doubling wins the
+small/latency-bound regime.  This package closes the loop automatically:
+
+  * ``cost.predict_time``    — α-β/contention cost engine over the exact
+    per-step schedules from ``core.schedules`` on any topology preset;
+  * ``table.DecisionTable``  — a precomputed, JSON-serializable mapping
+    ``(collective, p, size-bucket) -> backend``, cached on disk and loaded
+    without re-simulation;
+  * ``table.select_backend`` — the trace-time entry point behind
+    ``CollectiveConfig(backend="auto")`` in ``collectives.api``.
+"""
+
+from .cost import (CANDIDATES, SMALL_CUTOFF_BYTES, predict_time,
+                   schedule_algo)
+from .presets import PRESETS, get_topology, torus_dims
+from .table import (P_GRID, SIZE_BUCKETS, DecisionTable, build_table,
+                    load_table, select_backend, table_path)
+
+__all__ = [
+    "CANDIDATES", "SMALL_CUTOFF_BYTES", "predict_time", "schedule_algo",
+    "PRESETS", "get_topology", "torus_dims",
+    "P_GRID", "SIZE_BUCKETS", "DecisionTable", "build_table", "load_table",
+    "select_backend", "table_path",
+]

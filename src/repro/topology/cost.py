@@ -1,0 +1,123 @@
+"""``predict_time``: the α-β/contention cost engine behind backend="auto".
+
+Maps an API-level backend name (what ``collectives.api`` dispatches on) to
+the exact per-step schedule ``core.schedules`` would execute for it at a
+given vector size, then prices that schedule on a topology with the
+contention-aware models from ``core.traffic`` (``sched_time`` for grouped
+topologies, ``torus_time`` for tori).
+
+The small/large switch mirrors ``collectives.api``: vectors of
+``nbytes <= small_cutoff_bytes`` (inclusive boundary) run the small-vector
+variants (full-vector recursive doubling for allreduce, plain trees for
+broadcast/reduce), larger ones the scatter/allgather composites.
+
+The ``xla`` backend cannot be scheduled step-by-step from here, so it is
+priced through documented proxies: XLA's allreduce/reduce-scatter/allgather
+lowering on a torus is ring-based, its alltoall is linear (Bruck-priced),
+and its rooted collectives are emulated in ``collectives.api`` via masked
+psum (priced as a recursive-doubling allreduce).  Proxies are good enough
+for benchmark comparison; ``xla`` is intentionally *not* in ``CANDIDATES``,
+the set the decision table minimizes over, so model error in the proxies
+can never leak into auto-selection.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict, Tuple, Union
+
+from repro.core.schedules import Sched, get_schedule
+from repro.core.traffic import GroupedTopo, TorusTopo, sched_time, torus_time
+
+#: default small/large switch, kept in sync with CollectiveConfig
+SMALL_CUTOFF_BYTES = 16384
+
+#: (collective, backend) -> (schedule collective, small algo, large algo)
+#: — the schedule collective differs from the API collective only for the
+#: xla emulation proxies.
+_SCHED_ALGO: Dict[Tuple[str, str], Tuple[str, str, str]] = {
+    ("allreduce", "bine"): ("allreduce", "bine_small", "bine"),
+    ("allreduce", "recdoub"): ("allreduce", "recdoub_small", "recdoub"),
+    ("allreduce", "ring"): ("allreduce", "ring", "ring"),
+    ("allreduce", "xla"): ("allreduce", "ring", "ring"),
+
+    ("reduce_scatter", "bine"): ("reduce_scatter", "bine", "bine"),
+    ("reduce_scatter", "recdoub"): ("reduce_scatter", "recdoub", "recdoub"),
+    ("reduce_scatter", "ring"): ("reduce_scatter", "ring", "ring"),
+    ("reduce_scatter", "xla"): ("reduce_scatter", "ring", "ring"),
+
+    ("allgather", "bine"): ("allgather", "bine", "bine"),
+    ("allgather", "recdoub"): ("allgather", "recdoub", "recdoub"),
+    ("allgather", "ring"): ("allgather", "ring", "ring"),
+    ("allgather", "xla"): ("allgather", "ring", "ring"),
+
+    ("alltoall", "bine"): ("alltoall", "bine", "bine"),
+    ("alltoall", "recdoub"): ("alltoall", "recdoub", "recdoub"),
+    ("alltoall", "bruck"): ("alltoall", "bruck", "bruck"),
+    ("alltoall", "ring"): ("alltoall", "bruck", "bruck"),
+    ("alltoall", "xla"): ("alltoall", "bruck", "bruck"),
+
+    ("broadcast", "bine"): ("broadcast", "bine", "bine_large"),
+    ("broadcast", "recdoub"): ("broadcast", "binomial_dh", "binomial_large"),
+    ("broadcast", "xla"): ("allreduce", "recdoub_small", "recdoub"),
+
+    ("reduce", "bine"): ("reduce", "bine", "bine_large"),
+    ("reduce", "recdoub"): ("reduce", "binomial_dh", "binomial_large"),
+    ("reduce", "xla"): ("allreduce", "recdoub_small", "recdoub"),
+
+    ("gather", "bine"): ("gather", "bine", "bine"),
+    ("gather", "recdoub"): ("gather", "binomial", "binomial"),
+    ("gather", "xla"): ("allgather", "recdoub", "recdoub"),
+
+    ("scatter", "bine"): ("scatter", "bine", "bine"),
+    ("scatter", "recdoub"): ("scatter", "binomial", "binomial"),
+    ("scatter", "xla"): ("allreduce", "recdoub_small", "recdoub"),
+}
+
+#: backends the decision table minimizes over, per collective.  Every name
+#: is dispatchable by ``collectives.api`` (for the rooted collectives,
+#: "recdoub" selects the classical binomial-tree family there).
+CANDIDATES: Dict[str, Tuple[str, ...]] = {
+    "allreduce": ("bine", "recdoub", "ring"),
+    "reduce_scatter": ("bine", "recdoub", "ring"),
+    "allgather": ("bine", "recdoub", "ring"),
+    "alltoall": ("bine", "recdoub", "bruck"),
+    "broadcast": ("bine", "recdoub"),
+    "reduce": ("bine", "recdoub"),
+    "gather": ("bine", "recdoub"),
+    "scatter": ("bine", "recdoub"),
+}
+
+
+def schedule_algo(collective: str, backend: str, nbytes: float,
+                  small_cutoff_bytes: int = SMALL_CUTOFF_BYTES
+                  ) -> Tuple[str, str]:
+    """(schedule collective, algo name) that ``backend`` would execute."""
+    try:
+        sched_coll, small, large = _SCHED_ALGO[(collective, backend)]
+    except KeyError:
+        raise ValueError(
+            f"no cost model for backend {backend!r} on {collective!r}")
+    return sched_coll, (small if nbytes <= small_cutoff_bytes else large)
+
+
+@lru_cache(maxsize=4096)
+def _cached_schedule(collective: str, algo: str, p: int) -> Sched:
+    return get_schedule(collective, algo, p)
+
+
+def predict_time(collective: str, backend: str, p: int, nbytes: float,
+                 topo: Union[GroupedTopo, TorusTopo],
+                 small_cutoff_bytes: int = SMALL_CUTOFF_BYTES) -> float:
+    """Modeled completion time (seconds) of one collective invocation.
+
+    ``nbytes`` is the *full-vector* payload (the convention of
+    ``core.traffic.msg_bytes``); ``p`` must be a power of two, like every
+    schedule in ``core.schedules``.
+    """
+    sched_coll, algo = schedule_algo(collective, backend, nbytes,
+                                     small_cutoff_bytes)
+    sched = _cached_schedule(sched_coll, algo, p)
+    if isinstance(topo, TorusTopo):
+        return torus_time(sched, p, float(nbytes), topo)
+    return sched_time(sched, p, float(nbytes), topo)

@@ -1,0 +1,50 @@
+"""Named topology presets the auto-selector builds decision tables for.
+
+The grouped presets are the paper's four measured systems plus the TPU
+multi-pod target (all defined in ``core.traffic``); ``torus`` is the
+Fugaku-like d-dimensional torus, materialized per rank count because hop
+distances depend on the torus dimensions.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+from repro.core.traffic import (LEONARDO, LUMI, MARENOSTRUM5, TPU_MULTIPOD,
+                                GroupedTopo, TorusTopo)
+
+GROUPED_PRESETS = {
+    "lumi": LUMI,
+    "leonardo": LEONARDO,
+    "marenostrum5": MARENOSTRUM5,
+    "tpu_multipod": TPU_MULTIPOD,
+}
+
+#: every preset name accepted by ``get_topology`` / ``build_table``
+PRESETS: Tuple[str, ...] = tuple(sorted(GROUPED_PRESETS)) + ("torus",)
+
+Topo = Union[GroupedTopo, TorusTopo]
+
+
+def torus_dims(p: int, ndims: int = 3) -> Tuple[int, ...]:
+    """Near-balanced power-of-two torus factorization of ``p``.
+
+    Distributes the log2 factors round-robin so the dims differ by at most
+    one power of two, e.g. 64 -> (4, 4, 4), 32 -> (4, 4, 2), 8 -> (2, 2, 2).
+    """
+    if p <= 0 or p & (p - 1):
+        raise ValueError(f"torus preset needs a power-of-two p, got {p}")
+    dims = [1] * ndims
+    s = p.bit_length() - 1
+    for i in range(s):
+        dims[i % ndims] *= 2
+    return tuple(sorted(dims, reverse=True))
+
+
+def get_topology(name: str, p: int) -> Topo:
+    """Resolve a preset name (and rank count, for the torus) to a topology."""
+    if name in GROUPED_PRESETS:
+        return GROUPED_PRESETS[name]
+    if name == "torus":
+        return TorusTopo("torus", torus_dims(p))
+    raise KeyError(f"unknown topology preset {name!r}; known: {PRESETS}")

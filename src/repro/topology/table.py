@@ -1,0 +1,199 @@
+"""Precomputed decision tables: ``(collective, p, size-bucket) -> backend``.
+
+A table is built once per topology preset by brute-force argmin of
+``cost.predict_time`` over ``cost.CANDIDATES`` on a (p, size) grid, then
+serialized to JSON so production tracing never re-runs the simulator.
+
+On-disk format (see README for the worked example)::
+
+    {
+      "format": 1,
+      "topology": "tpu_multipod",
+      "small_cutoff_bytes": 16384,
+      "ps": [4, 8, ...],
+      "size_buckets": [256, 1024, ...],      # inclusive upper edges, bytes
+      "entries": {"allreduce": {"4": ["recdoub", ...]}, ...}
+    }
+
+``entries[collective][str(p)][i]`` is the backend for vectors whose payload
+falls in bucket ``i`` (``nbytes <= size_buckets[i]``, first match; larger
+payloads use the last bucket).  Lookups for a rank count not on the grid
+snap to the nearest grid point in log-space.
+
+Tables for all presets ship with the package under ``topology/tables/``;
+``load_table`` falls back to building (and caching) one on first use for
+anything else.  ``REPRO_TABLE_DIR`` overrides the cache directory.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from bisect import bisect_left
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .cost import CANDIDATES, SMALL_CUTOFF_BYTES, predict_time
+from .presets import PRESETS, get_topology
+
+_FORMAT = 1
+
+#: rank-count grid: powers of two, the domain of every paper schedule
+P_GRID: Tuple[int, ...] = (4, 8, 16, 32, 64, 128)
+
+#: inclusive upper edges (bytes) of the payload buckets: 256 B .. 256 MiB
+SIZE_BUCKETS: Tuple[int, ...] = tuple(1 << k for k in range(8, 29, 2))
+
+
+@dataclass(frozen=True)
+class DecisionTable:
+    topology: str
+    small_cutoff_bytes: int
+    ps: Tuple[int, ...]
+    size_buckets: Tuple[int, ...]
+    # collective -> p -> [backend per size bucket]
+    entries: Dict[str, Dict[int, Tuple[str, ...]]]
+
+    # -- lookup ------------------------------------------------------------
+
+    def bucket_of(self, nbytes: float) -> int:
+        i = bisect_left(self.size_buckets, nbytes)
+        return min(i, len(self.size_buckets) - 1)
+
+    def nearest_p(self, p: int) -> int:
+        if p in self.ps:
+            return p
+        lg = math.log2(max(p, 1))
+        return min(self.ps, key=lambda q: (abs(math.log2(q) - lg), -q))
+
+    def lookup(self, collective: str, p: int, nbytes: float) -> str:
+        per_p = self.entries[collective]
+        q = p if p in per_p else self.nearest_p(p)
+        return per_p[q][self.bucket_of(nbytes)]
+
+    # -- (de)serialization -------------------------------------------------
+
+    def to_json_dict(self) -> dict:
+        return {
+            "format": _FORMAT,
+            "topology": self.topology,
+            "small_cutoff_bytes": self.small_cutoff_bytes,
+            "ps": list(self.ps),
+            "size_buckets": list(self.size_buckets),
+            "entries": {c: {str(p): list(row) for p, row in per_p.items()}
+                        for c, per_p in self.entries.items()},
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "DecisionTable":
+        if d.get("format") != _FORMAT:
+            raise ValueError(f"unsupported decision-table format {d.get('format')!r}")
+        return cls(
+            topology=d["topology"],
+            small_cutoff_bytes=int(d["small_cutoff_bytes"]),
+            ps=tuple(int(p) for p in d["ps"]),
+            size_buckets=tuple(int(s) for s in d["size_buckets"]),
+            entries={c: {int(p): tuple(row) for p, row in per_p.items()}
+                     for c, per_p in d["entries"].items()},
+        )
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "DecisionTable":
+        with open(path) as f:
+            return cls.from_json_dict(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Building
+# ---------------------------------------------------------------------------
+
+def build_table(topology: str,
+                ps: Tuple[int, ...] = P_GRID,
+                size_buckets: Tuple[int, ...] = SIZE_BUCKETS,
+                small_cutoff_bytes: int = SMALL_CUTOFF_BYTES) -> DecisionTable:
+    """Brute-force argmin of ``predict_time`` over the candidate backends.
+
+    Each bucket is priced at its upper edge; ties break toward the earlier
+    entry in ``CANDIDATES[collective]`` (deterministic across rebuilds).
+    """
+    entries: Dict[str, Dict[int, Tuple[str, ...]]] = {}
+    for collective, cands in CANDIDATES.items():
+        per_p: Dict[int, Tuple[str, ...]] = {}
+        for p in ps:
+            topo = get_topology(topology, p)
+            row: List[str] = []
+            for edge in size_buckets:
+                best = min(cands, key=lambda b: predict_time(
+                    collective, b, p, edge, topo, small_cutoff_bytes))
+                row.append(best)
+            per_p[p] = tuple(row)
+        entries[collective] = per_p
+    return DecisionTable(topology=topology,
+                         small_cutoff_bytes=small_cutoff_bytes,
+                         ps=tuple(ps), size_buckets=tuple(size_buckets),
+                         entries=entries)
+
+
+# ---------------------------------------------------------------------------
+# Disk cache + process-level cache
+# ---------------------------------------------------------------------------
+
+_PACKAGED_DIR = os.path.join(os.path.dirname(__file__), "tables")
+_LOADED: Dict[str, DecisionTable] = {}
+
+
+def _cache_dir() -> str:
+    env = os.environ.get("REPRO_TABLE_DIR")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-bine",
+                        "tables")
+
+
+def table_path(topology: str, cache_dir: Optional[str] = None) -> str:
+    """Resolve where ``topology``'s table lives (packaged file wins)."""
+    fname = f"{topology}.json"
+    packaged = os.path.join(_PACKAGED_DIR, fname)
+    if cache_dir is None and os.path.exists(packaged):
+        return packaged
+    return os.path.join(cache_dir or _cache_dir(), fname)
+
+
+def load_table(topology: str, cache_dir: Optional[str] = None,
+               build_if_missing: bool = True) -> DecisionTable:
+    """Load a preset's table from disk, building + caching it if absent."""
+    path = table_path(topology, cache_dir)
+    if os.path.exists(path):
+        return DecisionTable.load(path)
+    if not build_if_missing:
+        raise FileNotFoundError(path)
+    if topology not in PRESETS:
+        raise KeyError(f"unknown topology preset {topology!r}; known: {PRESETS}")
+    table = build_table(topology)
+    try:
+        table.save(path)
+    except OSError:
+        pass  # read-only installs still work, just without the disk cache
+    return table
+
+
+def select_backend(collective: str, p: int, nbytes: float,
+                   topology: str = "tpu_multipod") -> str:
+    """The ``backend="auto"`` entry point: table lookup, cached per process.
+
+    Called at trace time (shapes are static under jit/shard_map), so the
+    lookup has zero runtime cost in the compiled program.
+    """
+    table = _LOADED.get(topology)
+    if table is None:
+        table = _LOADED[topology] = load_table(topology)
+    return table.lookup(collective, p, nbytes)

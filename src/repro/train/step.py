@@ -29,6 +29,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.collectives import shmap
 from repro.models import transformer as T
 from repro.models.sharding import constrain_params, param_specs
@@ -38,13 +39,17 @@ from repro.train import zero
 
 @dataclass(frozen=True)
 class TrainConfig:
-    backend: str = "bine"            # bine | recdoub | ring | xla | bine_hier
+    backend: str = "bine"            # bine | recdoub | ring | xla | bine_hier | auto
     dp_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
     accum_steps: int = 1
     clip_norm: float = 1.0
     wire_dtype: str = "float32"      # float32 | bfloat16 (gradient compression)
     adamw: AdamWConfig = AdamWConfig()
+    #: decision-table preset consulted when backend == "auto"
+    topology: str = "tpu_multipod"
+    #: small/large allreduce switch (inclusive), bytes of the wire dtype
+    small_cutoff_bytes: int = 16384
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -62,12 +67,30 @@ class TrainConfig:
 # Gradient collectives (per-leaf, dim-general)
 # ---------------------------------------------------------------------------
 
+def _backend_for(tcfg: TrainConfig, collective: str, arr,
+                 gathered: bool = False) -> str:
+    """Concrete backend for one gradient collective.
+
+    backend="auto" consults the topology decision table at trace time
+    (static shapes; zero runtime cost) with the flattened DP rank count
+    and the leaf's FULL-vector payload (the table's byte convention) —
+    the general mechanism that replaces the old hard-coded element-count
+    cutoff.  ``gathered=True`` marks call sites whose ``arr`` is one
+    rank's shard (the allgather input), scaled up by the DP size."""
+    if tcfg.backend != "auto":
+        return tcfg.backend
+    from repro.topology import select_backend
+    p = shmap.axis_size(tcfg.dp_axes)
+    nbytes = arr.size * arr.dtype.itemsize * (p if gathered else 1)
+    return select_backend(collective, p, nbytes, tcfg.topology)
+
+
 def _rs_leaf(tcfg: TrainConfig, g, zd: int):
     """Reduce over DP ranks; scatter along zd (or full allreduce if zd<0)."""
     axes = tcfg.dp_axes
     wire = g.astype(jnp.dtype(tcfg.wire_dtype))
-    b = tcfg.backend
     if zd < 0:
+        b = _backend_for(tcfg, "allreduce", wire)
         if b == "xla":
             return lax.psum(wire, axes)
         if b == "ring":
@@ -75,9 +98,11 @@ def _rs_leaf(tcfg: TrainConfig, g, zd: int):
         if b == "bine_hier" and len(axes) > 1:
             return shmap.allreduce_hierarchical(wire, axes[1:], axes[0], "bine")
         algo = {"bine": "bine", "recdoub": "recdoub"}.get(b, "bine")
-        if wire.size <= 4096:
+        # inclusive boundary, matching CollectiveConfig.small_cutoff_bytes
+        if wire.size * wire.dtype.itemsize <= tcfg.small_cutoff_bytes:
             return shmap.allreduce_small(wire, axes, algo)
         return shmap.allreduce_butterfly(wire, axes, algo)
+    b = _backend_for(tcfg, "reduce_scatter", wire)
     if b == "xla":
         return lax.psum_scatter(wire, axes, scatter_dimension=zd, tiled=True)
     if b == "bine_hier" and len(axes) > 1:
@@ -95,7 +120,7 @@ def _ag_leaf(tcfg: TrainConfig, x, zd: int):
     if zd < 0:
         return x
     axes = tcfg.dp_axes
-    b = tcfg.backend
+    b = _backend_for(tcfg, "allgather", x, gathered=True)
     if b == "xla":
         return lax.all_gather(x, axes, axis=zd, tiled=True)
     if b == "bine_hier" and len(axes) > 1:
@@ -108,9 +133,11 @@ def _ag_leaf(tcfg: TrainConfig, x, zd: int):
 
 
 def _scalar_allreduce(tcfg: TrainConfig, x):
-    if tcfg.backend == "xla":
+    b = _backend_for(tcfg, "allreduce", x)
+    if b == "xla":
         return lax.psum(x, tcfg.dp_axes)
-    return shmap.allreduce_small(x, tcfg.dp_axes, "bine")
+    algo = "recdoub" if b == "recdoub" else "bine"
+    return shmap.allreduce_small(x, tcfg.dp_axes, algo)
 
 
 # ---------------------------------------------------------------------------
@@ -170,7 +197,24 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
 
     dp = tcfg.dp_axes if len(tcfg.dp_axes) > 1 else tcfg.dp_axes[0]
 
-    def body(params, state, batch):
+    def body(params, state, batch, ranks):
+        # ranks[a] is this shard's index along manual axis a, passed as data
+        # (a sharded arange): lax.axis_index of a manual axis does not lower
+        # under partial-auto shard_map on jax 0.4.x (PartitionId) nor inside
+        # nested manual regions on new jax (Shardy) — see shmap.axis_index_hints.
+        with shmap.axis_index_hints({a: r[0] for a, r in ranks.items()}):
+            if compat.HAS_NATIVE_SHARD_MAP:
+                return _body_inner(params, state, batch)
+            # 0.4.x: partial-auto cannot lower our collectives (ppermute
+            # of a manual axis crashes the SPMD partitioner), so the body
+            # runs fully manual (see _manual_axes) and model-axis GSPMD
+            # parallelism degrades to replication.  Sharding hints would
+            # reference a now-manual axis — drop them (layout only,
+            # numerics-free).
+            with _sh.constraint_hints_disabled():
+                return _body_inner(params, state, batch)
+
+    def _body_inner(params, state, batch):
         params = constrain_params(model_cfg, params)
         opt, step = state["opt"], state["step"]
 
@@ -257,15 +301,20 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
     batch_in = jax.tree.map(lambda _: P(dp), {"inputs": 0, "targets": 0})
     metrics_out = P()
 
-    smapped = jax.shard_map(
+    rank_in = {a: P(a) for a in tcfg.dp_axes}
+    smapped = compat.shard_map(
         body, mesh=mesh,
-        in_specs=(param_in, state_in, batch_in),
+        in_specs=(param_in, state_in, batch_in, rank_in),
         out_specs=(param_in, state_in,
                    {"loss": metrics_out, "ce": metrics_out,
                     "z_loss": metrics_out, "aux_loss": metrics_out,
                     "tokens": metrics_out, "grad_norm": metrics_out,
                     "lr": metrics_out}),
-        axis_names=set(tcfg.dp_axes), check_vma=False)
+        axis_names=_manual_axes(tcfg, mesh), check_vma=False)
+
+    def stepped(params, state, batch):
+        ranks = _rank_arrays(tcfg, mesh)
+        return smapped(params, state, batch, ranks)
 
     # outer-jit shardings (also used by the dry-run's ShapeDtypeStructs)
     def ns(spec):
@@ -281,8 +330,28 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
         "state": {"opt": opt_sharding, "step": ns(P())},
         "batch": {"inputs": ns(P(dp)), "targets": ns(P(dp))},
     }
-    jitted = jax.jit(smapped, donate_argnums=(0, 1))
+    jitted = jax.jit(stepped, donate_argnums=(0, 1))
     return jitted, shardings, layout
+
+
+def _rank_arrays(tcfg: TrainConfig, mesh):
+    """Per-axis arange inputs backing shmap.axis_index_hints."""
+    return {a: jnp.arange(mesh.shape[a], dtype=jnp.int32)
+            for a in tcfg.dp_axes}
+
+
+def _manual_axes(tcfg: TrainConfig, mesh):
+    """Manual axes of the step's shard_map.
+
+    Modern jax: the DP axes only (partial-auto; "model" stays under
+    GSPMD).  jax 0.4.x: ALL axes — its SPMD partitioner cannot lower
+    collective-permute inside a partial-auto region, so the model axis
+    goes manual too and tensor parallelism degrades to replication
+    (numerics unchanged; the Bine DP collectives are the point here).
+    """
+    if compat.HAS_NATIVE_SHARD_MAP:
+        return set(tcfg.dp_axes)
+    return set(mesh.axis_names)
 
 
 def _merge_spec(model_spec, zd: int, dp_axes, ndim: int):
@@ -309,12 +378,16 @@ def make_init_fns(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
     def init_p(key):
         return constrain_params(model_cfg, T.init_params(key, model_cfg))
 
-    def init_s(params):
-        return init_train_state_spmd(model_cfg, tcfg, params, n_dp)
+    def init_s(params, ranks):
+        with shmap.axis_index_hints({a: r[0] for a, r in ranks.items()}):
+            return init_train_state_spmd(model_cfg, tcfg, params, n_dp)
 
     init_params_fn = jax.jit(init_p)
-    init_state_fn = jax.jit(jax.shard_map(
-        init_s, mesh=mesh, in_specs=(param_in,),
+    rank_in = {a: P(a) for a in tcfg.dp_axes}
+    smapped_init = compat.shard_map(
+        init_s, mesh=mesh, in_specs=(param_in, rank_in),
         out_specs={"opt": opt_manual, "step": P()},
-        axis_names=set(tcfg.dp_axes), check_vma=False))
+        axis_names=_manual_axes(tcfg, mesh), check_vma=False)
+    init_state_fn = jax.jit(
+        lambda params: smapped_init(params, _rank_arrays(tcfg, mesh)))
     return init_params_fn, init_state_fn

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim for the property-based tests in tests/core.
+
+``from _hyp import given, settings, strategies`` behaves exactly like the
+real hypothesis when it is installed.  When it is not (offline / minimal
+environments), ``@given(...)`` turns the test into a pytest skip and the
+strategy objects become inert placeholders, so worked-example tests in the
+same files keep running and collection never errors.
+"""
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert stand-in: absorbs any attribute access / call chain."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    strategies = _Strategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -1,7 +1,7 @@
 """Tree construction properties: cover, uniqueness, paper figures."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import negabinary as nb
 from repro.core import trees as tr

@@ -13,6 +13,7 @@ from repro.models.sharding import param_specs
 from repro.train.step import TrainConfig, make_train_step
 from repro.serve.engine import ServeConfig, make_serve_fns, cache_specs
 from repro.launch import hlo as H
+from repro.compat import set_mesh
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = base.reduced(base.get_config("qwen3-32b"))
@@ -34,7 +35,7 @@ state_sds = jax.tree.map(lambda l, s: sds(l.shape, l.dtype, s),
 B, S = 8, 64
 batch_sds = {"inputs": sds((B, S), jnp.int32, shardings["batch"]["inputs"]),
              "targets": sds((B, S), jnp.int32, shardings["batch"]["targets"])}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     lowered = step_fn.lower(params_sds, state_sds, batch_sds)
     compiled = lowered.compile()
 mem = compiled.memory_analysis()
@@ -56,7 +57,7 @@ state_sds = {
   "pos": sds((), jnp.int32, NamedSharding(mesh, P())),
 }
 tok = sds((B, 1), jnp.int32, NamedSharding(mesh, P(("pod", "data"))))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     dec = decode_fn.lower(params_sds, state_sds, tok).compile()
 assert dec.memory_analysis() is not None
 print("ALL_OK")

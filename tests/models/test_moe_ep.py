@@ -6,6 +6,7 @@ CODE = r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import base
 from repro.models import moe as M, sharding as sh
+from repro.compat import set_mesh
 
 mesh = jax.make_mesh((1, 1, 8), ("pod", "data", "model"))
 key = jax.random.key(0)
@@ -23,7 +24,7 @@ for E, nb, K in ((8, 2, 2), (16, 1, 2), (8, 1, 1)):
     sh.set_model_parallel(1)
     ref, aux_ref = jax.jit(lambda p, x: M.moe(p, cfg, x))(p, x)
     sh.set_model_parallel(8)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         got, aux_got = jax.jit(lambda p, x: M.moe(p, cfg, x))(p, x)
     diff = np.abs(np.asarray(got, np.float32) - np.asarray(ref, np.float32))
     # near-tie router logits can flip a token's argmax between the two

@@ -6,6 +6,7 @@ CODE = r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import base
 from repro.models import transformer as T, sharding as sh
+from repro.compat import set_mesh
 
 mesh = jax.make_mesh((1, 1, 8), ("pod", "data", "model"))
 key = jax.random.key(0)
@@ -16,7 +17,7 @@ def run(cfg, n_model, params, inputs):
     if n_model == 1:
         out, _ = jax.jit(lambda p, i: T.forward(p, cfg, i))(params, inputs)
     else:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             out, _ = jax.jit(lambda p, i: T.forward(p, cfg, i))(params, inputs)
     return np.asarray(out, np.float32)
 

@@ -1,0 +1,165 @@
+"""Auto-selector: decision tables vs brute-force argmin + simulate oracles."""
+
+import json
+import os
+
+import pytest
+
+from repro.collectives import api
+from repro.core import simulate
+from repro.topology import (CANDIDATES, P_GRID, SIZE_BUCKETS, DecisionTable,
+                            PRESETS, build_table, get_topology, load_table,
+                            predict_time, schedule_algo, select_backend,
+                            table_path)
+
+TEST_PS = (4, 8, 16, 64)
+TEST_SIZES = (1 << 10, 1 << 14, 1 << 20, 1 << 26)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return {name: build_table(name, ps=TEST_PS, size_buckets=TEST_SIZES)
+            for name in PRESETS}
+
+
+def test_table_matches_bruteforce_argmin(tables):
+    """Every entry equals the argmin of predict_time over the candidates."""
+    for name, tab in tables.items():
+        for coll, cands in CANDIDATES.items():
+            for p in TEST_PS:
+                topo = get_topology(name, p)
+                for i, edge in enumerate(TEST_SIZES):
+                    times = {b: predict_time(coll, b, p, edge, topo)
+                             for b in cands}
+                    best = tab.entries[coll][p][i]
+                    assert times[best] == min(times.values()), (
+                        name, coll, p, edge, times, best)
+
+
+def test_chosen_schedules_pass_simulate_oracle(tables):
+    """The schedule behind every selected backend executes correctly."""
+    checked = set()
+    for name, tab in tables.items():
+        for coll, per_p in tab.entries.items():
+            for p, row in per_p.items():
+                for edge, backend in zip(TEST_SIZES, row):
+                    sched_coll, algo = schedule_algo(coll, backend, edge)
+                    key = (sched_coll, algo, p)
+                    if key in checked:
+                        continue
+                    checked.add(key)
+                    simulate.check(sched_coll, algo, p)
+    assert checked  # sanity: the loop exercised something
+
+
+def test_serialization_roundtrip(tmp_path, tables):
+    tab = tables["tpu_multipod"]
+    path = os.path.join(tmp_path, "t.json")
+    tab.save(path)
+    back = DecisionTable.load(path)
+    assert back == tab
+    with open(path) as f:
+        d = json.load(f)
+    assert d["format"] == 1 and d["topology"] == "tpu_multipod"
+
+
+def test_packaged_tables_load_without_rebuild():
+    for name in PRESETS:
+        path = table_path(name)
+        assert os.path.exists(path), f"packaged table missing for {name}"
+        tab = load_table(name, build_if_missing=False)
+        assert tab.topology == name
+        assert tab.ps == P_GRID and tab.size_buckets == SIZE_BUCKETS
+        for coll, cands in CANDIDATES.items():
+            for p in tab.ps:
+                for b in tab.entries[coll][p]:
+                    assert b in cands, (name, coll, p, b)
+
+
+def test_packaged_table_is_current():
+    """The shipped lumi table equals a fresh rebuild (guards staleness)."""
+    assert load_table("lumi", build_if_missing=False) == build_table("lumi")
+
+
+def test_lookup_snapping():
+    tab = build_table("tpu_multipod", ps=TEST_PS, size_buckets=TEST_SIZES)
+    # off-grid p snaps to nearest power of two in log space
+    assert tab.nearest_p(6) == 8
+    assert tab.nearest_p(1000) == 64
+    # oversized payloads clamp to the last bucket
+    assert tab.bucket_of(1 << 40) == len(TEST_SIZES) - 1
+    assert tab.lookup("allreduce", 6, 1 << 40) in CANDIDATES["allreduce"]
+
+
+def test_resolve_backend_all_collectives_all_presets():
+    """backend="auto" resolves to a dispatchable backend everywhere."""
+    for name in PRESETS:
+        cfg = api.CollectiveConfig(backend="auto", topology=name)
+        for coll, cands in CANDIDATES.items():
+            for p in TEST_PS:
+                for nbytes in (512, 1 << 16, 1 << 22):
+                    b = api.resolve_backend(coll, p, nbytes, cfg)
+                    assert b in cands, (name, coll, p, nbytes, b)
+
+
+def test_fixed_backend_resolution_is_identity():
+    cfg = api.CollectiveConfig(backend="ring")
+    assert api.resolve_backend("allreduce", 8, 1 << 20, cfg) == "ring"
+
+
+def test_allreduce_cutoff_boundary_inclusive():
+    cfg = api.CollectiveConfig(small_cutoff_bytes=16384)
+    assert api.allreduce_uses_small(16384, cfg)          # == cutoff: small
+    assert not api.allreduce_uses_small(16385, cfg)      # one past: large
+    assert api.allreduce_uses_small(0, cfg)
+    # the cost engine mirrors the same inclusive boundary
+    assert schedule_algo("allreduce", "bine", 16384)[1] == "bine_small"
+    assert schedule_algo("allreduce", "bine", 16385)[1] == "bine"
+
+
+def test_predict_time_positive_and_monotone_in_size():
+    for name in PRESETS:
+        topo = get_topology(name, 16)
+        for coll, cands in CANDIDATES.items():
+            for b in cands:
+                t_small = predict_time(coll, b, 16, 1 << 12, topo)
+                t_big = predict_time(coll, b, 16, 1 << 24, topo)
+                assert 0 < t_small <= t_big, (name, coll, b, t_small, t_big)
+
+
+def test_serve_collective_plan():
+    from types import SimpleNamespace
+
+    from repro.configs import base
+    from repro.serve.engine import ServeConfig, collective_plan
+
+    cfg = base.get_config("qwen3-32b")
+    mesh = SimpleNamespace(shape={"pod": 2, "data": 2, "model": 4})
+    scfg = ServeConfig(dp_axes=("pod", "data"))
+    plan = collective_plan(cfg, scfg, mesh, B=8)
+    assert set(plan) == {"decode_attn_allreduce", "logits_allgather",
+                         "token_scatter", "token_gather"}
+    for coll, b in [("allreduce", plan["decode_attn_allreduce"]),
+                    ("allgather", plan["logits_allgather"]),
+                    ("scatter", plan["token_scatter"]),
+                    ("gather", plan["token_gather"])]:
+        assert b in CANDIDATES[coll]
+    # pinning a fixed backend disables the advisory plan
+    assert collective_plan(cfg, ServeConfig(backend="xla"), mesh, 8) == {}
+
+
+def test_moe_a2a_backend_valid():
+    from repro.models.moe import a2a_backend
+
+    assert a2a_backend(8, 1 << 12) in ("xla",) + CANDIDATES["alltoall"]
+    assert a2a_backend(8, 1 << 24) in ("xla",) + CANDIDATES["alltoall"]
+
+
+def test_train_backend_for_auto():
+    """TrainConfig(backend="auto") resolves per-leaf outside shard_map via
+    the same table the API uses (axis-size path exercised in the 8-dev
+    subprocess test)."""
+    from repro.topology import select_backend as sb
+
+    for coll in ("allreduce", "reduce_scatter", "allgather"):
+        assert sb(coll, 4, 1 << 20, "tpu_multipod") in CANDIDATES[coll]

@@ -7,6 +7,7 @@ import jax, numpy as np
 from repro.configs import base
 from repro.models import transformer as T
 from repro.train.step import TrainConfig, make_train_step, make_init_fns
+from repro.compat import set_mesh
 from repro.train.data import DataConfig, make_batch
 from repro.optim.adamw import AdamWConfig
 
@@ -18,11 +19,11 @@ params_shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
 dcfg = DataConfig(global_batch=8, seq_len=64, vocab_size=cfg.vocab_size)
 
 results = {}
-for backend in ("bine", "xla", "bine_hier"):
+for backend in ("bine", "xla", "bine_hier", "auto"):
     tcfg = TrainConfig(backend=backend, dp_axes=("pod", "data"), adamw=acfg)
     step_fn, shardings, layout = make_train_step(cfg, tcfg, mesh, params_shapes)
     init_p, init_s = make_init_fns(cfg, tcfg, mesh, params_shapes)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_p(key)
         state = init_s(params)
         losses = []
@@ -35,7 +36,7 @@ for backend in ("bine", "xla", "bine_hier"):
     assert losses[-1] < losses[0] - 0.05, (backend, losses)
     assert all(np.isfinite(losses)), (backend, losses)
     results[backend] = losses
-for b in ("xla", "bine_hier"):
+for b in ("xla", "bine_hier", "auto"):
     diff = max(abs(a - c) for a, c in zip(results["bine"], results[b]))
     assert diff < 0.05, (b, diff)
 
@@ -44,7 +45,7 @@ tcfg = TrainConfig(backend="bine", dp_axes=("pod", "data"), adamw=acfg,
                    accum_steps=2)
 step_fn, shardings, _ = make_train_step(cfg, tcfg, mesh, params_shapes)
 init_p, init_s = make_init_fns(cfg, tcfg, mesh, params_shapes)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     params = init_p(key); state = init_s(params)
     b = make_batch(dcfg, 0)
     batch = {k: jax.device_put(v, shardings["batch"][k]) for k, v in b.items()}
@@ -56,7 +57,7 @@ tcfg = TrainConfig(backend="bine", dp_axes=("pod", "data"), adamw=acfg,
                    wire_dtype="bfloat16")
 step_fn, shardings, _ = make_train_step(cfg, tcfg, mesh, params_shapes)
 init_p, init_s = make_init_fns(cfg, tcfg, mesh, params_shapes)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     params = init_p(key); state = init_s(params)
     losses = []
     for s in range(6):
