@@ -1,5 +1,7 @@
-"""Batched serving example: prefill + token-by-token decode with sharded
-KV caches (ring buffers on sliding-window layers).
+"""Continuous-batching serving example: a small Poisson trace of
+mixed-length prompts streams through the paged-KV scheduler on 8
+simulated devices — requests prefill into free pages as they arrive,
+decode interleaved, and retire on their token budget, recycling pages.
 
   PYTHONPATH=src python examples/serve_decode.py --arch gemma3-4b
 """
@@ -12,60 +14,62 @@ import argparse  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 
+from repro.compat import set_mesh  # noqa: E402
 from repro.configs import base  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
-from repro.serve.engine import ServeConfig, make_serve_fns  # noqa: E402
-from repro.compat import set_mesh
+from repro.serve.engine import (ServeConfig, make_serve_fns,  # noqa: E402
+                                page_len)
+from repro.serve.scheduler import (ContinuousBatchingScheduler,  # noqa: E402
+                                   poisson_trace)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--decode-tokens", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.5)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prompt-max", type=int, default=40)
     args = ap.parse_args()
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = base.reduced(base.get_config(args.arch))
-    S = args.prompt_len + args.decode_tokens
-    prefill_fn, decode_fn, _ = make_serve_fns(
-        cfg, ServeConfig(dp_axes=("data",)), mesh, args.batch, S)
-
-    key = jax.random.key(0)
-    params = jax.jit(lambda k: T.init_params(k, cfg))(key)
-    rng = np.random.RandomState(0)
-    if cfg.frontend:
-        prompt = jnp.asarray(rng.randn(args.batch, args.prompt_len,
-                                       cfg.frontend_dim), jnp.float32)
-    else:
-        prompt = jnp.asarray(rng.randint(
-            0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    S = page_len(cfg, args.prompt_max, args.max_new)
+    fns = make_serve_fns(cfg, ServeConfig(dp_axes=("data",)), mesh,
+                         args.slots, S)
+    params = jax.jit(lambda k: T.init_params(k, cfg))(jax.random.key(0))
+    if fns.insert is None:
+        # recurrent / MoE / frontend archs: legacy lock-step loop
+        from repro.launch.serve import run_fixed_batch
+        print(f"{cfg.name}: pool unsupported — legacy fixed-batch loop")
+        run_fixed_batch(cfg, fns, params, mesh, args.slots, args.prompt_max,
+                        args.max_new)
+        return
+    trace = poisson_trace(args.requests, args.rate, (4, args.prompt_max),
+                          args.max_new, cfg.vocab_size, seed=0,
+                          temperature=args.temperature)
 
     with set_mesh(mesh):
+        sched = ContinuousBatchingScheduler(cfg, fns, params, args.slots, S)
+        for req in trace:
+            sched.submit(req)
         t0 = time.time()
-        logits, state = prefill_fn(params, prompt)
-        jax.block_until_ready(logits)
-        print(f"prefill {args.batch}x{args.prompt_len}: "
-              f"{(time.time()-t0)*1e3:.0f} ms")
-        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out = [np.asarray(toks)]
-        t0 = time.time()
-        for _ in range(args.decode_tokens - 1):
-            step_in = (jnp.asarray(rng.randn(args.batch, 1, cfg.frontend_dim),
-                                   jnp.float32) if cfg.frontend else toks)
-            logits, state = decode_fn(params, state, step_in)
-            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(np.asarray(toks))
-        jax.block_until_ready(logits)
-        n = args.decode_tokens - 1
-        print(f"decode {n} steps: {(time.time()-t0)*1e3:.0f} ms "
-              f"({args.batch*n/max(time.time()-t0, 1e-9):.1f} tok/s)")
-    gen = np.concatenate(out, axis=1)
-    print("sample generated ids:", gen[0][:16].tolist())
+        stats = sched.run()
+        dt = time.time() - t0
+
+    print(f"{stats['tokens_out']} tokens / {stats['decode_steps']} decode "
+          f"steps in {dt*1e3:.0f} ms "
+          f"({stats['tokens_out'] / max(dt, 1e-9):.1f} tok/s)")
+    print(f"occupancy mean {stats['mean_occupancy']:.2f} "
+          f"peak {stats['peak_occupancy']} of {args.slots}; "
+          f"traces: {fns.trace_counts}")
+    for req in trace[:4]:
+        print(f"req {req.rid}: prompt {len(req.prompt):2d} toks, "
+              f"arrived {req.arrival:5.1f}, finished {req.finished_at:5.1f} "
+              f"({req.finish_reason}): {req.generated[:10]}")
 
 
 if __name__ == "__main__":

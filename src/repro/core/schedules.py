@@ -21,7 +21,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -316,61 +316,71 @@ def reduce_large_sched(family: str, p: int, root: int = 0) -> Sched:
 # Registry: collective -> {algorithm-name -> schedule builder}
 # ---------------------------------------------------------------------------
 
+#: collective -> algo -> builder(p, root).  The module-level registry lets
+#: tests enumerate every (collective, algo) pair (``list_algos``) so the
+#: conformance matrix covers pairs added later automatically.
+_REGISTRY: Dict[str, Dict[str, Any]] = {
+    "broadcast": {
+        "bine": lambda p, root: broadcast_sched("bine_dh", p, root),
+        "binomial_dh": lambda p, root: broadcast_sched("binomial_dh", p, root),
+        "binomial_dd": lambda p, root: broadcast_sched("binomial_dd", p, root),
+        "bine_large": lambda p, root: broadcast_large_sched("bine", p, root),
+        "binomial_large": lambda p, root: broadcast_large_sched("binomial", p, root),
+    },
+    "reduce": {
+        "bine": lambda p, root: reduce_sched("bine_dh", p, root),
+        "binomial_dh": lambda p, root: reduce_sched("binomial_dh", p, root),
+        "binomial_dd": lambda p, root: reduce_sched("binomial_dd", p, root),
+        "bine_large": lambda p, root: reduce_large_sched("bine", p, root),
+        "binomial_large": lambda p, root: reduce_large_sched("binomial", p, root),
+    },
+    "gather": {
+        "bine": lambda p, root: gather_sched("bine_dh", p, root),
+        "binomial": lambda p, root: gather_sched("binomial_dh", p, root),
+    },
+    "scatter": {
+        # standalone scatter reverses the dh gather (Sec. 4.2); the
+        # dd variant exists for the composite large-vector broadcast
+        "bine": lambda p, root: scatter_sched("bine_dh", p, root),
+        "bine_dd": lambda p, root: scatter_sched("bine_dd", p, root),
+        "binomial": lambda p, root: scatter_sched("binomial_dh", p, root),
+    },
+    "reduce_scatter": {
+        "bine": lambda p, root: reduce_scatter_sched("bine_dd", p),
+        "recdoub": lambda p, root: reduce_scatter_sched("recdoub_dd", p),
+        "ring": lambda p, root: ring_reduce_scatter_sched(p),
+    },
+    "allgather": {
+        "bine": lambda p, root: allgather_sched("bine_dh", p),
+        "recdoub": lambda p, root: allgather_sched("recdoub_dh", p),
+        "ring": lambda p, root: ring_allgather_sched(p),
+    },
+    "allreduce": {
+        "bine": lambda p, root: allreduce_large_sched("bine_dd", "bine_dh", p),
+        "bine_small": lambda p, root: allreduce_small_sched("bine_dh", p),
+        "recdoub": lambda p, root: allreduce_large_sched("recdoub_dd", "recdoub_dh", p),
+        "recdoub_small": lambda p, root: allreduce_small_sched("recdoub_dh", p),
+        "ring": lambda p, root: ring_allreduce_sched(p),
+    },
+    "alltoall": {
+        # alltoall routing needs the future-cone partition → DD kinds.
+        # (every step carries n/2 regardless, so DH vs DD ordering does
+        # not change the per-step payload profile.)
+        "bine": lambda p, root: alltoall_sched("bine_dd", p),
+        "bruck": lambda p, root: bruck_alltoall_sched(p),
+        "recdoub": lambda p, root: alltoall_sched("recdoub_dd", p),
+    },
+}
+
+
 def get_schedule(collective: str, algo: str, p: int, root: int = 0) -> Sched:
     """Uniform accessor used by the simulator / traffic model / benchmarks."""
-    C = {
-        "broadcast": {
-            "bine": lambda: broadcast_sched("bine_dh", p, root),
-            "binomial_dh": lambda: broadcast_sched("binomial_dh", p, root),
-            "binomial_dd": lambda: broadcast_sched("binomial_dd", p, root),
-            "bine_large": lambda: broadcast_large_sched("bine", p, root),
-            "binomial_large": lambda: broadcast_large_sched("binomial", p, root),
-        },
-        "reduce": {
-            "bine": lambda: reduce_sched("bine_dh", p, root),
-            "binomial_dh": lambda: reduce_sched("binomial_dh", p, root),
-            "binomial_dd": lambda: reduce_sched("binomial_dd", p, root),
-            "bine_large": lambda: reduce_large_sched("bine", p, root),
-            "binomial_large": lambda: reduce_large_sched("binomial", p, root),
-        },
-        "gather": {
-            "bine": lambda: gather_sched("bine_dh", p, root),
-            "binomial": lambda: gather_sched("binomial_dh", p, root),
-        },
-        "scatter": {
-            # standalone scatter reverses the dh gather (Sec. 4.2); the
-            # dd variant exists for the composite large-vector broadcast
-            "bine": lambda: scatter_sched("bine_dh", p, root),
-            "bine_dd": lambda: scatter_sched("bine_dd", p, root),
-            "binomial": lambda: scatter_sched("binomial_dh", p, root),
-        },
-        "reduce_scatter": {
-            "bine": lambda: reduce_scatter_sched("bine_dd", p),
-            "recdoub": lambda: reduce_scatter_sched("recdoub_dd", p),
-            "ring": lambda: ring_reduce_scatter_sched(p),
-        },
-        "allgather": {
-            "bine": lambda: allgather_sched("bine_dh", p),
-            "recdoub": lambda: allgather_sched("recdoub_dh", p),
-            "ring": lambda: ring_allgather_sched(p),
-        },
-        "allreduce": {
-            "bine": lambda: allreduce_large_sched("bine_dd", "bine_dh", p),
-            "bine_small": lambda: allreduce_small_sched("bine_dh", p),
-            "recdoub": lambda: allreduce_large_sched("recdoub_dd", "recdoub_dh", p),
-            "recdoub_small": lambda: allreduce_small_sched("recdoub_dh", p),
-            "ring": lambda: ring_allreduce_sched(p),
-        },
-        "alltoall": {
-            # alltoall routing needs the future-cone partition → DD kinds.
-            # (every step carries n/2 regardless, so DH vs DD ordering does
-            # not change the per-step payload profile.)
-            "bine": lambda: alltoall_sched("bine_dd", p),
-            "bruck": lambda: bruck_alltoall_sched(p),
-            "recdoub": lambda: alltoall_sched("recdoub_dd", p),
-        },
-    }
-    return C[collective][algo]()
+    return _REGISTRY[collective][algo](p, root)
+
+
+def list_algos(collective: str) -> Tuple[str, ...]:
+    """Every registered algorithm name for ``collective``."""
+    return tuple(_REGISTRY[collective])
 
 
 COLLECTIVES = (

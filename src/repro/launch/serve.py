@@ -1,7 +1,19 @@
-"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+"""Continuous-batching serving driver: a Poisson arrival trace of
+mixed-length requests through the paged-KV scheduler.
 
   python -m repro.launch.serve --arch gemma3-4b --reduced --mesh 2,4 \\
-      --batch 4 --prompt-len 64 --decode-tokens 32
+      --slots 4 --requests 16 --rate 0.5 --max-new 32
+
+Each request prefills into a free KV page (one compile covers every
+prompt length), decodes interleaved with whatever else is running, and
+retires on EOS or its token budget, recycling the page.  ``--backend
+auto`` consults the topology decision table for the serving collective
+plan; ``--backend xla`` pins the GSPMD defaults.
+
+Architectures the pool cannot serve (recurrent blocks, MoE capacity
+dispatch, modality frontends — see ``engine.pool_supported``) fall back
+to the legacy fixed-batch loop: one lock-step batch of ``--slots``
+same-length prompts, decoded for ``--max-new`` tokens.
 """
 
 from __future__ import annotations
@@ -13,10 +25,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs import base as cfgbase
 from repro.models import transformer as T
-from repro.serve.engine import ServeConfig, make_serve_fns
-from repro.compat import set_mesh
+from repro.serve.engine import ServeConfig, make_serve_fns, page_len
+from repro.serve.scheduler import ContinuousBatchingScheduler, poisson_trace
+
+
+def run_fixed_batch(cfg, fns, params, mesh, batch, prompt_len, max_new,
+                    seed=0):
+    """Legacy lock-step prefill+decode for archs the pool cannot serve
+    (recurrent/MoE/frontend).  Shared by this CLI and the example."""
+    rng = np.random.RandomState(seed)
+    B, L = batch, prompt_len
+    if cfg.frontend:
+        prompt = jnp.asarray(rng.randn(B, L, cfg.frontend_dim), jnp.float32)
+    else:
+        prompt = jnp.asarray(rng.randint(0, cfg.vocab_size, size=(B, L)),
+                             jnp.int32)
+    with set_mesh(mesh):
+        t0 = time.time()
+        logits, state = fns.prefill(params, prompt)
+        jax.block_until_ready(logits)
+        print(f"[serve] fixed-batch prefill {B}x{L}: "
+              f"{(time.time()-t0)*1e3:.0f}ms")
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs = [np.asarray(toks)]
+        t0 = time.time()
+        for _ in range(max_new - 1):
+            step_in = (jnp.asarray(rng.randn(B, 1, cfg.frontend_dim),
+                                   jnp.float32) if cfg.frontend else toks)
+            logits, state = fns.decode(params, state, step_in)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            outs.append(np.asarray(toks))
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+    n = max_new - 1
+    print(f"[serve] fixed-batch decode {n} steps: {dt*1e3:.0f}ms "
+          f"({B * max(n, 1) / max(dt, 1e-9):.1f} tok/s)")
+    print("[serve] sample token ids:",
+          np.concatenate(outs, axis=1)[0][:16].tolist())
 
 
 def main(argv=None):
@@ -24,9 +72,16 @@ def main(argv=None):
     ap.add_argument("--arch", default="gemma3-4b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mesh", default="")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--decode-tokens", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate (requests per decode step)")
+    ap.add_argument("--prompt-len-min", type=int, default=8)
+    ap.add_argument("--prompt-len-max", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--backend", default="auto", choices=("auto", "xla"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -43,50 +98,46 @@ def main(argv=None):
     mesh = jax.make_mesh(shape, axes)
     dp_axes = tuple(a for a in axes if a in ("pod", "data"))
 
-    scfg = ServeConfig(dp_axes=dp_axes)
-    S = args.prompt_len + args.decode_tokens
-    prefill_fn, decode_fn, shardings = make_serve_fns(
-        cfg, scfg, mesh, args.batch, S)
+    S = page_len(cfg, args.prompt_len_max, args.max_new)
+    scfg = ServeConfig(dp_axes=dp_axes, backend=args.backend)
+    fns = make_serve_fns(cfg, scfg, mesh, args.slots, S)
+    params = jax.jit(lambda k: T.init_params(k, cfg))(jax.random.key(args.seed))
+    if fns.insert is None:
+        print(f"[serve] {args.arch}: pool unsupported (recurrent blocks / "
+              f"MoE capacity dispatch / frontend) — legacy fixed-batch loop")
+        run_fixed_batch(cfg, fns, params, mesh, args.slots,
+                        args.prompt_len_max, args.max_new, seed=args.seed)
+        return
+    if fns.shardings["plan"]:
+        print(f"[serve] collective plan ({scfg.topology}):")
+        for k, v in sorted(fns.shardings["plan"].items()):
+            print(f"[serve]   {k:24s} -> {v}")
 
-    key = jax.random.key(args.seed)
-    params = jax.jit(lambda k: T.init_params(k, cfg))(key)
-    rng = np.random.RandomState(args.seed)
-    if cfg.frontend:
-        prompt = jnp.asarray(rng.randn(args.batch, args.prompt_len,
-                                       cfg.frontend_dim), jnp.float32)
-    else:
-        prompt = jnp.asarray(rng.randint(
-            0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
+    trace = poisson_trace(
+        args.requests, args.rate, (args.prompt_len_min, args.prompt_len_max),
+        args.max_new, cfg.vocab_size, seed=args.seed,
+        temperature=args.temperature)
 
     with set_mesh(mesh):
+        sched = ContinuousBatchingScheduler(
+            cfg, fns, params, args.slots, S, top_k=args.top_k, seed=args.seed)
+        for req in trace:
+            sched.submit(req)
         t0 = time.time()
-        logits, state = prefill_fn(params, prompt)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
-        print(f"[serve] prefill {args.batch}x{args.prompt_len}: "
-              f"{t_prefill*1e3:.0f}ms")
+        stats = sched.run()
+        dt = time.time() - t0
 
-        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        outs = [np.asarray(toks)]
-        t0 = time.time()
-        for i in range(args.decode_tokens - 1):
-            if cfg.frontend:
-                # audio/vlm stubs decode over token ids mapped through the
-                # (stub) frame embedding — use random frames for the demo
-                step_in = jnp.asarray(
-                    rng.randn(args.batch, 1, cfg.frontend_dim), jnp.float32)
-            else:
-                step_in = toks
-            logits, state = decode_fn(params, state, step_in)
-            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            outs.append(np.asarray(toks))
-        jax.block_until_ready(logits)
-        t_dec = time.time() - t0
-        n = args.decode_tokens - 1
-        print(f"[serve] decode {n} steps: {t_dec*1e3:.0f}ms "
-              f"({args.batch * max(n,1) / max(t_dec, 1e-9):.1f} tok/s)")
-        gen = np.concatenate(outs, axis=1)
-        print("[serve] sample token ids:", gen[0][:16].tolist())
+    print(f"[serve] {args.requests} requests, {args.slots} pages x {S} tokens,"
+          f" backend={args.backend}")
+    print(f"[serve] {stats['tokens_out']} tokens in {dt*1e3:.0f}ms "
+          f"({stats['tokens_out'] / max(dt, 1e-9):.1f} tok/s), "
+          f"{stats['decode_steps']} decode steps, "
+          f"occupancy mean {stats['mean_occupancy']:.2f} / "
+          f"peak {stats['peak_occupancy']} of {args.slots}")
+    print(f"[serve] traces: {fns.trace_counts}")
+    done = [r for r in trace if r.finished]
+    print(f"[serve] finished {len(done)}/{len(trace)}; sample request 0 ids:",
+          trace[0].generated[:16])
 
 
 if __name__ == "__main__":

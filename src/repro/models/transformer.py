@@ -296,37 +296,59 @@ def init_decode_state(cfg, B: int, S_len: int) -> dict:
 
 
 def _decode_attn(p, cfg, block: Block, x, cache, pos):
-    """One-token windowed/full attention against a (possibly ring) cache."""
+    """One-token windowed/full attention against a (possibly ring) cache.
+
+    ``pos`` is a scalar (legacy fixed-batch decode: every sequence at the
+    same position) or a ``[B]`` vector (continuous-batching pool: each slot
+    at its own position).  The vector path writes the new K/V with a
+    per-slot one-hot select instead of ``dynamic_update_slice`` — identical
+    values, batched indices.
+    """
     W = cache["k"].shape[1]
-    if block.window is not None and block.window <= W:
-        slot = pos % W          # ring buffer for bounded-window layers
-    else:
-        slot = pos
     B = x.shape[0]
-    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    ring = block.window is not None and block.window <= W
+    per_slot = jnp.ndim(pos) > 0
+    slot = pos % W if ring else pos
+    if per_slot:
+        positions = pos[:, None].astype(jnp.int32)        # [B,1]
+    else:
+        positions = jnp.full((1,), pos, dtype=jnp.int32)
     q, k, v = L._qkv(p["attn"], cfg, L.rmsnorm(x, p["ln1"], cfg.norm_eps),
                      positions)
-    ck = lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    cv = lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if per_slot:
+        # batched scatter, one row per slot (out-of-range slots — a full
+        # cache that ran past its page — drop the write, like the clamp-free
+        # one-hot select would)
+        rows = jnp.arange(B)
+        ck = cache["k"].at[rows, slot].set(
+            k[:, 0].astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[rows, slot].set(
+            v[:, 0].astype(cache["v"].dtype), mode="drop")
+    else:
+        ck = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = nh // nkv
     qg = q.reshape(B, 1, nkv, g, hd)
     s = jnp.einsum("btkgh,bskh->bkgs", qg.astype(jnp.float32),
                    ck.astype(jnp.float32)) / math.sqrt(hd)
     # cache slot s holds absolute position: s (no window) or ring-decoded
-    kpos = jnp.arange(W)
-    if block.window is not None and block.window <= W:
+    kpos = jnp.arange(W)[None, :] if per_slot else jnp.arange(W)
+    posb = pos[:, None] if per_slot else pos
+    slotb = slot[:, None] if per_slot else slot
+    if ring:
         # ring slots hold positions pos-W+1..pos; valid if <= pos and fresh
-        age = (slot - kpos) % W
-        abs_pos = pos - age
-        valid = (abs_pos >= 0) & (abs_pos <= pos) & (pos - abs_pos < block.window)
+        age = (slotb - kpos) % W
+        abs_pos = posb - age
+        valid = (abs_pos >= 0) & (abs_pos <= posb) & (posb - abs_pos < block.window)
     else:
-        valid = kpos <= pos
+        valid = kpos <= posb
         if block.window is not None:
-            valid &= (pos - kpos) < block.window
-    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+            valid &= (posb - kpos) < block.window
+    vmask = valid[:, None, None, :] if per_slot else valid[None, None, None, :]
+    s = jnp.where(vmask, s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskh->bkgh", w, cv.astype(jnp.float32))
     o = o.reshape(B, 1, nh * hd).astype(x.dtype)
@@ -363,8 +385,13 @@ def _decode_block(p, cfg, block: Block, x, cache, pos):
     raise ValueError(block.kind)
 
 
-def decode_step(params, cfg, state, tokens) -> Tuple[jax.Array, dict]:
+def decode_step(params, cfg, state, tokens, active=None) -> Tuple[jax.Array, dict]:
     """tokens: [B,1] int32 (or [B,1,frontend_dim]).  One decode step.
+
+    ``state["pos"]`` may be a scalar (legacy fixed batch) or a ``[B]``
+    vector (continuous-batching slot pool; see ``serve.kvcache``).  With an
+    ``active`` mask (``[B]`` in {0,1}) only active slots advance their
+    position — retired slots stay frozen until ``insert`` recycles them.
 
     Returns (logits [B,1,V], new_state)."""
     pos = state["pos"]
@@ -388,39 +415,66 @@ def decode_step(params, cfg, state, tokens) -> Tuple[jax.Array, dict]:
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = jnp.einsum("btd,dv->btv", x, head)
-    return logits, {"segments": new_segs, "pos": pos + 1}
+    adv = 1 if active is None else active.astype(jnp.int32)
+    return logits, {"segments": new_segs, "pos": pos + adv}
 
 
-def prefill(params, cfg, inputs) -> Tuple[jax.Array, dict]:
+def prefill(params, cfg, inputs, length=None) -> Tuple[jax.Array, dict]:
     """Full-sequence forward that also fills a decode state.
 
     For KV layers the cache is the (windowed) K/V run; recurrent layers
     carry their final states.  Returns (last-token logits [B,1,V], state).
+
+    ``length`` (traced int32 scalar, optional) marks the number of real
+    tokens when ``inputs`` is right-padded to a fixed shape (the
+    continuous-batching insert path: one compile covers every prompt
+    length).  Causality keeps positions ``< length`` unaffected by the
+    padding; the returned logits are taken at position ``length - 1``, the
+    decode position starts at ``length``, and windowed ring caches are laid
+    out from the real tail so slot ``q % W`` holds position ``q`` — exactly
+    the convention ``decode_step`` expects.  Padded K/V beyond ``length``
+    stays in full caches but is masked by ``kpos <= pos`` until decode
+    overwrites it in place.  Only attention-family blocks support
+    ``length``: a recurrent state would integrate the pad tokens.
     """
     B, T = inputs.shape[:2]
     positions = jnp.arange(T, dtype=jnp.int32)
+    if length is not None:
+        bad = [b.kind for b, _ in segments(cfg)
+               if b.kind not in ("attn", "shared_attn")]
+        if bad:
+            raise NotImplementedError(
+                f"padded prefill (length=...) unsupported for blocks "
+                f"{sorted(set(bad))}: recurrent state would integrate the "
+                f"padding, and MoE capacity dispatch lets pad tokens evict "
+                f"real ones")
     x = _embed_in(params, cfg, inputs)
     segs = []
     for (block, n), seg_p in zip(segments(cfg), params["segments"]):
         if block.kind == "shared_attn":
-            x, c = _prefill_block(params["shared"], cfg, block, x, positions)
+            x, c = _prefill_block(params["shared"], cfg, block, x, positions,
+                                  length)
             segs.append(jax.tree.map(lambda a: a[None], c))
             continue
 
         def body(h, lp):
-            h, c = _prefill_block(lp, cfg, block, h, positions)
+            h, c = _prefill_block(lp, cfg, block, h, positions, length)
             return h, c
 
         x, cs = lax.scan(body, x, seg_p)
         segs.append(cs)
-    x = L.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    if length is None:
+        xl, pos_out = x[:, -1:], jnp.asarray(T, jnp.int32)
+    else:
+        xl = lax.dynamic_slice_in_dim(x, jnp.maximum(length - 1, 0), 1, axis=1)
+        pos_out = jnp.asarray(length, jnp.int32)
+    x = L.rmsnorm(xl, params["final_norm"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = jnp.einsum("btd,dv->btv", x, head)
-    return logits, {"segments": segs,
-                    "pos": jnp.asarray(T, jnp.int32)}
+    return logits, {"segments": segs, "pos": pos_out}
 
 
-def _prefill_block(p, cfg, block: Block, x, positions):
+def _prefill_block(p, cfg, block: Block, x, positions, length=None):
     """Forward one block over the full sequence, returning its decode cache."""
     if block.kind in ("attn", "moe", "shared_attn"):
         T = x.shape[1]
@@ -437,12 +491,25 @@ def _prefill_block(p, cfg, block: Block, x, positions):
         dt = jnp.dtype(cfg.cache_dtype)
         if block.window is not None and block.window < T:
             W = block.window
-            # ring layout: slot t holds position (T - W + t') where the ring
-            # index matches decode's pos % W convention
-            tail_k, tail_v = k[:, T - W:], v[:, T - W:]
-            roll = (T - W) % W
-            ck = jnp.roll(tail_k, shift=roll, axis=1).astype(dt)
-            cv = jnp.roll(tail_v, shift=roll, axis=1).astype(dt)
+            if length is None:
+                # ring layout: slot t holds position (T - W + t') where the
+                # ring index matches decode's pos % W convention
+                tail_k, tail_v = k[:, T - W:], v[:, T - W:]
+                roll = (T - W) % W
+                ck = jnp.roll(tail_k, shift=roll, axis=1).astype(dt)
+                cv = jnp.roll(tail_v, shift=roll, axis=1).astype(dt)
+            else:
+                # dynamic-length ring: slot s holds the newest real position
+                # congruent to s mod W, i.e. q(s) = (L-1) - ((L-1-s) mod W);
+                # slots with q(s) < 0 (short prompts) stay zero and are
+                # masked by decode's freshness check until overwritten.
+                s_idx = jnp.arange(W)
+                last = length - 1
+                q_idx = last - ((last - s_idx) % W)
+                ok = (q_idx >= 0)[None, :, None, None]
+                qc = jnp.clip(q_idx, 0, T - 1)
+                ck = jnp.where(ok, jnp.take(k, qc, axis=1), 0).astype(dt)
+                cv = jnp.where(ok, jnp.take(v, qc, axis=1), 0).astype(dt)
         else:
             ck, cv = k.astype(dt), v.astype(dt)
         return x, {"k": ck, "v": cv}

@@ -17,8 +17,8 @@ seq_len state — the sub-quadratic structure long_500k exploits.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import transformer as T
+from repro.serve import kvcache as KV
 
 
 @dataclass(frozen=True)
@@ -117,18 +118,89 @@ def collective_plan(model_cfg, scfg: ServeConfig, mesh, B: int) -> Dict[str, str
     return plan
 
 
-def make_serve_fns(model_cfg, scfg: ServeConfig, mesh, B: int, S_len: int):
-    """Returns (prefill_fn, decode_fn, shardings).
+@dataclass
+class ServeFns:
+    """Compiled serving entry points for one pool shape.
 
-    prefill(params, inputs [B,T]) -> (logits [B,1,V], state)
-    decode(params, state, tokens [B,1]) -> (logits [B,1,V], state)
+    Legacy fixed-batch pair (state ``pos`` scalar, every sequence in
+    lock-step — kept for the dryrun/HLO analysis paths):
+
+      * ``prefill(params, inputs [B,T]) -> (logits [B,1,V], state)``
+      * ``decode(params, state, tokens [B,1]) -> (logits [B,1,V], state)``
+
+    Continuous-batching pool (state ``pos`` is ``[B]``; every fn is
+    compiled ONCE for the pool shape — slot index and prompt length are
+    traced scalars, so requests churning through slots never retrace):
+
+      * ``init_pool() -> pool``
+      * ``insert(params, pool, tokens [1,S_max], length, slot)
+        -> (logits [1,V], pool)`` — padded prefill + page write
+      * ``decode_slots(params, pool, tokens [B,1], active [B])
+        -> (logits [B,V], pool)`` — one decode step for every page;
+        inactive pages hold their position
+      * ``evict(pool, slot) -> pool`` — retire a page
+
+    ``insert`` is ``None`` for architectures the pool cannot serve (see
+    ``pool_supported``).  ``trace_counts`` ticks once per *trace* of each
+    function — after warmup a serving loop must leave them constant (the
+    no-recompile guarantee ``benchmarks/bench_serve_throughput.py``
+    asserts).  Iteration yields the legacy ``(prefill, decode, shardings)``
+    triple so existing call sites keep unpacking.
+    """
+    prefill: Callable
+    decode: Callable
+    init_pool: Callable
+    insert: Optional[Callable]
+    decode_slots: Optional[Callable]
+    evict: Optional[Callable]
+    shardings: Dict[str, Any]
+    trace_counts: Dict[str, int] = field(default_factory=dict)
+
+    def __iter__(self):
+        return iter((self.prefill, self.decode, self.shardings))
+
+
+def page_len(model_cfg, prompt_max: int, max_new: int) -> int:
+    """KV page size for a prompt/decode budget: ``prompt_max + max_new``
+    rounded up to the attention chunk (padded prefill runs the chunked
+    full-sequence attention, which requires ``T % attn_chunk == 0``)."""
+    C = model_cfg.attn_chunk
+    return ((prompt_max + max_new + C - 1) // C) * C
+
+
+def pool_supported(model_cfg) -> bool:
+    """Can the continuous-batching pool serve this architecture?
+
+    Excluded, loudly (``ServeFns.insert is None``) rather than subtly
+    wrong:
+
+      * modality frontends — no token stream to schedule;
+      * recurrent blocks (Mamba2/xLSTM) — their state would integrate the
+        prompt padding;
+      * MoE — expert *capacity* dispatch couples batch rows (a token's
+        keep/drop depends on what else routed to its expert), which
+        breaks both padded prefill (pad tokens compete for capacity) and
+        the continuous-batching equivalence guarantee.  Pool MoE needs a
+        pad/slot-masked router first.
+    """
+    if model_cfg.frontend is not None or model_cfg.n_experts > 0:
+        return False
+    return all(b.kind in ("attn", "shared_attn")
+               for b, _ in T.segments(model_cfg))
+
+
+def make_serve_fns(model_cfg, scfg: ServeConfig, mesh, B: int,
+                   S_len: int) -> ServeFns:
+    """Build the serving entry points for a ``B``-page pool of length
+    ``S_len`` (page = prompt + decode budget).  See :class:`ServeFns`.
     """
     from repro.models import sharding as _sh
-    from repro.models.sharding import param_specs
 
     _sh.set_model_parallel(mesh.shape.get(scfg.model_axis, 1))
     dp = _dp(scfg)
     cspecs = cache_specs(model_cfg, scfg, B, S_len, mesh)
+    counts = {"prefill": 0, "decode": 0, "init_pool": 0, "insert": 0,
+              "decode_slots": 0, "evict": 0}
 
     def ns(s):
         return NamedSharding(mesh, s)
@@ -137,26 +209,61 @@ def make_serve_fns(model_cfg, scfg: ServeConfig, mesh, B: int, S_len: int):
         ns, cspecs, is_leaf=lambda x: isinstance(x, P))
 
     def prefill_fn(params, inputs):
+        counts["prefill"] += 1
         logits, state = T.prefill(params, model_cfg, inputs)
         state = _constrain_state(state, cspecs)
         return logits, state
 
     def decode_fn(params, state, tokens):
+        counts["decode"] += 1
         logits, state = T.decode_step(params, model_cfg, state, tokens)
         state = _constrain_state(state, cspecs)
         return logits, state
 
-    n_in = 3 if model_cfg.frontend else 2
+    def init_pool_fn():
+        counts["init_pool"] += 1
+        return KV.init_pool_state(model_cfg, B, S_len)
+
+    def insert_fn(params, pool, tokens, length, slot):
+        counts["insert"] += 1
+        logits, one = T.prefill(params, model_cfg, tokens, length=length)
+        pool = _constrain_state(KV.write_slot(pool, one, slot), cspecs)
+        return logits[:, 0], pool
+
+    def decode_slots_fn(params, pool, tokens, active):
+        counts["decode_slots"] += 1
+        logits, pool = T.decode_step(params, model_cfg, pool, tokens,
+                                     active=active)
+        pool = _constrain_state(pool, cspecs)
+        return logits[:, 0], pool
+
+    def evict_fn(pool, slot):
+        counts["evict"] += 1
+        return _constrain_state(KV.reset_slot(pool, slot), cspecs)
+
     in_spec = P(dp) if B % int(np.prod([mesh.shape[a] for a in scfg.dp_axes])) == 0 else P()
     shardings = {
         "inputs": ns(in_spec),
         "state": state_shardings,
         "plan": collective_plan(model_cfg, scfg, mesh, B),
     }
-    return (jax.jit(prefill_fn, out_shardings=(None, state_shardings)),
-            jax.jit(decode_fn, donate_argnums=(1,),
-                    out_shardings=(None, state_shardings)),
-            shardings)
+    pooled = pool_supported(model_cfg)
+    return ServeFns(
+        prefill=jax.jit(prefill_fn, out_shardings=(None, state_shardings)),
+        decode=jax.jit(decode_fn, donate_argnums=(1,),
+                       out_shardings=(None, state_shardings)),
+        init_pool=jax.jit(init_pool_fn, out_shardings=state_shardings),
+        insert=(jax.jit(insert_fn, donate_argnums=(1,),
+                        out_shardings=(None, state_shardings))
+                if pooled else None),
+        decode_slots=(jax.jit(decode_slots_fn, donate_argnums=(1,),
+                              out_shardings=(None, state_shardings))
+                      if pooled else None),
+        evict=(jax.jit(evict_fn, donate_argnums=(0,),
+                       out_shardings=state_shardings) if pooled else None),
+        shardings=shardings,
+        trace_counts=counts,
+    )
 
 
 def _constrain_state(state, cspecs):

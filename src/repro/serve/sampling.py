@@ -1,0 +1,74 @@
+"""Batched token sampling over the (vocab-sharded) decode logits.
+
+Decode's final projection leaves logits sharded over the model axis in
+vocab (``shard(head, None, "model")``); whether sampling should gather
+them first is exactly the ``logits_allgather`` entry of the serving
+:func:`repro.serve.engine.collective_plan`.  ``make_sampler`` consumes
+that plan: when the topology cost model recommended a re-assembly backend
+the sampler pins the gather point with a sharding constraint (GSPMD emits
+the allgather there, before the vocab reductions), otherwise GSPMD is
+left to place the reductions over the sharded axis.
+
+One sampler covers greedy, temperature, and top-k per *slot*: greedy is
+``temperature == 0`` elementwise, so a pool mixing greedy and sampled
+requests still runs a single compiled function.  Randomness is keyed per
+(request, token-index) via ``fold`` so draws never depend on which other
+requests share the batch — the continuous-batching analogue of per-example
+RNG streams.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (host-side; batched into arrays).
+
+    ``temperature`` is fully per-request (a traced ``[B]`` vector).
+    ``top_k`` shapes the compiled ``lax.top_k`` call and is therefore
+    *pool-global*: the scheduler rejects a request whose nonzero ``top_k``
+    differs from the pool's, rather than silently sampling full-vocab.
+    """
+    temperature: float = 0.0   # 0 => greedy
+    top_k: int = 0             # 0 => pool default / full vocab
+
+
+def make_sampler(top_k: int = 0, plan: Optional[Dict[str, str]] = None):
+    """Compile a pooled sampler ``(logits [B,V], temperature [B],
+    rids [B], steps [B], key) -> tokens [B] int32``.
+
+    ``top_k`` is static (it shapes the lax.top_k call); per-slot
+    ``temperature`` and the RNG stream ids are traced.  Each slot's key is
+    ``fold_in(fold_in(key, rid), step)`` — two exact folds, so distinct
+    (request, token-index) pairs can never share a stream.  ``plan`` is
+    the serving collective plan from ``make_serve_fns`` — presence of
+    ``logits_allgather`` routes the vocab re-assembly before sampling.
+    """
+    gather_first = bool(plan) and "logits_allgather" in plan
+
+    def sample(logits, temperature, rids, steps, key):
+        logits = logits.astype(jnp.float32)
+        if gather_first:
+            try:  # replicate over vocab: the plan's re-assembly point
+                logits = jax.lax.with_sharding_constraint(logits, P())
+            except (ValueError, TypeError, RuntimeError):
+                pass  # no mesh in scope — single-device path
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if top_k > 0:
+            kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
+        keys = jax.vmap(
+            lambda r, s: jax.random.fold_in(jax.random.fold_in(key, r), s)
+        )(rids, steps)
+        scaled = logits / jnp.maximum(temperature[:, None], 1e-6)
+        drawn = jax.vmap(jax.random.categorical)(keys, scaled)
+        return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)
+
+    return jax.jit(sample)

@@ -1,0 +1,78 @@
+"""The serving collective plan: exact key set per mesh split, and every
+recommendation must be dispatchable for its collective.
+
+``collective_plan`` only reads ``mesh.shape``, so the matrix runs on a
+stub mesh — no devices needed to pin the (n_tp, n_dp) contract.
+"""
+
+from types import SimpleNamespace
+
+import pytest
+
+from repro.configs import base
+from repro.serve.engine import ServeConfig, collective_plan
+from repro.topology import CANDIDATES
+
+#: plan key -> the collective whose candidate set legitimizes the backend
+PLAN_COLLECTIVE = {
+    "decode_attn_allreduce": "allreduce",
+    "logits_allgather": "allgather",
+    "token_scatter": "scatter",
+    "token_gather": "gather",
+}
+
+SPLITS = [(1, 1), (2, 1), (4, 1), (8, 1),
+          (1, 2), (1, 4), (1, 8),
+          (2, 2), (2, 4), (4, 2), (8, 4)]
+
+
+def _mesh(n_tp: int, n_dp: int):
+    return SimpleNamespace(shape={"data": n_dp, "model": n_tp})
+
+
+def _cfg():
+    return base.reduced(base.get_config("gemma3-4b"))
+
+
+@pytest.mark.parametrize("n_tp,n_dp", SPLITS,
+                         ids=[f"tp{t}-dp{d}" for t, d in SPLITS])
+def test_plan_keys_and_backends(n_tp, n_dp):
+    cfg = _cfg()
+    scfg = ServeConfig(dp_axes=("data",), backend="auto")
+    plan = collective_plan(cfg, scfg, _mesh(n_tp, n_dp), B=8)
+
+    expect = set()
+    if n_tp > 1:
+        expect |= {"decode_attn_allreduce", "logits_allgather"}
+    if n_dp > 1:
+        expect |= {"token_scatter", "token_gather"}
+    assert set(plan) == expect, (n_tp, n_dp, plan)
+
+    for key, backend in plan.items():
+        coll = PLAN_COLLECTIVE[key]
+        assert backend in CANDIDATES[coll], (
+            f"{key}: recommended backend {backend!r} is not a valid "
+            f"candidate for {coll} (valid: {CANDIDATES[coll]})")
+
+
+def test_xla_backend_plans_nothing():
+    cfg = _cfg()
+    scfg = ServeConfig(dp_axes=("data",), backend="xla")
+    assert collective_plan(cfg, scfg, _mesh(4, 2), B=8) == {}
+
+
+def test_multi_axis_dp_product():
+    """dp axes multiply: (pod=2) x (data=2) plans the p=4 scatter/gather."""
+    cfg = _cfg()
+    scfg = ServeConfig(dp_axes=("pod", "data"), backend="auto")
+    mesh = SimpleNamespace(shape={"pod": 2, "data": 2, "model": 1})
+    plan = collective_plan(cfg, scfg, mesh, B=8)
+    assert set(plan) == {"token_scatter", "token_gather"}
+
+
+def test_plan_deterministic():
+    cfg = _cfg()
+    scfg = ServeConfig(dp_axes=("data",), backend="auto")
+    a = collective_plan(cfg, scfg, _mesh(4, 2), B=16)
+    b = collective_plan(cfg, scfg, _mesh(4, 2), B=16)
+    assert a == b
