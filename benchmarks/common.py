@@ -1,11 +1,38 @@
-"""Shared benchmark utilities: CSV emitters, timing, system presets."""
+"""Shared benchmark utilities: CSV emitters, timing, system presets, and
+the machine-readable record sink behind ``BENCH_collectives.json``."""
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, Iterable, List
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional
 
 from repro.core import traffic as tf
+
+
+@dataclass
+class Recorder:
+    """Collects ``(bench, config, metric, value)`` records; ``run.py``
+    serializes them (with the caller-passed timestamp) to
+    ``BENCH_collectives.json`` so the perf trajectory is machine-readable.
+    """
+    records: List[Dict] = field(default_factory=list)
+
+    def add(self, bench: str, config: Dict, metric: str, value) -> None:
+        self.records.append(
+            {"bench": bench, "config": dict(config), "metric": metric,
+             "value": value})
+
+    def to_json_dict(self, timestamp: Optional[str]) -> Dict:
+        return {"format": 1, "timestamp": timestamp,
+                "records": self.records}
+
+    def write(self, path: str, timestamp: Optional[str]) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json_dict(timestamp), f, indent=1,
+                      sort_keys=True)
+            f.write("\n")
 
 #: the paper's four systems + the TPU multi-pod target
 SYSTEMS = {

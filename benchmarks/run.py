@@ -1,15 +1,25 @@
 """Benchmark driver: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run            # all analytic benches
-  PYTHONPATH=src python -m benchmarks.run --with-jax # + 8-device microbench
+  PYTHONPATH=src python -m benchmarks.run --with-jax # + 8-device microbenches
+
+Every run also writes a machine-readable ``BENCH_collectives.json``
+(``--json`` to relocate, ``--no-json`` to disable): per-bench records
+``{bench, config, metric, value}`` plus per-bench wall time, stamped with
+the ``--timestamp`` string the CALLER passes in (benchmarks never invent
+their own clock, so reruns are diffable).  Benches whose ``run`` accepts
+a ``recorder`` kwarg contribute detailed records; the rest contribute
+their wall time.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
+from benchmarks.common import Recorder
 
 BENCHES = [
     ("fig1_broadcast_traffic", "Fig. 1: bcast global-link bytes"),
@@ -21,27 +31,54 @@ BENCHES = [
     ("hier_allreduce", "Sec. 6.2: hierarchical allreduce"),
 ]
 
+#: benches that spin up the 8-host-device jax subprocess
+JAX_BENCHES = [
+    ("jax_collectives", "8-device shard_map microbench"),
+    ("fused_collectives",
+     "Pallas fused-step vs shmap: emission plans + HLO + microbench"),
+]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--with-jax", action="store_true",
-                    help="also run the 8-device shard_map microbench")
+                    help="also run the 8-device jax microbenches "
+                         "(jax_collectives, fused_collectives)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default="BENCH_collectives.json",
+                    help="output path for the machine-readable records")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing the JSON records")
+    ap.add_argument("--timestamp", default=None,
+                    help="caller-supplied timestamp string recorded "
+                         "verbatim in the JSON (never auto-generated)")
     args = ap.parse_args()
 
+    descs = dict(BENCHES) | dict(JAX_BENCHES)
     names = [n for n, _ in BENCHES]
     if args.with_jax:
-        names.append("jax_collectives")
+        names += [n for n, _ in JAX_BENCHES]
     if args.only:
+        # --only filters the gated list: jax benches still need --with-jax
         names = [n for n in names if args.only in n]
 
+    recorder = Recorder()
     for name in names:
-        desc = dict(BENCHES).get(name, name)
+        desc = descs.get(name, name)
         print(f"\n===== bench_{name}: {desc} =====")
         t0 = time.time()
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
-        mod.run()
-        print(f"# bench_{name} done in {time.time()-t0:.1f}s")
+        if "recorder" in inspect.signature(mod.run).parameters:
+            mod.run(recorder=recorder)
+        else:
+            mod.run()
+        dt = time.time() - t0
+        recorder.add(name, {}, "wall_time_s", dt)
+        print(f"# bench_{name} done in {dt:.1f}s")
+
+    if not args.no_json:
+        recorder.write(args.json, args.timestamp)
+        print(f"\nwrote {len(recorder.records)} records to {args.json}")
     print("\nall benchmarks completed")
 
 

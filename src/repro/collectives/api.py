@@ -1,16 +1,29 @@
 """Public collective API: backend dispatch (paper algorithms vs XLA built-ins).
 
 Backends
-  xla        : XLA's native lowering (psum / all_gather / psum_scatter /
-               all_to_all) — the production baseline on a single ICI torus.
-  bine       : the paper's algorithms (this work).
-  recdoub    : classical binomial/recursive-doubling butterflies.
-  ring       : bandwidth-optimal ring (latency-bound at scale).
-  bine_hier  : hierarchical (Sec. 6.2): bine RS/AG intra-pod + bine across.
-  auto       : topology-aware selection — at trace time (shapes are static)
-               the decision table for ``cfg.topology`` picks the predicted-
-               fastest backend for (collective, axis size, payload bytes);
-               see ``repro.topology``.  Zero runtime cost.
+  xla          : XLA's native lowering (psum / all_gather / psum_scatter /
+                 all_to_all) — the production baseline on a single ICI torus.
+  bine         : the paper's algorithms (this work).
+  recdoub      : classical binomial/recursive-doubling butterflies.
+  ring         : bandwidth-optimal ring (latency-bound at scale).
+  bine_hier    : hierarchical (Sec. 6.2): bine RS/AG intra-pod + bine across.
+  pallas_fused : the same schedules executed as fused Pallas step kernels
+                 (``repro.kernels.collectives``): one ppermute per step on
+                 the wire, one kernel per step locally (keep-slice +
+                 reduce + next-send pack in a single pass) — identical
+                 arithmetic order, so fp32 results are bit-for-bit equal
+                 to the shmap path.  The schedule family it executes is
+                 ``cfg.fused_algo`` (bine | recdoub | ring).  Collectives
+                 without a fused kernel (the rooted family, alltoall, and
+                 the small-allreduce regime where a full-vector add+
+                 ppermute pair is already minimal) fall back to the shmap
+                 implementation of the same schedule.
+  auto         : topology-aware selection — at trace time (shapes are
+                 static) the decision table for ``cfg.topology`` picks the
+                 predicted-fastest backend for (collective, axis size,
+                 payload bytes); see ``repro.topology``.  Zero runtime
+                 cost.  May resolve to ``pallas_fused`` where the fused-
+                 step cost entries win.
 
 The allreduce auto-switches small/large at ``small_cutoff_bytes`` like the
 paper's implementations (Sec. 4.4/4.5); the boundary is INCLUSIVE — a
@@ -20,6 +33,7 @@ recursive-doubling) path.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Tuple, Union
 
@@ -31,23 +45,34 @@ from . import shmap
 
 Axis = shmap.Axis
 
+#: the fused-kernel backend's name, exported for dispatch tables/tests
+PALLAS_FUSED_BACKEND = "pallas_fused"
+
 
 @dataclass(frozen=True)
 class CollectiveConfig:
-    backend: str = "bine"             # bine | recdoub | ring | xla | bine_hier | auto
+    backend: str = "bine"             # bine | recdoub | ring | xla | bine_hier
+    #                                 # | pallas_fused | auto
     small_cutoff_bytes: int = 16384   # allreduce small/large switch (inclusive)
     inner_axis: Optional[Axis] = None  # for bine_hier: the fast (intra-pod) axis
     outer_axis: Optional[Axis] = None
     topology: str = "tpu_multipod"    # decision-table preset for backend="auto"
+    fused_algo: str = "bine"          # schedule family pallas_fused executes
 
     def replace(self, **kw):
-        import dataclasses
         return dataclasses.replace(self, **kw)
 
 
 XLA = CollectiveConfig(backend="xla")
 BINE = CollectiveConfig(backend="bine")
 AUTO = CollectiveConfig(backend="auto")
+PALLAS_FUSED = CollectiveConfig(backend=PALLAS_FUSED_BACKEND)
+
+
+def _fused_ops():
+    # deferred: keeps the base API importable without pulling in pallas
+    from repro.kernels import collectives as _kc
+    return _kc
 
 
 def _nbytes(x) -> int:
@@ -96,6 +121,13 @@ def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
         return shmap.allreduce_hierarchical(x, inner, outer, "bine")
     if b == "ring":
         return shmap.allreduce_ring(x, axis)
+    if b == PALLAS_FUSED_BACKEND:
+        algo = cfg.fused_algo
+        if algo != "ring" and allreduce_uses_small(_nbytes(x), cfg):
+            # small regime: full-vector recursive doubling is one add per
+            # step — nothing to fuse; shmap parity by construction
+            return shmap.allreduce_small(x, axis, algo)
+        return _fused_ops().allreduce(x, axis, algo)
     if b in ("bine", "recdoub"):
         if allreduce_uses_small(_nbytes(x), cfg):
             return shmap.allreduce_small(x, axis, b)
@@ -112,6 +144,8 @@ def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
         v = x.reshape(-1)
         return lax.psum_scatter(v.reshape(p, -1), axis, scatter_dimension=0,
                                 tiled=False)
+    if b == PALLAS_FUSED_BACKEND:
+        return _fused_ops().reduce_scatter(x, axis, cfg.fused_algo)
     if b == "ring":
         return shmap.reduce_scatter(x, axis, "ring")
     return shmap.reduce_scatter(x, axis, "bine" if b.startswith("bine") else b)
@@ -123,6 +157,8 @@ def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
     b = cfg.backend
     if b == "xla":
         return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
+    if b == PALLAS_FUSED_BACKEND:
+        return _fused_ops().allgather(x, axis, cfg.fused_algo)
     if b == "ring":
         return shmap.allgather(x, axis, "ring")
     return shmap.allgather(x, axis, "bine" if b.startswith("bine") else b)
@@ -134,9 +170,24 @@ def all_to_all(x, axis: Axis, cfg: CollectiveConfig = BINE):
     b = cfg.backend
     if b == "xla":
         return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+    if b == PALLAS_FUSED_BACKEND:
+        # no fused alltoall kernel yet: shmap fallback of the SAME family
+        b = cfg.fused_algo
     algo = {"bine": "bine", "bine_hier": "bine", "recdoub": "recdoub",
             "ring": "bruck", "bruck": "bruck"}[b]
     return shmap.all_to_all(x, axis, algo)
+
+
+def _rooted_algo(cfg: CollectiveConfig) -> str:
+    """shmap tree-algorithm family for the rooted collectives.
+
+    ``pallas_fused`` has no rooted kernels (tree steps move whole small
+    vectors — nothing to fuse), so it falls back to the shmap tree of its
+    ``fused_algo`` family."""
+    b = cfg.backend
+    if b == PALLAS_FUSED_BACKEND:
+        b = cfg.fused_algo
+    return "bine" if b.startswith("bine") else "binomial"
 
 
 def _psum_exact(dtype) -> bool:
@@ -160,7 +211,7 @@ def broadcast(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
         # non-additive dtypes (bool/int): gather all ranks, keep root's row
         g = lax.all_gather(x, axis, axis=0, tiled=False)
         return g[root]
-    algo = "bine" if cfg.backend.startswith("bine") else "binomial"
+    algo = _rooted_algo(cfg)
     return shmap.broadcast(x, axis, root, algo)
 
 
@@ -168,7 +219,7 @@ def reduce(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "reduce", x, axis)
     if cfg.backend == "xla":
         return lax.psum(x, axis)  # all ranks get it; root semantics upstream
-    algo = "bine" if cfg.backend.startswith("bine") else "binomial"
+    algo = _rooted_algo(cfg)
     return shmap.reduce(x, axis, root, algo)
 
 
@@ -176,7 +227,7 @@ def gather(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "gather", x, axis, gathered=True)
     if cfg.backend == "xla":
         return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
-    algo = "bine" if cfg.backend.startswith("bine") else "binomial"
+    algo = _rooted_algo(cfg)
     return shmap.gather(x, axis, root, algo)
 
 
@@ -195,5 +246,5 @@ def scatter(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
             # bool/ints — no arithmetic involved)
             v = lax.all_gather(x, axis, axis=0, tiled=False)[root].reshape(p, -1)
         return lax.dynamic_index_in_dim(v, idx, axis=0, keepdims=False)
-    algo = "bine" if cfg.backend.startswith("bine") else "binomial"
+    algo = _rooted_algo(cfg)
     return shmap.scatter(x, axis, root, algo)

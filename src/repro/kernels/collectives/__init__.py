@@ -1,0 +1,18 @@
+"""Pallas fused-collective kernel subsystem (the ``pallas_fused`` backend).
+
+Executes bine / recdoub / ring schedule steps on-device: the inter-rank
+exchange stays a ``lax.ppermute`` per step, but each step's local
+reduce + pack / merge work runs as one fused Pallas kernel instead of a
+slice/add/concat HLO chain.  See ``ops`` (SPMD entry points), ``kernel``
+(the Pallas kernels), ``ref`` (pure-jnp oracles), and ``plan`` (fused vs
+unfused op/byte emission accounting for the dry-run roofline).
+"""
+
+from . import plan
+from .kernel import (ag_step_kernel, gather_matmul_kernel,
+                     matmul_pack_kernel, ring_update_kernel, rs_step_kernel)
+from .ops import (ALGOS, allgather, allgather_dim, allgather_matmul,
+                  allreduce, default_interpret, matmul_reduce_scatter,
+                  reduce_scatter, reduce_scatter_dim)
+from .ref import (ag_step_ref, gather_matmul_ref, matmul_pack_ref,
+                  ring_update_ref, rs_step_ref)

@@ -1,0 +1,321 @@
+"""Pallas kernels for the fused collective schedule steps.
+
+Each butterfly/ring schedule step in ``collectives.shmap`` lowers to a
+chain of separate HLO ops (dynamic-slice the kept half, dynamic-slice the
+sent half, add, concat/select, dynamic-update-slice) that each round-trip
+the vector through HBM.  The kernels here collapse one step's local work
+into a single pass:
+
+  * ``rs_step_kernel``   — incoming-chunk reduction (``kept + recv``)
+    fused with the *next* step's outgoing-half pack: one read of the kept
+    half (at its dynamic offset, via a scalar-prefetched block index map —
+    the slice never materializes), one read of ``recv``, one write of the
+    new window, and the next send-half peeled off in the same pass;
+  * ``ag_step_kernel``   — the allgather merge (concat in c-order) as a
+    single placement pass instead of concat/concat/select;
+  * ``ring_update_kernel`` — the ring step's read-modify-write of one
+    block, aliased in place (the rest of the buffer is never touched);
+  * ``matmul_pack_kernel`` / ``gather_matmul_kernel`` — a tiled matmul
+    whose output writes (resp. LHS reads) go through the reduce-scatter
+    pre-permute (resp. allgather un-permute) block order, fusing the
+    Sec. 4.3.1 contiguity permutation into the contraction.
+
+All kernels are *local*: the inter-rank exchange stays a ``lax.ppermute``
+issued by ``ops.py`` between kernel invocations, so XLA still schedules
+and overlaps the wire traffic.  The work is chunked over the Pallas grid;
+the TPU pipeline double-buffers the HBM->VMEM copies, so chunk ``i+1``
+streams in while chunk ``i`` reduces.  Arithmetic order is identical to
+the unfused shmap path (``kept + recv``), which is what makes the
+``pallas_fused`` backend bit-for-bit with the shmap backend in fp32.
+
+Validated in interpret mode against ``ref.py``
+(tests/kernels/test_fused_collectives.py), following the
+``kernels/flash_attention`` pattern.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: default chunk cap (elements) for the 1-D step kernels
+CHUNK = 1024
+
+
+def _pow2_divisor(n: int, cap: int = CHUNK) -> int:
+    """Largest power of two <= cap dividing n (1 if n is odd)."""
+    c = 1
+    while c * 2 <= cap and n % (c * 2) == 0:
+        c *= 2
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Reduce-scatter step: fused keep-slice + reduce (+ next-step send pack)
+# ---------------------------------------------------------------------------
+
+def _rs_step_body_send(cs_ref, buf_ref, recv_ref, out_ref, send_ref, *,
+                       chunk, q):
+    j = pl.program_id(0)
+    s = buf_ref[...] + recv_ref[...]
+    out_ref[...] = s
+    w0 = (1 - cs_ref[1]) * q
+    base = j * chunk
+
+    @pl.when(jnp.logical_and(base >= w0, base < w0 + q))
+    def _():
+        send_ref[pl.ds(base - w0, chunk)] = s
+
+
+def _rs_step_body_nosend(cs_ref, buf_ref, recv_ref, out_ref):
+    out_ref[...] = buf_ref[...] + recv_ref[...]
+
+
+def rs_step_kernel(buf, recv, c, c_next=None, *, interpret: bool = True):
+    """buf: [2h]; recv: [h] -> newbuf [h] (+ send [h//2] when c_next given).
+
+    ``newbuf = buf[c*h : (c+1)*h] + recv``; the kept half is read directly
+    at its dynamic offset through the scalar-prefetched block index map —
+    no separate slice op ever materializes.  ``send`` is
+    ``newbuf[(1-c_next)*q : +q]``, packed in the same pass.
+    """
+    h = recv.shape[0]
+    assert buf.shape == (2 * h,), (buf.shape, h)
+    if c_next is None:
+        chunk = _pow2_divisor(h)
+        nch = h // chunk
+        cs = jnp.stack([jnp.asarray(c, jnp.int32)])
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(nch,),
+            in_specs=[
+                pl.BlockSpec((chunk,), lambda j, cs: (cs[0] * nch + j,)),
+                pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+            ],
+            out_specs=pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+        )
+        return pl.pallas_call(
+            _rs_step_body_nosend, grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((h,), buf.dtype),
+            interpret=interpret,
+        )(cs, buf, recv)
+
+    assert h % 2 == 0, h
+    q = h // 2
+    chunk = _pow2_divisor(q)
+    nch = h // chunk
+    cs = jnp.stack([jnp.asarray(c, jnp.int32),
+                    jnp.asarray(c_next, jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(nch,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda j, cs: (cs[0] * nch + j,)),
+            pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+            # the send half stays resident for the whole grid; window
+            # chunks stream into it as they are reduced
+            pl.BlockSpec((q,), lambda j, cs: (0,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_rs_step_body_send, chunk=chunk, q=q),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((h,), buf.dtype),
+                   jax.ShapeDtypeStruct((q,), buf.dtype)],
+        interpret=interpret,
+    )(cs, buf, recv)
+
+
+# ---------------------------------------------------------------------------
+# Allgather step: fused c-ordered merge
+# ---------------------------------------------------------------------------
+
+def _ag_step_body(cs_ref, buf_ref, recv_ref, out_ref, *, nch):
+    j = pl.program_id(0)
+    c = cs_ref[0]
+    use_buf = jnp.logical_and(j >= c * nch, j < (c + 1) * nch)
+    out_ref[...] = jnp.where(use_buf, buf_ref[...], recv_ref[...])
+
+
+def ag_step_kernel(buf, recv, c, *, interpret: bool = True):
+    """buf, recv: [h] -> merged [2h] = [buf, recv] if c == 0 else
+    [recv, buf], written in one placement pass (no concat temporaries)."""
+    h = buf.shape[0]
+    assert recv.shape == (h,), (buf.shape, recv.shape)
+    chunk = _pow2_divisor(h)
+    nch = h // chunk
+    cs = jnp.stack([jnp.asarray(c, jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(2 * nch,),
+        in_specs=[
+            pl.BlockSpec((chunk,),
+                         lambda j, cs: (jnp.clip(j - cs[0] * nch, 0,
+                                                 nch - 1),)),
+            pl.BlockSpec((chunk,),
+                         lambda j, cs: (jnp.clip(j - (1 - cs[0]) * nch, 0,
+                                                 nch - 1),)),
+        ],
+        out_specs=pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_ag_step_body, nch=nch), grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((2 * h,), buf.dtype),
+        interpret=interpret,
+    )(cs, buf, recv)
+
+
+# ---------------------------------------------------------------------------
+# Ring step: in-place block update (aliased read-modify-write)
+# ---------------------------------------------------------------------------
+
+def _ring_update_body(s_ref, v_ref, recv_ref, out_ref, upd_ref=None):
+    r = v_ref[...] + recv_ref[...]
+    out_ref[...] = r
+    if upd_ref is not None:
+        upd_ref[...] = r
+
+
+def _ring_write_body(s_ref, v_ref, recv_ref, out_ref):
+    out_ref[...] = recv_ref[...]
+
+
+def ring_update_kernel(v, recv, ridx, *, accumulate: bool = True,
+                       return_updated: bool = False,
+                       interpret: bool = True):
+    """v: [p*b]; recv: [b] -> v with block ``ridx`` ``+= recv`` (or
+    ``= recv``).  The output aliases ``v``: only block ``ridx``'s chunks
+    are revised, the other p-1 blocks never cross HBM.
+
+    With ``return_updated=True`` (reduce-scatter path) the kernel also
+    emits the updated block as a second output — which *is* the next ring
+    step's outgoing chunk (``send_{t+1}`` reads the block ``ridx_t`` this
+    step just wrote), so the per-step send slice disappears entirely.
+    """
+    b = recv.shape[0]
+    assert v.shape[0] % b == 0, (v.shape, b)
+    chunk = _pow2_divisor(b)
+    nchb = b // chunk
+    s = jnp.stack([jnp.asarray(ridx, jnp.int32)])
+    in_specs = [
+        pl.BlockSpec((chunk,), lambda j, s: (s[0] * nchb + j,)),
+        pl.BlockSpec((chunk,), lambda j, s: (j,)),
+    ]
+    v_out_spec = pl.BlockSpec((chunk,), lambda j, s: (s[0] * nchb + j,))
+    if not accumulate:
+        assert not return_updated  # AG: the next send is recv itself
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(nchb,), in_specs=in_specs,
+            out_specs=v_out_spec)
+        return pl.pallas_call(
+            _ring_write_body, grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+            input_output_aliases={1: 0}, interpret=interpret,
+        )(s, v, recv)
+    if not return_updated:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(nchb,), in_specs=in_specs,
+            out_specs=v_out_spec)
+        return pl.pallas_call(
+            _ring_update_body, grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+            input_output_aliases={1: 0}, interpret=interpret,
+        )(s, v, recv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(nchb,), in_specs=in_specs,
+        out_specs=[v_out_spec,
+                   pl.BlockSpec((chunk,), lambda j, s: (j,))],
+    )
+    return pl.pallas_call(
+        _ring_update_body, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(v.shape, v.dtype),
+                   jax.ShapeDtypeStruct((b,), v.dtype)],
+        input_output_aliases={1: 0}, interpret=interpret,
+    )(s, v, recv)
+
+
+# ---------------------------------------------------------------------------
+# Fused matmul + block-permute (matmul+RS pack / AG+matmul unpack)
+# ---------------------------------------------------------------------------
+
+def _mm_body(perm_ref, x_ref, w_ref, o_ref, acc_ref, *, nk):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _mm_call(x, w, perm, lhs_perm: bool, *, bm, bn, bk, interpret):
+    m, k = x.shape
+    n = w.shape[1]
+    nb = perm.shape[0]
+    rows = m // nb
+    bm = _pow2_divisor(rows, bm)
+    bn = _pow2_divisor(n, bn)
+    bk = _pow2_divisor(k, bk)
+    nm, nn, nk = m // bm, n // bn, k // bk
+    tpb = rows // bm  # row tiles per permutation block
+
+    def permrow(i, perm_ref):
+        return perm_ref[i // tpb] * tpb + i % tpb
+
+    if lhs_perm:
+        x_map = lambda i, j, kk, p: (permrow(i, p), kk)
+        o_map = lambda i, j, kk, p: (i, j)
+    else:
+        x_map = lambda i, j, kk, p: (i, kk)
+        o_map = lambda i, j, kk, p: (permrow(i, p), j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bk, bn), lambda i, j, kk, p: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out_dtype = jnp.result_type(x, w)
+    return pl.pallas_call(
+        functools.partial(_mm_body, nk=nk), grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(jnp.asarray(perm, jnp.int32), x, w)
+
+
+def matmul_pack_kernel(x, w, block_perm, *, bm: int = 128, bn: int = 128,
+                       bk: int = 512, interpret: bool = True):
+    """Tiled ``x @ w`` whose output row-block ``b`` holds input row-block
+    ``block_perm[b]``: the reduce-scatter pre-permute lands for free in the
+    matmul's output writes.  ``m % len(block_perm) == 0``."""
+    m = x.shape[0]
+    nb = block_perm.shape[0] if hasattr(block_perm, "shape") else len(block_perm)
+    assert m % nb == 0, (m, nb)
+    # output block b = input block perm[b]  <=>  out index map uses inverse
+    inv = jnp.argsort(jnp.asarray(block_perm, jnp.int32))
+    return _mm_call(x, w, inv, lhs_perm=False, bm=bm, bn=bn, bk=bk,
+                    interpret=interpret)
+
+
+def gather_matmul_kernel(xg, w, block_perm, *, bm: int = 128, bn: int = 128,
+                         bk: int = 512, interpret: bool = True):
+    """Tiled ``xg[block_perm] @ w`` (row blocks): the allgather's final
+    un-permute is folded into the LHS reads, never materialized."""
+    m = xg.shape[0]
+    nb = block_perm.shape[0] if hasattr(block_perm, "shape") else len(block_perm)
+    assert m % nb == 0, (m, nb)
+    return _mm_call(xg, w, jnp.asarray(block_perm, jnp.int32), lhs_perm=True,
+                    bm=bm, bn=bn, bk=bk, interpret=interpret)

@@ -1,0 +1,279 @@
+"""SPMD entry points of the ``pallas_fused`` collective backend.
+
+Same calling convention as ``collectives.shmap`` (call inside shard_map;
+``axis`` may be a name or a tuple of names), same schedules (the static
+tables from ``core.tables``), same wire traffic (one ``lax.ppermute`` per
+schedule step) — but every step's *local* work runs as one fused Pallas
+kernel from ``kernel.py`` instead of a slice/add/concat HLO chain:
+
+  * butterfly RS: the keep-slice, the reduction, and the next step's
+    send-half pack collapse into ``rs_step_kernel`` (the first step's pack
+    is a bare slice — there is no earlier kernel to fuse it into);
+  * butterfly AG: the concat/concat/select triple collapses into
+    ``ag_step_kernel``;
+  * ring RS/AG: the read-modify-write of the rotating block runs in place
+    through ``ring_update_kernel`` (the send-slice stays a plain slice —
+    it is a pure copy XLA folds into the ppermute);
+  * ``matmul_reduce_scatter`` / ``allgather_matmul``: the TP contraction
+    absorbs the Sec. 4.3.1 block permutation of its adjacent schedule
+    step (output writes resp. LHS reads go through the permuted block
+    index map), overlapping the matmul with the first/last exchange.
+
+Arithmetic order matches shmap exactly (``kept + recv``), so the fp32
+results are bit-for-bit identical to the shmap backend.  ``interpret``
+defaults to True off-TPU (the flash_attention convention), which keeps
+tier-1 green on the CPU host while the same code compiles on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.collectives import shmap
+from repro.core import tables as tb
+
+from . import kernel as K
+
+Axis = shmap.Axis
+
+_KIND = {"bine": "bine_dd", "recdoub": "recdoub_dd"}
+
+#: schedule families the fused kernels execute
+ALGOS = ("bine", "recdoub", "ring")
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas off-TPU (CPU tier-1), compile on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _interp(interpret):
+    return default_interpret() if interpret is None else interpret
+
+
+# ---------------------------------------------------------------------------
+# Butterfly cores
+# ---------------------------------------------------------------------------
+
+def _rs_core_fused(buf, axis: Axis, bt: tb.ButterflyTables, interpret):
+    idx = shmap.axis_index(axis)
+    half = buf.shape[0] // 2
+    c = jnp.asarray(bt.cbit[0])[idx]
+    send = lax.dynamic_slice(buf, ((1 - c) * half,), (half,))
+    for i in range(bt.s):
+        recv = lax.ppermute(send, axis, perm=list(bt.perms[i]))
+        if i + 1 < bt.s:
+            c_next = jnp.asarray(bt.cbit[i + 1])[idx]
+            buf, send = K.rs_step_kernel(buf, recv, c, c_next,
+                                         interpret=interpret)
+            c = c_next
+        else:
+            buf = K.rs_step_kernel(buf, recv, c, interpret=interpret)
+    return buf
+
+
+def _ag_core_fused(buf, axis: Axis, bt: tb.ButterflyTables, interpret):
+    idx = shmap.axis_index(axis)
+    for i in range(bt.s - 1, -1, -1):
+        recv = lax.ppermute(buf, axis, perm=list(bt.perms[i]))
+        c = jnp.asarray(bt.cbit[i])[idx]
+        buf = K.ag_step_kernel(buf, recv, c, interpret=interpret)
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# Collectives
+# ---------------------------------------------------------------------------
+
+def reduce_scatter(x, axis: Axis, algo: str = "bine", interpret=None):
+    """Full vector (len % p == 0) -> this rank's reduced block."""
+    p = shmap.axis_size(axis)
+    if p == 1:
+        return x
+    interpret = _interp(interpret)
+    if algo == "ring":
+        return _ring_reduce_scatter(x, axis, interpret)
+    bt = tb.butterfly_tables(_KIND[algo], p)
+    v = x.reshape(-1)
+    assert v.shape[0] % p == 0, "reduce_scatter needs len divisible by p"
+    blk = v.shape[0] // p
+    v = v.reshape(p, blk)[jnp.asarray(bt.inv_final)].reshape(-1)
+    return _rs_core_fused(v, axis, bt, interpret)
+
+
+def allgather(x, axis: Axis, algo: str = "bine", interpret=None):
+    """This rank's block -> full vector in rank order."""
+    p = shmap.axis_size(axis)
+    if p == 1:
+        return x
+    interpret = _interp(interpret)
+    if algo == "ring":
+        return _ring_allgather(x, axis, interpret)
+    bt = tb.butterfly_tables(_KIND[algo], p)
+    v = x.reshape(-1)
+    blk = v.shape[0]
+    v = _ag_core_fused(v, axis, bt, interpret)
+    return v.reshape(p, blk)[jnp.asarray(bt.final_block)].reshape(-1)
+
+
+def allreduce(x, axis: Axis, algo: str = "bine", interpret=None):
+    """Large-vector allreduce: fused RS (dist-doubling) + fused AG
+    (dist-halving); no block permutation needed (the AG inverts the RS)."""
+    p = shmap.axis_size(axis)
+    if p == 1:
+        return x
+    interpret = _interp(interpret)
+    v = x.reshape(-1)
+    v, n = shmap._pad_to(v, p)
+    if algo == "ring":
+        block = _ring_rs_flat(v, axis, interpret)
+        full = _ring_ag_flat(block, axis, interpret)
+    else:
+        bt = tb.butterfly_tables(_KIND[algo], p)
+        v = _rs_core_fused(v, axis, bt, interpret)
+        full = _ag_core_fused(v, axis, bt, interpret)
+    return full[:n].reshape(x.shape)
+
+
+def reduce_scatter_dim(x, dim: int, axis: Axis, algo: str = "bine",
+                       interpret=None):
+    """Dim-general fused RS (the ZeRO gradient path): reduce over ``axis``
+    ranks, scatter blocks of dim ``dim``.  Runs the flat fused core over a
+    dim-fronted view (one transpose each way; the per-step slice/add
+    chains are still fused away)."""
+    p = shmap.axis_size(axis)
+    if p == 1:
+        return x
+    assert x.shape[dim] % p == 0, (x.shape, dim, p)
+    xm = jnp.moveaxis(x, dim, 0)
+    flat = reduce_scatter(xm.reshape(-1), axis, algo, interpret)
+    out_shape = (xm.shape[0] // p,) + xm.shape[1:]
+    return jnp.moveaxis(flat.reshape(out_shape), 0, dim)
+
+
+def allgather_dim(x, dim: int, axis: Axis, algo: str = "bine",
+                  interpret=None):
+    """Inverse of :func:`reduce_scatter_dim`: gather blocks along ``dim``."""
+    p = shmap.axis_size(axis)
+    if p == 1:
+        return x
+    xm = jnp.moveaxis(x, dim, 0)
+    flat = allgather(xm.reshape(-1), axis, algo, interpret)
+    out_shape = (xm.shape[0] * p,) + xm.shape[1:]
+    return jnp.moveaxis(flat.reshape(out_shape), 0, dim)
+
+
+# ---------------------------------------------------------------------------
+# Ring (fused read-modify-write; same rotation as shmap's ring)
+# ---------------------------------------------------------------------------
+
+def _ring_rs_flat(v, axis: Axis, interpret):
+    p = shmap.axis_size(axis)
+    idx = shmap.axis_index(axis)
+    assert v.shape[0] % p == 0
+    blk = v.shape[0] // p
+    perm = shmap._ring_perm(p)
+    # step t sends block (idx-t-1) — which step t-1 just updated, so the
+    # kernel's second output IS the next send and no per-step slice exists
+    send = lax.dynamic_slice(v, (((idx - 1) % p) * blk,), (blk,))
+    for t in range(p - 1):
+        recv = lax.ppermute(send, axis, perm=perm)
+        ridx = (idx - t - 2) % p
+        if t + 1 < p - 1:
+            v, send = K.ring_update_kernel(v, recv, ridx, accumulate=True,
+                                           return_updated=True,
+                                           interpret=interpret)
+        else:
+            v = K.ring_update_kernel(v, recv, ridx, accumulate=True,
+                                     interpret=interpret)
+    return lax.dynamic_slice(v, (idx * blk,), (blk,))
+
+
+def _ring_reduce_scatter(x, axis: Axis, interpret):
+    return _ring_rs_flat(x.reshape(-1), axis, interpret)
+
+
+def _ring_ag_flat(block, axis: Axis, interpret):
+    p = shmap.axis_size(axis)
+    idx = shmap.axis_index(axis)
+    blk = block.shape[0]
+    v = jnp.zeros((p * blk,), block.dtype)
+    v = lax.dynamic_update_slice(v, block, (idx * blk,))
+    perm = shmap._ring_perm(p)
+    # step t forwards what step t-1 delivered (send_{t} = recv_{t-1}), so
+    # the rotating chunk never needs re-slicing from the buffer
+    send = block.reshape(-1)
+    for t in range(p - 1):
+        recv = lax.ppermute(send, axis, perm=perm)
+        ridx = (idx - t - 1) % p
+        v = K.ring_update_kernel(v, recv, ridx, accumulate=False,
+                                 interpret=interpret)
+        send = recv
+    return v
+
+
+def _ring_allgather(x, axis: Axis, interpret):
+    return _ring_ag_flat(x.reshape(-1), axis, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused matmul + schedule-edge collectives (TP contraction overlap)
+# ---------------------------------------------------------------------------
+
+def matmul_reduce_scatter(x, w, axis: Axis, algo: str = "bine",
+                          interpret=None):
+    """``reduce_scatter(x @ w)`` over ``axis``, rows scattered: rank r gets
+    rows ``[r*m/p, (r+1)*m/p)`` of the rank-summed product.
+
+    The matmul's output writes go straight to the reduce-scatter's
+    pre-permuted block layout (``matmul_pack_kernel``), so the contraction
+    overlaps the first schedule step and the Sec. 4.3.1 permutation costs
+    nothing.  ``m % p == 0`` required.
+    """
+    p = shmap.axis_size(axis)
+    m, n = x.shape[0], w.shape[1]
+    if p == 1:
+        y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                    precision=lax.Precision.HIGHEST)
+        return y.astype(jnp.result_type(x, w))
+    assert m % p == 0, (m, p)
+    interpret = _interp(interpret)
+    if algo == "ring":
+        perm = jnp.arange(p, dtype=jnp.int32)  # ring scatters in rank order
+        y = K.matmul_pack_kernel(x, w, perm, interpret=interpret)
+        out = _ring_rs_flat(y.reshape(-1), axis, interpret)
+    else:
+        bt = tb.butterfly_tables(_KIND[algo], p)
+        y = K.matmul_pack_kernel(x, w, jnp.asarray(bt.inv_final),
+                                 interpret=interpret)
+        out = _rs_core_fused(y.reshape(-1), axis, bt, interpret)
+    return out.reshape(m // p, n)
+
+
+def allgather_matmul(x, w, axis: Axis, algo: str = "bine", interpret=None):
+    """``allgather(x over axis) @ w``: rank r contributes rows
+    ``[r*mb, (r+1)*mb)`` of the gathered LHS; every rank returns the full
+    ``[p*mb, n]`` product.
+
+    The allgather's final block un-permute is folded into the matmul's LHS
+    reads (``gather_matmul_kernel``), overlapping the contraction with the
+    last schedule step.
+    """
+    p = shmap.axis_size(axis)
+    if p == 1:
+        y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                    precision=lax.Precision.HIGHEST)
+        return y.astype(jnp.result_type(x, w))
+    interpret = _interp(interpret)
+    mb, k = x.shape
+    if algo == "ring":
+        g = _ring_ag_flat(x.reshape(-1), axis, interpret)
+        perm = jnp.arange(p, dtype=jnp.int32)
+    else:
+        bt = tb.butterfly_tables(_KIND[algo], p)
+        g = _ag_core_fused(x.reshape(-1), axis, bt, interpret)
+        perm = jnp.asarray(bt.final_block)
+    return K.gather_matmul_kernel(g.reshape(p * mb, k), w, perm,
+                                  interpret=interpret)

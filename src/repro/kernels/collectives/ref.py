@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the fused collective step kernels.
+
+Each function states the exact semantics its Pallas twin in ``kernel.py``
+must reproduce *bitwise* (the fused kernels reorder memory traffic, never
+arithmetic): the reduction is always ``kept + recv`` in the input dtype,
+exactly the operand order of ``collectives.shmap._rs_core``, so the
+``pallas_fused`` backend can promise bit-for-bit parity with the shmap
+backend (tests/kernels/test_fused_collectives.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rs_step_ref(buf, recv, c, c_next=None):
+    """One vector-halving reduce-scatter step (paper Sec. 4.3).
+
+    ``buf``: [2h] this rank's current window; ``recv``: [h] the partner's
+    transmitted half; ``c``: which half this rank keeps (0 = lower).
+
+    Returns ``newbuf = buf[c*h : (c+1)*h] + recv`` — the keep-slice and the
+    reduction in one pass.  With ``c_next`` given (every step but the
+    last), also returns ``send = newbuf[(1-c_next)*q : +q]`` (``q = h//2``),
+    the *next* step's outgoing half packed in the same pass.
+    """
+    h = recv.shape[0]
+    newbuf = lax.dynamic_slice(buf, (c * h,), (h,)) + recv
+    if c_next is None:
+        return newbuf
+    q = h // 2
+    send = lax.dynamic_slice(newbuf, ((1 - c_next) * q,), (q,))
+    return newbuf, send
+
+
+def ag_step_ref(buf, recv, c):
+    """One vector-doubling allgather step: merge own window and the
+    received window in c-order — ``[buf, recv]`` when ``c == 0`` (this rank
+    holds the lower half), ``[recv, buf]`` otherwise.  Replaces the
+    concat/concat/where triple of ``collectives.shmap._ag_core``."""
+    lo = jnp.concatenate([buf, recv])
+    hi = jnp.concatenate([recv, buf])
+    return jnp.where(c == 0, lo, hi)
+
+
+def ring_update_ref(v, recv, ridx, accumulate=True):
+    """One ring step's read-modify-write: block ``ridx`` of ``v`` (in units
+    of ``len(recv)``) gets ``+= recv`` (reduce-scatter) or ``= recv``
+    (allgather).  The fused kernel touches only that block; the rest of
+    ``v`` aliases through untouched."""
+    b = recv.shape[0]
+    if accumulate:
+        cur = lax.dynamic_slice(v, (ridx * b,), (b,))
+        recv = cur + recv
+    return lax.dynamic_update_slice(v, recv, (ridx * b,))
+
+
+def matmul_pack_ref(x, w, block_perm):
+    """``y = x @ w`` (fp32 accumulation) with the rows of ``y`` re-ordered
+    in blocks of ``m / len(block_perm)``: output block ``b`` holds input
+    block ``block_perm[b]`` — the reduce-scatter pre-permute (Sec. 4.3.1)
+    folded into the matmul's output write."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                precision=lax.Precision.HIGHEST)
+    y = y.astype(jnp.result_type(x, w))
+    nb = len(block_perm)
+    rows = y.shape[0] // nb
+    return y.reshape(nb, rows, y.shape[1])[jnp.asarray(block_perm)].reshape(
+        y.shape)
+
+
+def gather_matmul_ref(xg, w, block_perm):
+    """``xg.reshape(nb, rows, k)[block_perm] @ w``: the allgather's final
+    block un-permute folded into the matmul's LHS reads instead of a
+    materialized gather."""
+    nb = len(block_perm)
+    rows = xg.shape[0] // nb
+    x = xg.reshape(nb, rows, xg.shape[1])[jnp.asarray(block_perm)].reshape(
+        xg.shape)
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                precision=lax.Precision.HIGHEST)
+    return y.astype(jnp.result_type(xg, w))

@@ -352,6 +352,33 @@ def _fusion_bytes(op: Op, comp: Computation,
     return total
 
 
+def module_op_counts(comps: Dict[str, Computation],
+                     mult: Dict[str, float]) -> Dict[str, float]:
+    """Executed-op histogram: op kind -> multiplicity-weighted count.
+
+    Fusion bodies are excluded (a fusion counts as one unit, matching the
+    byte accounting) and so are the free ops.  Used by the fused-collective
+    dry-run to compare emitted-op counts between execution paths.
+    """
+    out: Dict[str, float] = {}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or comp.is_fusion_body:
+            continue
+        for op in comp.ops:
+            if op.kind in _FREE_OPS:
+                continue
+            out[op.kind] = out.get(op.kind, 0.0) + m
+    return out
+
+
+def op_counts_from_text(text: str) -> Dict[str, float]:
+    """``module_op_counts`` straight from ``compiled.as_text()``."""
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    return module_op_counts(comps, compute_multiplicities(comps, entry))
+
+
 def module_bytes(comps: Dict[str, Computation],
                  mult: Dict[str, float]) -> float:
     total = 0.0

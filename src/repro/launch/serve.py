@@ -81,6 +81,8 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="pool-global nucleus sampling threshold")
     ap.add_argument("--backend", default="auto", choices=("auto", "xla"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -120,7 +122,8 @@ def main(argv=None):
 
     with set_mesh(mesh):
         sched = ContinuousBatchingScheduler(
-            cfg, fns, params, args.slots, S, top_k=args.top_k, seed=args.seed)
+            cfg, fns, params, args.slots, S, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed)
         for req in trace:
             sched.submit(req)
         t0 = time.time()

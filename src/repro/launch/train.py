@@ -41,7 +41,7 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--backend", default="bine",
                     choices=["bine", "recdoub", "ring", "xla", "bine_hier",
-                             "auto"])
+                             "pallas_fused", "auto"])
     ap.add_argument("--topology", default="tpu_multipod",
                     help="decision-table preset for --backend auto")
     ap.add_argument("--wire-dtype", default="float32",

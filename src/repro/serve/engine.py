@@ -90,6 +90,16 @@ def collective_plan(model_cfg, scfg: ServeConfig, mesh, B: int) -> Dict[str, str
     fastest on ``scfg.topology`` at this batch/model size.  Consumed by
     benchmarks/monitoring (and by future manual-decode paths); returned as
     ``shardings["plan"]`` from ``make_serve_fns``.
+
+    With the fused kernel subsystem registered in the candidate sets, the
+    recommendations may now be ``"pallas_fused"`` — for
+    ``logits_allgather`` that names the
+    ``repro.kernels.collectives.allgather_matmul`` pipeline (the vocab
+    re-assembly overlapped with the head contraction); the pooled sampler
+    treats any recommendation as its gather-first signal
+    (``serve.sampling.make_sampler``).  Key set is pinned by
+    tests/serve/test_collective_plan.py and never depends on the backend
+    chosen.
     """
     if scfg.backend != "auto":
         return {}

@@ -35,23 +35,36 @@ class SamplingParams:
     ``top_k`` shapes the compiled ``lax.top_k`` call and is therefore
     *pool-global*: the scheduler rejects a request whose nonzero ``top_k``
     differs from the pool's, rather than silently sampling full-vocab.
+    ``top_p`` (nucleus sampling) is pool-global under the same contract:
+    the threshold itself never changes any shape, but keeping it global
+    means the compiled sampler either contains the full-vocab sort or
+    doesn't — a request cannot toggle that per slot.
     """
     temperature: float = 0.0   # 0 => greedy
     top_k: int = 0             # 0 => pool default / full vocab
+    top_p: float = 0.0         # 0 => pool default / no nucleus cut
 
 
-def make_sampler(top_k: int = 0, plan: Optional[Dict[str, str]] = None):
+def make_sampler(top_k: int = 0, top_p: float = 0.0,
+                 plan: Optional[Dict[str, str]] = None):
     """Compile a pooled sampler ``(logits [B,V], temperature [B],
     rids [B], steps [B], key) -> tokens [B] int32``.
 
-    ``top_k`` is static (it shapes the lax.top_k call); per-slot
-    ``temperature`` and the RNG stream ids are traced.  Each slot's key is
+    ``top_k`` is static (it shapes the lax.top_k call); so is ``top_p``
+    (0 disables the nucleus cut; a value in (0, 1) compiles the sort +
+    cumulative-mass mask, applied after top_k and temperature — the
+    nucleus is computed on the temperature-scaled distribution, so it
+    honors per-slot temperature).  Per-slot ``temperature`` and the RNG
+    stream ids are traced.  Each slot's key is
     ``fold_in(fold_in(key, rid), step)`` — two exact folds, so distinct
     (request, token-index) pairs can never share a stream.  ``plan`` is
     the serving collective plan from ``make_serve_fns`` — presence of
-    ``logits_allgather`` routes the vocab re-assembly before sampling.
+    ``logits_allgather`` (whatever backend it recommends, including
+    ``pallas_fused``) routes the vocab re-assembly before sampling.
     """
     gather_first = bool(plan) and "logits_allgather" in plan
+    if not 0.0 <= top_p <= 1.0:
+        raise ValueError(f"top_p must be in [0, 1], got {top_p}")
 
     def sample(logits, temperature, rids, steps, key):
         logits = logits.astype(jnp.float32)
@@ -68,6 +81,17 @@ def make_sampler(top_k: int = 0, plan: Optional[Dict[str, str]] = None):
             lambda r, s: jax.random.fold_in(jax.random.fold_in(key, r), s)
         )(rids, steps)
         scaled = logits / jnp.maximum(temperature[:, None], 1e-6)
+        if 0.0 < top_p < 1.0:
+            # nucleus cut: keep the smallest prefix of the sorted
+            # distribution whose mass reaches top_p (the argmax token is
+            # always kept — its preceding mass is 0), mask the rest
+            srt = jnp.sort(scaled, axis=-1)[..., ::-1]
+            probs = jax.nn.softmax(srt, axis=-1)
+            before = jnp.cumsum(probs, axis=-1) - probs
+            kept = before < top_p
+            thr = jnp.min(jnp.where(kept, srt, jnp.inf), axis=-1,
+                          keepdims=True)
+            scaled = jnp.where(scaled < thr, -jnp.inf, scaled)
         drawn = jax.vmap(jax.random.categorical)(keys, scaled)
         return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)
 

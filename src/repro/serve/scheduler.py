@@ -15,7 +15,7 @@ Each scheduler iteration (:meth:`ContinuousBatchingScheduler.step`):
   2. **Decode**: one ``decode_slots`` step over the whole pool — every
      RUNNING request advances one token regardless of when it was admitted
      or how long its prompt was; retired pages hold their position.
-  3. **Sample + retire**: per-slot greedy/temperature/top-k sampling
+  3. **Sample + retire**: per-slot greedy/temperature/top-k/top-p sampling
      (RNG keyed per (request, token-index), so draws are independent of
      batch composition), then EOS / max-token retirement frees pages for
      the next admission.
@@ -67,7 +67,8 @@ class ContinuousBatchingScheduler:
     """Drives a :class:`repro.serve.engine.ServeFns` pool to completion."""
 
     def __init__(self, model_cfg, fns, params, n_slots: int,
-                 max_seq_len: int, top_k: int = 0, seed: int = 0):
+                 max_seq_len: int, top_k: int = 0, top_p: float = 0.0,
+                 seed: int = 0):
         if fns.insert is None:
             raise NotImplementedError(
                 f"continuous batching unsupported for {model_cfg.name!r}: "
@@ -80,9 +81,11 @@ class ContinuousBatchingScheduler:
         self.n_slots = n_slots
         self.max_seq_len = max_seq_len
         self.top_k = top_k
+        self.top_p = top_p
         self.alloc = SlotAllocator(n_slots)
         self.pool = fns.init_pool()
-        self.sampler = S.make_sampler(top_k, plan=fns.shardings.get("plan"))
+        self.sampler = S.make_sampler(top_k, top_p,
+                                      plan=fns.shardings.get("plan"))
         self.key = jax.random.key(seed)
         self.clock = 0.0
         self.tokens_out = 0
@@ -109,6 +112,11 @@ class ContinuousBatchingScheduler:
                 f"request {req.rid}: top_k={req.sampling.top_k} differs from "
                 f"the pool sampler's top_k={self.top_k} (top_k shapes the "
                 f"compiled sampler, so it is pool-global)")
+        if req.sampling.top_p not in (0.0, self.top_p):
+            raise ValueError(
+                f"request {req.rid}: top_p={req.sampling.top_p} differs from "
+                f"the pool sampler's top_p={self.top_p} (top_p selects the "
+                f"compiled sampler's nucleus path, so it is pool-global)")
         heapq.heappush(self._waiting, (req.arrival, req.rid, req))
 
     # -- internals ----------------------------------------------------------

@@ -19,6 +19,19 @@ psum (priced as a recursive-doubling allreduce).  Proxies are good enough
 for benchmark comparison; ``xla`` is intentionally *not* in ``CANDIDATES``,
 the set the decision table minimizes over, so model error in the proxies
 can never leak into auto-selection.
+
+Besides the wire time, every backend is charged a **local memory term**:
+each step's received payload crosses HBM ``passes`` times before the next
+step can send (the slice/add/concat chain of the shmap lowering —
+``UNFUSED_HBM_PASSES``), except for ``pallas_fused``, whose fused step
+kernels make a single pass (``FUSED_HBM_PASSES``); its small-allreduce
+regime falls back to the unfused shmap path and is priced accordingly.
+``pallas_fused`` executes the bine schedule, so its wire time equals
+bine's; it additionally pays ``FUSED_STEP_OVERHEAD_S`` per step (one
+kernel launch per schedule step), so the decision tables pick it exactly
+where the saved HBM passes beat that overhead — the large-payload
+buckets — while the latency-bound small buckets stay with the plain
+backends.
 """
 
 from __future__ import annotations
@@ -27,10 +40,29 @@ from functools import lru_cache
 from typing import Dict, Tuple, Union
 
 from repro.core.schedules import Sched, get_schedule
-from repro.core.traffic import GroupedTopo, TorusTopo, sched_time, torus_time
+from repro.core.traffic import (GroupedTopo, TorusTopo, msg_bytes,
+                                sched_time, torus_time)
 
 #: default small/large switch, kept in sync with CollectiveConfig
 SMALL_CUTOFF_BYTES = 16384
+
+#: HBM bandwidth for the local-memory term (TPU v5e, matching launch.hlo)
+HBM_BW = 819e9
+
+#: HBM round trips of one step's received payload: the unfused shmap chain
+#: materializes the kept slice, the reduction, and the repack; the fused
+#: Pallas step kernel streams all three in one pass.
+UNFUSED_HBM_PASSES = 3.0
+FUSED_HBM_PASSES = 1.0
+
+#: per-step kernel-launch overhead of the fused path (one custom-call per
+#: schedule step).  This is what keeps the latency-bound small buckets
+#: with the plain backends: the fused pass only wins once the saved HBM
+#: round trips outweigh a kernel launch per step.
+FUSED_STEP_OVERHEAD_S = 1.0e-6
+
+#: backends executed by ``repro.kernels.collectives`` fused step kernels
+FUSED_BACKENDS = ("pallas_fused",)
 
 #: (collective, backend) -> (schedule collective, small algo, large algo)
 #: — the schedule collective differs from the API collective only for the
@@ -40,16 +72,19 @@ _SCHED_ALGO: Dict[Tuple[str, str], Tuple[str, str, str]] = {
     ("allreduce", "recdoub"): ("allreduce", "recdoub_small", "recdoub"),
     ("allreduce", "ring"): ("allreduce", "ring", "ring"),
     ("allreduce", "xla"): ("allreduce", "ring", "ring"),
+    ("allreduce", "pallas_fused"): ("allreduce", "bine_small", "bine"),
 
     ("reduce_scatter", "bine"): ("reduce_scatter", "bine", "bine"),
     ("reduce_scatter", "recdoub"): ("reduce_scatter", "recdoub", "recdoub"),
     ("reduce_scatter", "ring"): ("reduce_scatter", "ring", "ring"),
     ("reduce_scatter", "xla"): ("reduce_scatter", "ring", "ring"),
+    ("reduce_scatter", "pallas_fused"): ("reduce_scatter", "bine", "bine"),
 
     ("allgather", "bine"): ("allgather", "bine", "bine"),
     ("allgather", "recdoub"): ("allgather", "recdoub", "recdoub"),
     ("allgather", "ring"): ("allgather", "ring", "ring"),
     ("allgather", "xla"): ("allgather", "ring", "ring"),
+    ("allgather", "pallas_fused"): ("allgather", "bine", "bine"),
 
     ("alltoall", "bine"): ("alltoall", "bine", "bine"),
     ("alltoall", "recdoub"): ("alltoall", "recdoub", "recdoub"),
@@ -78,9 +113,9 @@ _SCHED_ALGO: Dict[Tuple[str, str], Tuple[str, str, str]] = {
 #: is dispatchable by ``collectives.api`` (for the rooted collectives,
 #: "recdoub" selects the classical binomial-tree family there).
 CANDIDATES: Dict[str, Tuple[str, ...]] = {
-    "allreduce": ("bine", "recdoub", "ring"),
-    "reduce_scatter": ("bine", "recdoub", "ring"),
-    "allgather": ("bine", "recdoub", "ring"),
+    "allreduce": ("bine", "recdoub", "ring", "pallas_fused"),
+    "reduce_scatter": ("bine", "recdoub", "ring", "pallas_fused"),
+    "allgather": ("bine", "recdoub", "ring", "pallas_fused"),
     "alltoall": ("bine", "recdoub", "bruck"),
     "broadcast": ("bine", "recdoub"),
     "reduce": ("bine", "recdoub"),
@@ -106,18 +141,51 @@ def _cached_schedule(collective: str, algo: str, p: int) -> Sched:
     return get_schedule(collective, algo, p)
 
 
+def hbm_passes(backend: str, algo: str) -> float:
+    """Per-step HBM round trips of the received payload for this backend.
+
+    ``pallas_fused`` makes one pass (the fused step kernel), except in the
+    small-allreduce regime where it falls back to the unfused shmap path.
+    """
+    if backend in FUSED_BACKENDS and not algo.endswith("_small"):
+        return FUSED_HBM_PASSES
+    return UNFUSED_HBM_PASSES
+
+
+def _local_mem_time(sched: Sched, p: int, nbytes: float,
+                    passes: float) -> float:
+    """Bulk-synchronous local-memory term: per step, the slowest rank's
+    received bytes cross HBM ``passes`` times before the next step."""
+    t = 0.0
+    for step in sched:
+        per_rank: Dict[int, float] = {}
+        for m in step:
+            per_rank[m.dst] = per_rank.get(m.dst, 0.0) + msg_bytes(
+                m, p, nbytes)
+        if per_rank:
+            t += passes * max(per_rank.values()) / HBM_BW
+    return t
+
+
 def predict_time(collective: str, backend: str, p: int, nbytes: float,
                  topo: Union[GroupedTopo, TorusTopo],
                  small_cutoff_bytes: int = SMALL_CUTOFF_BYTES) -> float:
     """Modeled completion time (seconds) of one collective invocation.
 
-    ``nbytes`` is the *full-vector* payload (the convention of
-    ``core.traffic.msg_bytes``); ``p`` must be a power of two, like every
-    schedule in ``core.schedules``.
+    Wire time (α-β/contention) plus the local-memory term (see module
+    docstring).  ``nbytes`` is the *full-vector* payload (the convention
+    of ``core.traffic.msg_bytes``); ``p`` must be a power of two, like
+    every schedule in ``core.schedules``.
     """
     sched_coll, algo = schedule_algo(collective, backend, nbytes,
                                      small_cutoff_bytes)
     sched = _cached_schedule(sched_coll, algo, p)
     if isinstance(topo, TorusTopo):
-        return torus_time(sched, p, float(nbytes), topo)
-    return sched_time(sched, p, float(nbytes), topo)
+        wire = torus_time(sched, p, float(nbytes), topo)
+    else:
+        wire = sched_time(sched, p, float(nbytes), topo)
+    passes = hbm_passes(backend, algo)
+    local = _local_mem_time(sched, p, float(nbytes), passes)
+    if passes == FUSED_HBM_PASSES:
+        local += FUSED_STEP_OVERHEAD_S * len(sched)
+    return wire + local

@@ -13,7 +13,11 @@ and the lever that lets distance-doubling Bine reduce-scatter keep its
 *largest* messages inside a pod while only the smallest cross the DCN.
 
 Backends: bine (paper) | recdoub (binomial butterflies) | ring | xla
-(psum_scatter/all_gather) | bine_hier (Sec. 6.2: intra-pod first).
+(psum_scatter/all_gather) | bine_hier (Sec. 6.2: intra-pod first) |
+pallas_fused (the bine schedule with every step's local slice/add/concat
+chain fused into one Pallas kernel — ``repro.kernels.collectives``; fp32
+bit-for-bit with the bine shmap path) | auto (may resolve per leaf to any
+of these, including pallas_fused, via the topology decision table).
 """
 
 from __future__ import annotations
@@ -39,7 +43,8 @@ from repro.train import zero
 
 @dataclass(frozen=True)
 class TrainConfig:
-    backend: str = "bine"            # bine | recdoub | ring | xla | bine_hier | auto
+    backend: str = "bine"            # bine | recdoub | ring | xla | bine_hier
+    #                                # | pallas_fused | auto
     dp_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
     accum_steps: int = 1
@@ -101,6 +106,9 @@ def _rs_leaf(tcfg: TrainConfig, g, zd: int):
         # inclusive boundary, matching CollectiveConfig.small_cutoff_bytes
         if wire.size * wire.dtype.itemsize <= tcfg.small_cutoff_bytes:
             return shmap.allreduce_small(wire, axes, algo)
+        if b == "pallas_fused":
+            from repro.kernels import collectives as fused
+            return fused.allreduce(wire, axes, "bine")
         return shmap.allreduce_butterfly(wire, axes, algo)
     b = _backend_for(tcfg, "reduce_scatter", wire)
     if b == "xla":
@@ -111,6 +119,9 @@ def _rs_leaf(tcfg: TrainConfig, g, zd: int):
         for ax in reversed(axes):          # data, then pod
             out = shmap.reduce_scatter_dim(out, zd, ax, "bine")
         return out
+    if b == "pallas_fused":
+        from repro.kernels import collectives as fused
+        return fused.reduce_scatter_dim(wire, zd, axes, "bine")
     algo = {"bine": "bine", "recdoub": "recdoub", "ring": "ring"}[b]
     return shmap.reduce_scatter_dim(wire, zd, axes, algo)
 
@@ -128,11 +139,16 @@ def _ag_leaf(tcfg: TrainConfig, x, zd: int):
         for ax in axes:                    # pod, then data (inverse order)
             out = shmap.allgather_dim(out, zd, ax, "bine")
         return out
+    if b == "pallas_fused":
+        from repro.kernels import collectives as fused
+        return fused.allgather_dim(x, zd, axes, "bine")
     algo = {"bine": "bine", "recdoub": "recdoub", "ring": "ring"}[b]
     return shmap.allgather_dim(x, zd, axes, algo)
 
 
 def _scalar_allreduce(tcfg: TrainConfig, x):
+    # scalars always take the small full-vector path — nothing to fuse,
+    # so pallas_fused shares bine's tree here
     b = _backend_for(tcfg, "allreduce", x)
     if b == "xla":
         return lax.psum(x, tcfg.dp_axes)

@@ -67,3 +67,22 @@ def test_shape_parsing():
     assert H._bytes_of("f32[128,512]") == 128 * 512 * 4
     assert H._bytes_of("bf16[8,8]") == 128
     assert H._bytes_of("(s32[], bf16[128,256])") == 4 + 128 * 256 * 2
+
+
+def test_op_counts_from_text():
+    """module_op_counts: executed-op histogram, scan bodies multiplied,
+    free ops and fusion bodies excluded."""
+    W = jnp.zeros((64, 64), jnp.float32)
+
+    def scanned(x):
+        def body(c, _):
+            return c @ W, None
+        out, _ = lax.scan(body, x, None, length=6)
+        return out
+
+    x = jnp.zeros((32, 64), jnp.float32)
+    text = jax.jit(scanned).lower(x).compile().as_text()
+    counts = H.op_counts_from_text(text)
+    assert counts.get("dot", 0) == 6          # trip-count weighted
+    assert "parameter" not in counts          # free ops excluded
+    assert all(v > 0 for v in counts.values())

@@ -76,3 +76,45 @@ def test_plan_deterministic():
     a = collective_plan(cfg, scfg, _mesh(4, 2), B=16)
     b = collective_plan(cfg, scfg, _mesh(4, 2), B=16)
     assert a == b
+
+
+# ---------------------------------------------------------------------------
+# pallas_fused in the candidate sets: the plan may now recommend the fused
+# kernel subsystem, the key set stays exactly pinned, and the shipped
+# tables really contain fused entries where the cost model says they win
+# ---------------------------------------------------------------------------
+
+def test_pallas_fused_is_a_candidate_for_kernel_backed_collectives():
+    for coll in ("allreduce", "reduce_scatter", "allgather"):
+        assert "pallas_fused" in CANDIDATES[coll], coll
+    # no fused kernels for the rooted family / alltoall: never a candidate
+    for coll in ("alltoall", "broadcast", "reduce", "gather", "scatter"):
+        assert "pallas_fused" not in CANDIDATES[coll], coll
+
+
+@pytest.mark.parametrize("p", [4, 8])
+def test_fused_dispatchable_from_tables(p):
+    """select_backend at p in {4, 8} returns only dispatchable backends,
+    and the shipped tpu_multipod table picks pallas_fused somewhere in the
+    large-payload regime (the fused-step cost entries are live)."""
+    from repro.topology import load_table, select_backend
+
+    for coll in ("allreduce", "reduce_scatter", "allgather"):
+        for nbytes in (512, 1 << 16, 1 << 24, 1 << 28):
+            assert select_backend(coll, p, nbytes,
+                                  "tpu_multipod") in CANDIDATES[coll]
+    tab = load_table("tpu_multipod", build_if_missing=False)
+    fused_cells = [b for coll in ("allreduce", "reduce_scatter", "allgather")
+                   for b in tab.entries[coll][p] if b == "pallas_fused"]
+    assert fused_cells, f"no pallas_fused cells at p={p}"
+
+
+def test_plan_keys_pinned_with_fused_candidates():
+    """The key set never depends on which backend the table recommends."""
+    cfg = _cfg()
+    scfg = ServeConfig(dp_axes=("data",), backend="auto")
+    plan = collective_plan(cfg, scfg, _mesh(8, 4), B=8)
+    assert set(plan) == {"decode_attn_allreduce", "logits_allgather",
+                         "token_scatter", "token_gather"}
+    for key, backend in plan.items():
+        assert backend in CANDIDATES[PLAN_COLLECTIVE[key]], (key, backend)

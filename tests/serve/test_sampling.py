@@ -1,0 +1,95 @@
+"""Pooled sampler: top-p (nucleus) semantics, pool-global contract, and
+per-(request, token-index) RNG independence."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.serve.sampling import SamplingParams, make_sampler  # noqa: E402
+
+V = 64
+
+
+def _logits(B=4, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(B, V)
+                       .astype(np.float32))
+
+
+def _call(sampler, logits, temps, seed=0):
+    B = logits.shape[0]
+    return np.asarray(sampler(
+        logits, jnp.asarray(temps, jnp.float32),
+        jnp.arange(B, dtype=jnp.int32), jnp.zeros(B, jnp.int32),
+        jax.random.key(seed)))
+
+
+def test_top_p_validation():
+    with pytest.raises(ValueError, match="top_p"):
+        make_sampler(top_p=1.5)
+    with pytest.raises(ValueError, match="top_p"):
+        make_sampler(top_p=-0.1)
+
+
+def test_greedy_unaffected_by_top_p():
+    logits = _logits()
+    for top_p in (0.0, 0.1, 0.9):
+        toks = _call(make_sampler(top_p=top_p), logits,
+                     np.zeros(logits.shape[0]))
+        np.testing.assert_array_equal(
+            toks, np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_tiny_top_p_collapses_to_argmax():
+    """A nucleus smaller than the top token's mass keeps only the top
+    token — sampled output must equal greedy even at high temperature."""
+    logits = _logits(B=8, seed=3)
+    toks = _call(make_sampler(top_p=1e-6), logits,
+                 np.full(8, 5.0, np.float32))
+    np.testing.assert_array_equal(toks, np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_top_p_restricts_to_nucleus():
+    """With a peaked two-token distribution and top_p covering exactly
+    those two, every draw lands in the nucleus."""
+    B = 6
+    base = np.full((B, V), -20.0, np.float32)
+    base[:, 7] = 4.0
+    base[:, 21] = 3.9
+    sampler = make_sampler(top_p=0.95)
+    for seed in range(5):
+        toks = _call(sampler, jnp.asarray(base), np.ones(B, np.float32),
+                     seed=seed)
+        assert set(toks.tolist()) <= {7, 21}, toks
+
+
+def test_top_p_keeps_smallest_sufficient_prefix():
+    """Uniform tail + one dominant token, top_p just above the dominant
+    mass: nucleus = {dominant, next} at most — never the whole tail."""
+    B = 4
+    base = np.zeros((B, V), np.float32)
+    base[:, 0] = 10.0   # ~1.0 of the mass after softmax
+    sampler = make_sampler(top_p=0.5)
+    for seed in range(4):
+        toks = _call(sampler, jnp.asarray(base), np.ones(B, np.float32),
+                     seed=seed)
+        np.testing.assert_array_equal(toks, np.zeros(B, np.int64))
+
+
+def test_draws_keyed_per_request_not_per_slot():
+    """The same (rid, step) draws the same token regardless of where in
+    the batch it sits or what shares the pool — with and without top_p."""
+    logits = np.tile(_logits(B=1, seed=9), (3, 1))
+    for top_p in (0.0, 0.8):
+        sampler = make_sampler(top_p=top_p)
+        key = jax.random.key(0)
+        a = np.asarray(sampler(jnp.asarray(logits), jnp.ones(3),
+                               jnp.asarray([5, 5, 2], jnp.int32),
+                               jnp.asarray([1, 1, 1], jnp.int32), key))
+        assert a[0] == a[1]  # identical (rid, step) => identical draw
+
+
+def test_sampling_params_defaults():
+    sp = SamplingParams()
+    assert sp.top_p == 0.0 and sp.top_k == 0 and sp.temperature == 0.0

@@ -61,13 +61,13 @@ class _FakeFns:
         return pool
 
 
-def _fake_sched(n_slots, max_seq_len=64):
+def _fake_sched(n_slots, max_seq_len=64, top_p=0.0):
     import repro.configs.gemma3_4b  # noqa: F401  (registers the arch)
     from repro.configs import base
     cfg = base.reduced(base.get_config("gemma3-4b"))
     return ContinuousBatchingScheduler(
         cfg, _FakeFns(n_slots), params=None, n_slots=n_slots,
-        max_seq_len=max_seq_len)
+        max_seq_len=max_seq_len, top_p=top_p)
 
 
 def _expected(L, n):
@@ -127,6 +127,29 @@ def test_submit_validation():
         sched.submit(Request(rid=2, prompt=np.zeros(4, np.int32),
                              max_new_tokens=2,
                              sampling=SamplingParams(top_k=8)))
+    # top_p selects the compiled sampler's nucleus path: pool-global too
+    with pytest.raises(ValueError, match="top_p"):
+        sched.submit(Request(rid=3, prompt=np.zeros(4, np.int32),
+                             max_new_tokens=2,
+                             sampling=SamplingParams(top_p=0.9)))
+
+
+def test_top_p_pool_admission_and_streams():
+    """A top_p pool admits matching (or default) requests; greedy streams
+    through the nucleus sampler are unchanged (argmax is always kept)."""
+    sched = _fake_sched(n_slots=2, top_p=0.9)
+    ok = Request(rid=0, prompt=np.zeros(5, np.int32), max_new_tokens=4,
+                 sampling=SamplingParams(top_p=0.9))
+    default = Request(rid=1, prompt=np.zeros(7, np.int32), max_new_tokens=4)
+    sched.submit(ok)
+    sched.submit(default)
+    with pytest.raises(ValueError, match="top_p"):
+        sched.submit(Request(rid=2, prompt=np.zeros(3, np.int32),
+                             max_new_tokens=2,
+                             sampling=SamplingParams(top_p=0.5)))
+    sched.run()
+    assert ok.generated == _expected(5, 4)
+    assert default.generated == _expected(7, 4)
 
 
 def test_slot_allocator_contract():
