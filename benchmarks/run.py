@@ -36,6 +36,8 @@ JAX_BENCHES = [
     ("jax_collectives", "8-device shard_map microbench"),
     ("fused_collectives",
      "Pallas fused-step vs shmap: emission plans + HLO + microbench"),
+    ("bucketed_grads",
+     "bucketed vs per-leaf gradient collectives: ppermutes + wire bytes"),
 ]
 
 

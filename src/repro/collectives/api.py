@@ -136,7 +136,13 @@ def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
 
 
 def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
-    """Full vector (len divisible by axis size) -> own reduced block."""
+    """Full vector (len divisible by axis size) -> own reduced block.
+
+    ``bine_hier`` runs the Sec. 6.2 composition on a *flat* vector: RS
+    over the fast ``inner_axis`` first (the big messages stay on the fast
+    links), then over ``outer_axis`` on the 1/p_in shard.  Block ownership
+    is inner-major — the inverse of this function's ``bine_hier``
+    allgather, which gathers outer first."""
     cfg = _resolve(cfg, "reduce_scatter", x, axis)
     b = cfg.backend
     if b == "xla":
@@ -146,19 +152,32 @@ def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
                                 tiled=False)
     if b == PALLAS_FUSED_BACKEND:
         return _fused_ops().reduce_scatter(x, axis, cfg.fused_algo)
+    if b == "bine_hier":
+        inner = cfg.inner_axis if cfg.inner_axis is not None else axis
+        outer = cfg.outer_axis
+        assert outer is not None, "bine_hier needs outer_axis"
+        v = shmap.reduce_scatter(x.reshape(-1), inner, "bine")
+        return shmap.reduce_scatter(v, outer, "bine")
     if b == "ring":
         return shmap.reduce_scatter(x, axis, "ring")
     return shmap.reduce_scatter(x, axis, "bine" if b.startswith("bine") else b)
 
 
 def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
-    """Own block -> full vector in rank order."""
+    """Own block -> full vector in rank order (``bine_hier``: inner-major,
+    inverting this module's ``bine_hier`` reduce_scatter)."""
     cfg = _resolve(cfg, "allgather", x, axis, gathered=True)
     b = cfg.backend
     if b == "xla":
         return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
     if b == PALLAS_FUSED_BACKEND:
         return _fused_ops().allgather(x, axis, cfg.fused_algo)
+    if b == "bine_hier":
+        inner = cfg.inner_axis if cfg.inner_axis is not None else axis
+        outer = cfg.outer_axis
+        assert outer is not None, "bine_hier needs outer_axis"
+        v = shmap.allgather(x.reshape(-1), outer, "bine")
+        return shmap.allgather(v, inner, "bine")
     if b == "ring":
         return shmap.allgather(x, axis, "ring")
     return shmap.allgather(x, axis, "bine" if b.startswith("bine") else b)

@@ -36,8 +36,8 @@ def sds(shape, dtype, sharding=None):
     return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
 
 
-def input_specs(arch: str, shape: str, mesh, backend: str = "bine"
-                ) -> Dict[str, Any]:
+def input_specs(arch: str, shape: str, mesh, backend: str = "bine",
+                bucket_bytes: int = -1) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
     allocation) for every model input of the given cell, plus the step
     callable to lower.  Returns dict(step=fn, args=tuple_of_SDS, meta=...)."""
@@ -67,7 +67,8 @@ def input_specs(arch: str, shape: str, mesh, backend: str = "bine"
         lambda l, s: sds(l.shape, l.dtype, ns(s)), params_shapes, pspecs)
 
     if sc.kind == "train":
-        tcfg = TrainConfig(backend=backend, dp_axes=dp)
+        tcfg = TrainConfig(backend=backend, dp_axes=dp,
+                           bucket_bytes=bucket_bytes)
         step_fn, shardings, layout = make_train_step(cfg, tcfg, mesh,
                                                      params_shapes)
         state_shapes = jax.eval_shape(
@@ -83,8 +84,10 @@ def input_specs(arch: str, shape: str, mesh, backend: str = "bine"
         batch_sds = {"inputs": inp,
                      "targets": sds((B, S), jnp.int32,
                                     shardings["batch"]["targets"])}
+        plan = shardings.get("bucket_plan")
         return {"step": step_fn, "args": (params_sds, state_sds, batch_sds),
-                "kind": "train", "cfg": cfg, "shape": sc}
+                "kind": "train", "cfg": cfg, "shape": sc,
+                "bucket_plan": plan.describe() if plan is not None else None}
 
     scfg = ServeConfig(dp_axes=dp)
     prefill_fn, decode_fn, shardings = make_serve_fns(cfg, scfg, mesh, B, S)
@@ -147,13 +150,13 @@ def model_flops(cfg, sc) -> float:
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
-             verbose: bool = True, save_hlo: Optional[str] = None
-             ) -> Dict[str, Any]:
+             verbose: bool = True, save_hlo: Optional[str] = None,
+             bucket_bytes: int = -1) -> Dict[str, Any]:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
     pod = 256
     t0 = time.time()
-    spec = input_specs(arch, shape, mesh, backend)
+    spec = input_specs(arch, shape, mesh, backend, bucket_bytes)
     with set_mesh(mesh):
         lowered = spec["step"].lower(*spec["args"])
         t_lower = time.time() - t0
@@ -188,10 +191,17 @@ def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
         "memory": mem_d,
         "model_flops": mf,
         "useful_ratio": mf / roof.hlo_flops if roof.hlo_flops else None,
+        "bucket_plan": spec.get("bucket_plan"),
         **roof.as_dict(),
     }
     if verbose:
         print(f"[dryrun] {arch} x {shape} mesh={out['mesh']} backend={backend}")
+        if spec.get("bucket_plan"):
+            bp = spec["bucket_plan"]
+            print(f"  grad buckets: {bp['n_buckets']} "
+                  f"({bp['n_bucketed_leaves']} leaves packed, "
+                  f"{bp['n_replicated_leaves']} replicated, "
+                  f"cap={bp['capacity_bytes']}B)")
         print(f"  memory_analysis: {mem_d}")
         ca = compiled.cost_analysis()
         if isinstance(ca, list):
@@ -221,6 +231,9 @@ def main(argv=None):
     ap.add_argument("--shape")
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--backend", default="bine")
+    ap.add_argument("--bucket-bytes", type=int, default=-1,
+                    help="gradient-bucket capacity (wire bytes); "
+                         "-1 = decision table, 0 = per-leaf collectives")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--save-hlo", default=None)
@@ -240,7 +253,8 @@ def main(argv=None):
                 continue
             try:
                 res = run_cell(arch, shape, mp, args.backend,
-                               save_hlo=args.save_hlo)
+                               save_hlo=args.save_hlo,
+                               bucket_bytes=args.bucket_bytes)
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
             except Exception as e:

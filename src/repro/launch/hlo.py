@@ -379,6 +379,22 @@ def op_counts_from_text(text: str) -> Dict[str, float]:
     return module_op_counts(comps, compute_multiplicities(comps, entry))
 
 
+def entry_op_sequence(text: str) -> List[str]:
+    """Op kinds of the ENTRY computation, in printed order.
+
+    Post-optimization HLO prints instructions in schedule order, so this
+    is the sequence the backend executes at top level — used to assert
+    *structure* (e.g. that collective ops interleave with the fused
+    optimizer updates in the bucketed train step) rather than just
+    counts.  Free ops (parameters, tuples, ...) are skipped."""
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    comp = comps.get(entry)
+    if comp is None:
+        return []
+    return [op.kind for op in comp.ops if op.kind not in _FREE_OPS]
+
+
 def module_bytes(comps: Dict[str, Computation],
                  mult: Dict[str, float]) -> float:
     total = 0.0

@@ -14,15 +14,19 @@ small/latency-bound regime.  This package closes the loop automatically:
     ``CollectiveConfig(backend="auto")`` in ``collectives.api``.
 """
 
-from .cost import (CANDIDATES, SMALL_CUTOFF_BYTES, predict_time,
+from .cost import (BUCKET_SIZE_CANDIDATES, CANDIDATES, SMALL_CUTOFF_BYTES,
+                   optimal_bucket_bytes, predict_bucket_time, predict_time,
                    schedule_algo)
 from .presets import PRESETS, get_topology, torus_dims
 from .table import (P_GRID, SIZE_BUCKETS, DecisionTable, build_table,
-                    load_table, select_backend, table_path)
+                    load_table, select_backend, select_bucket_bytes,
+                    table_path)
 
 __all__ = [
-    "CANDIDATES", "SMALL_CUTOFF_BYTES", "predict_time", "schedule_algo",
+    "BUCKET_SIZE_CANDIDATES", "CANDIDATES", "SMALL_CUTOFF_BYTES",
+    "optimal_bucket_bytes", "predict_bucket_time", "predict_time",
+    "schedule_algo",
     "PRESETS", "get_topology", "torus_dims",
     "P_GRID", "SIZE_BUCKETS", "DecisionTable", "build_table", "load_table",
-    "select_backend", "table_path",
+    "select_backend", "select_bucket_bytes", "table_path",
 ]

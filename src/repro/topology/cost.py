@@ -64,6 +64,19 @@ FUSED_STEP_OVERHEAD_S = 1.0e-6
 #: backends executed by ``repro.kernels.collectives`` fused step kernels
 FUSED_BACKENDS = ("pallas_fused",)
 
+#: HBM round trips of one AdamW step on a gradient shard: read g/m/v/master,
+#: write m/v/master, write the wire-dtype new param, plus the mhat/vhat
+#: normalization traffic — the local work a bucket's allgather overlaps.
+ADAMW_HBM_PASSES = 10.0
+
+#: candidate gradient-bucket capacities (bytes) the per-topology sweep
+#: minimizes over: 256 KiB .. 64 MiB in powers of two
+BUCKET_SIZE_CANDIDATES: Tuple[int, ...] = tuple(1 << k for k in range(18, 27))
+
+#: representative full-gradient payload the bucket sweep amortizes over
+#: (the argmin is insensitive to it once total >> bucket)
+BUCKET_SWEEP_TOTAL_BYTES = 1 << 30
+
 #: (collective, backend) -> (schedule collective, small algo, large algo)
 #: — the schedule collective differs from the API collective only for the
 #: xla emulation proxies.
@@ -189,3 +202,60 @@ def predict_time(collective: str, backend: str, p: int, nbytes: float,
     if passes == FUSED_HBM_PASSES:
         local += FUSED_STEP_OVERHEAD_S * len(sched)
     return wire + local
+
+
+# ---------------------------------------------------------------------------
+# Gradient-bucket sizing (train/buckets.py)
+# ---------------------------------------------------------------------------
+
+def _best_time(collective: str, p: int, nbytes: float, topo,
+               small_cutoff_bytes: int) -> float:
+    """Fastest candidate backend's predicted time — what an auto-resolved
+    bucket of this size would actually pay."""
+    return min(predict_time(collective, b, p, nbytes, topo,
+                            small_cutoff_bytes)
+               for b in CANDIDATES[collective])
+
+
+def predict_bucket_time(p: int, bucket_bytes: int, total_bytes: float,
+                        topo: Union[GroupedTopo, TorusTopo],
+                        small_cutoff_bytes: int = SMALL_CUTOFF_BYTES
+                        ) -> float:
+    """Modeled grad-exchange time for one train step at a bucket size.
+
+    Pipeline model of the bucketed gradient path (``train/step.py``):
+    every bucket pays a reduce-scatter, then the AdamW update of bucket
+    ``i`` is independent dataflow from the allgather of bucket ``i-1``,
+    so all updates except the pipeline-fill one hide behind allgathers::
+
+        T(b) = N·t_rs(b) + t_upd(b) + (N-1)·max(t_ag(b), t_upd(b)) + t_ag(b)
+
+    with ``N = ceil(total/b)`` and ``t_upd`` the AdamW HBM traffic of one
+    bucket's 1/p shard.  Small buckets lose to the per-bucket α·log₂(p)
+    latency (step count × α); one giant bucket exposes its whole update
+    with nothing to overlap — the sweep finds the knee.
+    """
+    import math as _m
+    n = max(1, int(_m.ceil(float(total_bytes) / bucket_bytes)))
+    t_rs = _best_time("reduce_scatter", p, bucket_bytes, topo,
+                      small_cutoff_bytes)
+    t_ag = _best_time("allgather", p, bucket_bytes, topo,
+                      small_cutoff_bytes)
+    t_upd = ADAMW_HBM_PASSES * (bucket_bytes / p) / HBM_BW
+    return n * t_rs + t_upd + (n - 1) * max(t_ag, t_upd) + t_ag
+
+
+def optimal_bucket_bytes(p: int,
+                         topo: Union[GroupedTopo, TorusTopo],
+                         total_bytes: float = BUCKET_SWEEP_TOTAL_BYTES,
+                         candidates: Tuple[int, ...] = BUCKET_SIZE_CANDIDATES,
+                         small_cutoff_bytes: int = SMALL_CUTOFF_BYTES) -> int:
+    """Argmin of ``predict_bucket_time`` over the candidate capacities.
+
+    Deterministic: ties break toward the smaller capacity (earlier
+    candidate).  Cached per topology/p in the decision tables by
+    ``table.build_table`` so production tracing never re-sweeps.
+    """
+    return min(candidates,
+               key=lambda b: predict_bucket_time(p, b, total_bytes, topo,
+                                                 small_cutoff_bytes))

@@ -31,10 +31,11 @@ import json
 import math
 import os
 from bisect import bisect_left
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from .cost import CANDIDATES, SMALL_CUTOFF_BYTES, predict_time
+from .cost import (CANDIDATES, SMALL_CUTOFF_BYTES, optimal_bucket_bytes,
+                   predict_time)
 from .presets import PRESETS, get_topology
 
 _FORMAT = 1
@@ -54,6 +55,10 @@ class DecisionTable:
     size_buckets: Tuple[int, ...]
     # collective -> p -> [backend per size bucket]
     entries: Dict[str, Dict[int, Tuple[str, ...]]]
+    # p -> gradient-bucket capacity (bytes) from cost.optimal_bucket_bytes;
+    # empty on tables serialized before the bucketing PR (lookups fall back
+    # to an on-the-fly sweep in select_bucket_bytes)
+    bucket_bytes: Dict[int, int] = field(default_factory=dict)
 
     # -- lookup ------------------------------------------------------------
 
@@ -83,6 +88,8 @@ class DecisionTable:
             "size_buckets": list(self.size_buckets),
             "entries": {c: {str(p): list(row) for p, row in per_p.items()}
                         for c, per_p in self.entries.items()},
+            "bucket_bytes": {str(p): int(v)
+                             for p, v in self.bucket_bytes.items()},
         }
 
     @classmethod
@@ -96,6 +103,8 @@ class DecisionTable:
             size_buckets=tuple(int(s) for s in d["size_buckets"]),
             entries={c: {int(p): tuple(row) for p, row in per_p.items()}
                      for c, per_p in d["entries"].items()},
+            bucket_bytes={int(p): int(v)
+                          for p, v in d.get("bucket_bytes", {}).items()},
         )
 
     def save(self, path: str) -> None:
@@ -137,10 +146,13 @@ def build_table(topology: str,
                 row.append(best)
             per_p[p] = tuple(row)
         entries[collective] = per_p
+    bucket_bytes = {p: optimal_bucket_bytes(
+        p, get_topology(topology, p),
+        small_cutoff_bytes=small_cutoff_bytes) for p in ps}
     return DecisionTable(topology=topology,
                          small_cutoff_bytes=small_cutoff_bytes,
                          ps=tuple(ps), size_buckets=tuple(size_buckets),
-                         entries=entries)
+                         entries=entries, bucket_bytes=bucket_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -197,3 +209,21 @@ def select_backend(collective: str, p: int, nbytes: float,
     if table is None:
         table = _LOADED[topology] = load_table(topology)
     return table.lookup(collective, p, nbytes)
+
+
+def select_bucket_bytes(p: int, topology: str = "tpu_multipod") -> int:
+    """Table-driven gradient-bucket capacity for ``p`` DP ranks.
+
+    Reads the ``bucket_bytes`` entry cached alongside the backend rows
+    (same trace-time lookup as ``select_backend``); a table serialized
+    before the entry existed falls back to an on-the-fly
+    ``cost.optimal_bucket_bytes`` sweep at the snapped grid point.
+    """
+    table = _LOADED.get(topology)
+    if table is None:
+        table = _LOADED[topology] = load_table(topology)
+    q = p if p in table.bucket_bytes else table.nearest_p(p)
+    if q in table.bucket_bytes:
+        return table.bucket_bytes[q]
+    return optimal_bucket_bytes(q, get_topology(topology, q),
+                                small_cutoff_bytes=table.small_cutoff_bytes)

@@ -1,0 +1,238 @@
+"""Gradient bucketing: pack ZeRO-sharded leaves into flat wire buckets.
+
+The per-leaf gradient path pays the full log2(p) α-latency of a Bine
+reduce-scatter/allgather once *per parameter leaf* — small leaves (norms,
+gates, biases) spend their whole collective in latency, and the auto-
+selector prices each of them as a tiny payload even though the step moves
+the whole model.  This module aggregates: leaves that share the ZeRO
+treatment (a dim divisible by ``n_dp``) are packed into fixed-capacity
+flat buckets, reduced/gathered with ONE collective per bucket, and
+unpacked exactly.
+
+Ownership-preserving layout (the bit-for-bit contract)
+------------------------------------------------------
+A bucket is a flat vector of ``n_dp`` equal *rows*; row ``r`` is the
+concatenation, over the bucket's leaves, of the (row-major flattened)
+slice that rank ``r`` owns along each leaf's ``zero_dim``::
+
+    bucket = [ row_0 | row_1 | ... | row_{p-1} ],
+    row_r  = concat_leaf( leaf.take(block r, axis=zero_dim).ravel() )
+
+A flat reduce-scatter of this vector hands rank ``r`` exactly row ``r`` —
+the very same elements the per-leaf ``reduce_scatter_dim`` would have
+given it.  Because every schedule in ``core.schedules`` moves final-owner
+blocks atomically, each element's reduction bracketing depends only on
+its owning rank, so the bucketed reduction is **fp32 bit-for-bit equal**
+to the per-leaf one for every deterministic backend (bine, recdoub, ring,
+pallas_fused) — asserted in ``tests/train/test_bucketed_step.py``.
+
+Packing is greedy first-fit-decreasing over the *static* leaf shapes
+(sorted by size, ties by flattened-tree position), so the plan is
+deterministic across processes: it depends only on the pytree structure,
+never on dict/tree iteration order of the host.  Leaves without an
+``n_dp``-divisible dim (``zero_dim < 0``) join the *replicated* group and
+are never bucketed — their gradient is allreduced per leaf, exactly as
+before.  Leaves larger than the capacity get a singleton bucket.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@dataclass(frozen=True)
+class LeafSlot:
+    """One leaf's position inside a bucket (all units are ELEMENTS)."""
+    index: int                 # position in the flattened param tree
+    shape: Tuple[int, ...]     # full (global) leaf shape
+    zero_dim: int              # ZeRO dim, >= 0 for every bucketed leaf
+    offset: int                # start of this leaf's span in a bucket ROW
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64))
+
+    def row_elems(self, n_dp: int) -> int:
+        """Elements per rank (= per bucket row) for this leaf."""
+        return self.size // n_dp
+
+    def shard_shape(self, n_dp: int) -> Tuple[int, ...]:
+        s = list(self.shape)
+        s[self.zero_dim] //= n_dp
+        return tuple(s)
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """A group of leaves reduced/gathered with one flat collective."""
+    bid: int
+    dtype: str                 # param dtype of every member (allgather wire)
+    slots: Tuple[LeafSlot, ...]
+    row_elems: int             # per-rank elements = sum of slot row_elems
+
+    def nbytes(self, itemsize: int, n_dp: int) -> int:
+        """Full-vector payload in bytes of an ``itemsize``-wide wire dtype
+        (the ``core.traffic.msg_bytes`` convention the decision table and
+        ``_backend_for`` price collectives with)."""
+        return self.row_elems * n_dp * itemsize
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    n_dp: int
+    capacity_bytes: int        # wire-dtype bytes per bucket (0 = unbounded)
+    wire_itemsize: int
+    buckets: Tuple[Bucket, ...]
+    replicated: Tuple[int, ...]  # leaf indices with zero_dim < 0
+
+    @property
+    def n_bucketed_leaves(self) -> int:
+        return sum(len(b.slots) for b in self.buckets)
+
+    def describe(self) -> dict:
+        """Static summary (benchmarks / dryrun reports)."""
+        return {
+            "n_buckets": len(self.buckets),
+            "n_bucketed_leaves": self.n_bucketed_leaves,
+            "n_replicated_leaves": len(self.replicated),
+            "capacity_bytes": self.capacity_bytes,
+            "bucket_bytes": [b.nbytes(self.wire_itemsize, self.n_dp)
+                             for b in self.buckets],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Planning (static shapes only — runs at trace time, zero runtime cost)
+# ---------------------------------------------------------------------------
+
+def plan_buckets(params_shapes: Any, layout: Any, n_dp: int,
+                 capacity_bytes: int, wire_itemsize: int) -> BucketPlan:
+    """Greedy first-fit-decreasing packing of the ZeRO-sharded leaves.
+
+    ``params_shapes``/``layout`` are the param pytree (arrays or
+    ShapeDtypeStructs) and its ``zero.zero_layout`` mirror.  Determinism:
+    leaves are identified by flattened-tree position (jax flattens dict
+    keys sorted), sorted by (size desc, position asc), and packed into the
+    first bucket of the same param dtype with room; a leaf larger than the
+    capacity opens its own (over-full) bucket.
+    """
+    flat_leaves, _ = jax.tree.flatten(params_shapes)
+    flat_zd = jax.tree.leaves(layout)
+    assert len(flat_leaves) == len(flat_zd), "layout must mirror params"
+
+    replicated: List[int] = []
+    sharded: List[Tuple[int, Any, int]] = []
+    for i, (leaf, zd) in enumerate(zip(flat_leaves, flat_zd)):
+        if zd < 0:
+            replicated.append(i)
+        else:
+            assert leaf.shape[zd] % n_dp == 0, (leaf.shape, zd, n_dp)
+            sharded.append((i, leaf, zd))
+
+    cap_elems = (capacity_bytes // wire_itemsize) if capacity_bytes > 0 \
+        else None
+    order = sorted(sharded,
+                   key=lambda t: (-int(np.prod(t[1].shape, dtype=np.int64)),
+                                  t[0]))
+
+    # open buckets: [dtype, used_full_elems, [(index, shape, zd), ...]]
+    opened: List[list] = []
+    for i, leaf, zd in order:
+        size = int(np.prod(leaf.shape, dtype=np.int64))
+        dt = str(np.dtype(leaf.dtype))
+        placed = False
+        for b in opened:
+            if b[0] != dt:
+                continue
+            if cap_elems is not None and b[1] + size > cap_elems and b[1] > 0:
+                continue
+            b[1] += size
+            b[2].append((i, leaf, zd))
+            placed = True
+            break
+        if not placed:
+            opened.append([dt, size, [(i, leaf, zd)]])
+
+    buckets: List[Bucket] = []
+    for bid, (dt, _, members) in enumerate(opened):
+        off = 0
+        slots = []
+        for i, leaf, zd in members:
+            slots.append(LeafSlot(index=i, shape=tuple(leaf.shape),
+                                  zero_dim=zd, offset=off))
+            off += int(np.prod(leaf.shape, dtype=np.int64)) // n_dp
+        buckets.append(Bucket(bid=bid, dtype=dt, slots=tuple(slots),
+                              row_elems=off))
+    return BucketPlan(n_dp=n_dp, capacity_bytes=capacity_bytes,
+                      wire_itemsize=wire_itemsize, buckets=tuple(buckets),
+                      replicated=tuple(replicated))
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack (pure layout: transposes + concats, no arithmetic)
+# ---------------------------------------------------------------------------
+
+def _leaf_rows(x, zero_dim: int, n_dp: int):
+    """[d0,..,p*k @zd,..] -> [p, size/p]: row r = flat slice r along zd."""
+    k = x.shape[zero_dim] // n_dp
+    split = x.shape[:zero_dim] + (n_dp, k) + x.shape[zero_dim + 1:]
+    return jnp.moveaxis(x.reshape(split), zero_dim, 0).reshape(n_dp, -1)
+
+
+def _rows_to_leaf(rows, slot: LeafSlot, n_dp: int):
+    """Inverse of ``_leaf_rows``: [p, size/p] -> the full leaf."""
+    seg = rows.reshape((n_dp,) + slot.shard_shape(n_dp))
+    return jnp.moveaxis(seg, 0, slot.zero_dim).reshape(slot.shape)
+
+
+def pack_bucket(bucket: Bucket, leaves: Sequence[Any], n_dp: int):
+    """Full leaves (bucket order) -> the flat bucket vector.
+
+    Output length ``n_dp * bucket.row_elems``; block ``r`` of ``n_dp`` is
+    the row rank ``r`` owns after a flat reduce-scatter.
+    """
+    rows = [_leaf_rows(x, s.zero_dim, n_dp)
+            for x, s in zip(leaves, bucket.slots)]
+    if len(rows) == 1:
+        return rows[0].reshape(-1)
+    return jnp.concatenate(rows, axis=1).reshape(-1)
+
+
+def shard_views(bucket: Bucket, shard, n_dp: int):
+    """One rank's reduced row -> per-leaf shard arrays (the view table).
+
+    ``shard`` has length ``bucket.row_elems``; view ``j`` is bit-identical
+    to what the per-leaf ``reduce_scatter_dim`` would have produced,
+    reshaped to the leaf's shard shape.
+    """
+    out = []
+    for s in bucket.slots:
+        sz = s.row_elems(n_dp)
+        out.append(lax.slice(shard, (s.offset,), (s.offset + sz,))
+                   .reshape(s.shard_shape(n_dp)))
+    return out
+
+
+def pack_shards(bucket: Bucket, shards: Sequence[Any]):
+    """Per-leaf shard arrays (bucket order) -> one flat row (AG input)."""
+    flats = [x.reshape(-1) for x in shards]
+    if len(flats) == 1:
+        return flats[0]
+    return jnp.concatenate(flats)
+
+
+def unpack_bucket(bucket: Bucket, full, n_dp: int):
+    """Flat allgather output (rank-order rows) -> full leaves, exactly."""
+    rows = full.reshape(n_dp, bucket.row_elems)
+    out = []
+    for s in bucket.slots:
+        sz = s.row_elems(n_dp)
+        seg = lax.slice(rows, (0, s.offset), (n_dp, s.offset + sz))
+        out.append(_rows_to_leaf(seg, s, n_dp))
+    return out

@@ -30,6 +30,15 @@ def _flatten_with_paths(tree):
     return flat, treedef
 
 
+def _leaf_paths(tree) -> List[str]:
+    """Human-readable tree path per flattened leaf (manifest labels)."""
+    try:
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        return [jax.tree_util.keystr(p) for p, _ in flat]
+    except Exception:      # pragma: no cover - ancient jax without keypaths
+        return []
+
+
 def save(path: str, step: int, tree: Any, extra: Optional[Dict] = None,
          keep: int = 3) -> str:
     """Synchronous save of a pytree of (host-gatherable) arrays."""
@@ -45,6 +54,10 @@ def save(path: str, step: int, tree: Any, extra: Optional[Dict] = None,
         "n_leaves": len(flat),
         "shapes": [list(np.shape(x)) for x in flat],
         "dtypes": [str(np.asarray(x).dtype) for x in flat],
+        # leaf paths label shape mismatches on restore: a state-layout
+        # change (new opt layout, different ZeRO split) names the exact
+        # leaf instead of an opaque index
+        "paths": _leaf_paths(tree),
         "extra": extra or {},
         "time": time.time(),
     }
@@ -89,11 +102,13 @@ def restore(path: str, step: int, like: Any) -> Any:
     flat_like, treedef = jax.tree.flatten(like)
     assert manifest["n_leaves"] == len(flat_like), (
         f"leaf count mismatch: ckpt {manifest['n_leaves']} vs {len(flat_like)}")
+    paths = manifest.get("paths") or _leaf_paths(like)
     flat = []
     for i, lk in enumerate(flat_like):
         arr = data[f"a{i}"]
+        label = paths[i] if i < len(paths) else f"leaf {i}"
         assert tuple(arr.shape) == tuple(np.shape(lk)), (
-            f"leaf {i}: ckpt {arr.shape} vs expected {np.shape(lk)}")
+            f"{label}: ckpt {arr.shape} vs expected {np.shape(lk)}")
         flat.append(arr.astype(lk.dtype if hasattr(lk, "dtype") else arr.dtype))
     return jax.tree.unflatten(treedef, flat)
 

@@ -16,8 +16,23 @@ Backends: bine (paper) | recdoub (binomial butterflies) | ring | xla
 (psum_scatter/all_gather) | bine_hier (Sec. 6.2: intra-pod first) |
 pallas_fused (the bine schedule with every step's local slice/add/concat
 chain fused into one Pallas kernel — ``repro.kernels.collectives``; fp32
-bit-for-bit with the bine shmap path) | auto (may resolve per leaf to any
-of these, including pallas_fused, via the topology decision table).
+bit-for-bit with the bine shmap path) | auto (resolves via the topology
+decision table, including to pallas_fused).
+
+Gradient bucketing (``train/buckets.py``): by default the ZeRO-sharded
+leaves are packed into large flat wire buckets — ONE reduce-scatter and
+ONE allgather per bucket instead of per leaf — so the per-collective
+α·log₂(p) latency is paid O(buckets) times, not O(leaves) times, and
+``backend="auto"`` prices large uniform payloads (where the paper's
+large-vector schedules and ``pallas_fused`` win) instead of hundreds of
+tiny ones.  The AdamW update runs on per-leaf views of each bucket's
+reduced row; the update of bucket ``i`` is independent dataflow from the
+allgather of bucket ``i-1``, so XLA can overlap them.  The packing
+preserves element ownership, which makes the bucketed step fp32
+**bit-for-bit identical** to the per-leaf path for the deterministic
+backends (bine/recdoub/ring/pallas_fused).  ``TrainConfig.bucket_bytes``:
+-1 (default) sizes buckets from the topology decision table, 0 disables
+(per-leaf path), >0 is an explicit wire-dtype capacity in bytes.
 """
 
 from __future__ import annotations
@@ -38,7 +53,7 @@ from repro.collectives import shmap
 from repro.models import transformer as T
 from repro.models.sharding import constrain_params, param_specs
 from repro.optim.adamw import AdamWConfig, adamw_init_leaf, adamw_update_leaf, lr_at
-from repro.train import zero
+from repro.train import buckets, zero
 
 
 @dataclass(frozen=True)
@@ -55,6 +70,10 @@ class TrainConfig:
     topology: str = "tpu_multipod"
     #: small/large allreduce switch (inclusive), bytes of the wire dtype
     small_cutoff_bytes: int = 16384
+    #: gradient-bucket capacity in wire-dtype bytes: -1 (default) reads the
+    #: per-topology choice cached in the decision table, 0 disables
+    #: bucketing (per-leaf collectives), >0 is an explicit capacity
+    bucket_bytes: int = -1
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -69,31 +88,64 @@ class TrainConfig:
 
 
 # ---------------------------------------------------------------------------
-# Gradient collectives (per-leaf, dim-general)
+# Gradient collectives (bucketed flat + per-leaf dim-general)
 # ---------------------------------------------------------------------------
 
-def _backend_for(tcfg: TrainConfig, collective: str, arr,
-                 gathered: bool = False) -> str:
-    """Concrete backend for one gradient collective.
+def _backend_for_bytes(tcfg: TrainConfig, collective: str, p: int,
+                       nbytes: int) -> str:
+    """Concrete backend for a gradient collective of ``nbytes`` payload.
 
     backend="auto" consults the topology decision table at trace time
     (static shapes; zero runtime cost) with the flattened DP rank count
-    and the leaf's FULL-vector payload (the table's byte convention) —
-    the general mechanism that replaces the old hard-coded element-count
-    cutoff.  ``gathered=True`` marks call sites whose ``arr`` is one
-    rank's shard (the allgather input), scaled up by the DP size."""
+    and the FULL-vector payload (the table's byte convention) — the
+    general mechanism that replaces the old hard-coded element-count
+    cutoff.  Shared by the in-step dispatch (``_backend_for``) and the
+    out-of-step ``bucket_backends`` introspection so the two can never
+    drift."""
     if tcfg.backend != "auto":
         return tcfg.backend
     from repro.topology import select_backend
-    p = shmap.axis_size(tcfg.dp_axes)
-    nbytes = arr.size * arr.dtype.itemsize * (p if gathered else 1)
     return select_backend(collective, p, nbytes, tcfg.topology)
 
 
-def _rs_leaf(tcfg: TrainConfig, g, zd: int):
+def _backend_for(tcfg: TrainConfig, collective: str, arr,
+                 gathered: bool = False) -> str:
+    """``_backend_for_bytes`` for one traced array inside the shard_map.
+
+    ``gathered=True`` marks call sites whose ``arr`` is one rank's shard
+    (the allgather input), scaled up by the DP size."""
+    if tcfg.backend != "auto":
+        return tcfg.backend
+    p = shmap.axis_size(tcfg.dp_axes)
+    nbytes = arr.size * arr.dtype.itemsize * (p if gathered else 1)
+    return _backend_for_bytes(tcfg, collective, p, nbytes)
+
+
+def _wire_cast(tcfg: TrainConfig, g, n_dp: int):
+    """Cast one gradient leaf to the wire dtype.
+
+    bf16 wire pre-scales by ``1/n_dp`` BEFORE the reduce: the sum of
+    ``n_dp`` large bf16 gradients can overflow to inf before the post-hoc
+    mean division (bf16 shares fp32's exponent range, but accumulating in
+    bf16 reaches it ``n_dp``× sooner).  ``n_dp`` is a power of two, so the
+    pre-scale is exact (an exponent shift) and costs no precision.  The
+    fp32 path is untouched — it divides after the reduce, bit-compatible
+    with the pre-bucketing step."""
+    wire = jnp.dtype(tcfg.wire_dtype)
+    if wire == jnp.bfloat16:
+        return (g / n_dp).astype(wire)
+    return g.astype(wire)
+
+
+def _post_reduce_div(tcfg: TrainConfig, n_dp: int) -> float:
+    """What the reduced wire value still must be divided by for the mean."""
+    return 1.0 if jnp.dtype(tcfg.wire_dtype) == jnp.bfloat16 else float(n_dp)
+
+
+def _rs_leaf(tcfg: TrainConfig, g, zd: int, n_dp: int):
     """Reduce over DP ranks; scatter along zd (or full allreduce if zd<0)."""
     axes = tcfg.dp_axes
-    wire = g.astype(jnp.dtype(tcfg.wire_dtype))
+    wire = _wire_cast(tcfg, g, n_dp)
     if zd < 0:
         b = _backend_for(tcfg, "allreduce", wire)
         if b == "xla":
@@ -146,14 +198,95 @@ def _ag_leaf(tcfg: TrainConfig, x, zd: int):
     return shmap.allgather_dim(x, zd, axes, algo)
 
 
-def _scalar_allreduce(tcfg: TrainConfig, x):
-    # scalars always take the small full-vector path — nothing to fuse,
-    # so pallas_fused shares bine's tree here
+def _rs_bucket(tcfg: TrainConfig, v):
+    """One flat reduce-scatter: full bucket vector -> this rank's row.
+
+    The backend is resolved per BUCKET (``backend="auto"`` prices the
+    bucket's full payload, not a leaf's), mirroring ``_rs_leaf``'s
+    dispatch on a flat vector; bine_hier runs the same intra-pod-first
+    axis sequence as the per-leaf path, so block ownership matches the
+    ``opt_dp_order`` shard layout."""
+    axes = tcfg.dp_axes
+    b = _backend_for(tcfg, "reduce_scatter", v)
+    if b == "xla":
+        p = shmap.axis_size(axes)
+        return lax.psum_scatter(v.reshape(p, -1), axes, scatter_dimension=0,
+                                tiled=False).reshape(-1)
+    if b == "bine_hier" and len(axes) > 1:
+        out = v
+        for ax in reversed(axes):          # data, then pod
+            out = shmap.reduce_scatter(out, ax, "bine")
+        return out
+    if b == "pallas_fused":
+        from repro.kernels import collectives as fused
+        return fused.reduce_scatter(v, axes, "bine")
+    algo = {"bine": "bine", "bine_hier": "bine", "recdoub": "recdoub",
+            "ring": "ring"}[b]
+    return shmap.reduce_scatter(v, axes, algo)
+
+
+def _ag_bucket(tcfg: TrainConfig, row):
+    """Inverse flat allgather: this rank's row -> the full bucket vector."""
+    axes = tcfg.dp_axes
+    b = _backend_for(tcfg, "allgather", row, gathered=True)
+    if b == "xla":
+        return lax.all_gather(row, axes, axis=0, tiled=True)
+    if b == "bine_hier" and len(axes) > 1:
+        out = row
+        for ax in axes:                    # pod, then data (inverse order)
+            out = shmap.allgather(out, ax, "bine")
+        return out
+    if b == "pallas_fused":
+        from repro.kernels import collectives as fused
+        return fused.allgather(row, axes, "bine")
+    algo = {"bine": "bine", "bine_hier": "bine", "recdoub": "recdoub",
+            "ring": "ring"}[b]
+    return shmap.allgather(row, axes, algo)
+
+
+def _small_allreduce(tcfg: TrainConfig, x):
+    # scalars/metric stacks always take the small full-vector path —
+    # nothing to fuse, so pallas_fused shares bine's tree here
     b = _backend_for(tcfg, "allreduce", x)
     if b == "xla":
         return lax.psum(x, tcfg.dp_axes)
     algo = "recdoub" if b == "recdoub" else "bine"
     return shmap.allreduce_small(x, tcfg.dp_axes, algo)
+
+
+def resolve_bucket_plan(tcfg: TrainConfig, n_dp: int, params_shapes,
+                        layout) -> Optional[buckets.BucketPlan]:
+    """The step's static bucket plan (None = bucketing disabled).
+
+    Capacity resolution: ``tcfg.bucket_bytes`` > 0 verbatim, -1 reads the
+    per-topology ``bucket_bytes`` entry cached in the decision table
+    (``topology.select_bucket_bytes``), 0 — or a single DP rank — turns
+    bucketing off.  Deterministic across processes: static shapes only.
+    """
+    if n_dp <= 1 or tcfg.bucket_bytes == 0:
+        return None          # before the table lookup — nothing to size
+    cap = tcfg.bucket_bytes
+    if cap < 0:
+        from repro.topology import select_bucket_bytes
+        cap = select_bucket_bytes(n_dp, tcfg.topology)
+    plan = buckets.plan_buckets(params_shapes, layout, n_dp, cap,
+                                jnp.dtype(tcfg.wire_dtype).itemsize)
+    return plan if plan.buckets else None
+
+
+def bucket_backends(tcfg: TrainConfig, plan: buckets.BucketPlan):
+    """Concrete (reduce_scatter, allgather) backend per bucket, through
+    the SAME resolver the step dispatches with (``_backend_for_bytes``):
+    the RS is priced at the bucket's wire-dtype payload, the AG at its
+    param-dtype payload."""
+    out = []
+    for b in plan.buckets:
+        rs_bytes = b.nbytes(plan.wire_itemsize, plan.n_dp)
+        ag_bytes = b.nbytes(np.dtype(b.dtype).itemsize, plan.n_dp)
+        out.append((
+            _backend_for_bytes(tcfg, "reduce_scatter", plan.n_dp, rs_bytes),
+            _backend_for_bytes(tcfg, "allgather", plan.n_dp, ag_bytes)))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +343,7 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
     _sh.set_model_parallel(mesh.shape.get(tcfg.model_axis, 1))
     layout = zero.zero_layout(model_cfg, params_shapes, n_dp)
     pspecs = param_specs(model_cfg, params_shapes)
+    plan = resolve_bucket_plan(tcfg, n_dp, params_shapes, layout)
 
     dp = tcfg.dp_axes if len(tcfg.dp_axes) > 1 else tcfg.dp_axes[0]
 
@@ -265,43 +399,83 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
                 lfn, has_aux=True)(params, batch)
 
         # ---- DP gradient reduce-scatter (the paper's collectives) ----
-        g_shards = jax.tree.map(
-            lambda g, zd: _rs_leaf(tcfg, g, zd).astype(jnp.float32) / n_dp,
-            grads, layout)
+        # Bucketed by default: sharded leaves pack into flat wire buckets,
+        # ONE flat RS per bucket; the per-leaf views sliced from each
+        # bucket's reduced row are bit-identical to what per-leaf
+        # reduce_scatter_dim would produce (ownership-preserving layout).
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_opt = treedef.flatten_up_to(opt)
+        flat_gr = treedef.flatten_up_to(grads)
+        flat_zd = treedef.flatten_up_to(layout)
+        post = _post_reduce_div(tcfg, n_dp)
+        g_sh: list = [None] * len(flat_p)
+        if plan is None:
+            for i, (g, zd) in enumerate(zip(flat_gr, flat_zd)):
+                g_sh[i] = _rs_leaf(tcfg, g, zd, n_dp).astype(
+                    jnp.float32) / post
+        else:
+            for i in plan.replicated:
+                g_sh[i] = _rs_leaf(tcfg, flat_gr[i], -1, n_dp).astype(
+                    jnp.float32) / post
+            for bucket in plan.buckets:
+                v = buckets.pack_bucket(
+                    bucket,
+                    [_wire_cast(tcfg, flat_gr[s.index], n_dp)
+                     for s in bucket.slots], n_dp)
+                row = _rs_bucket(tcfg, v).astype(jnp.float32) / post
+                for s, view in zip(bucket.slots,
+                                   buckets.shard_views(bucket, row, n_dp)):
+                    g_sh[s.index] = view
 
-        # ---- global grad-norm clip (norm over shards + replicated once) ----
+        # ---- grad-norm + metrics: ONE fused small allreduce ----
+        # (was 6 scalar allreduces: 5 metrics + the grad-norm square)
         sq_shard = sum(jnp.sum(jnp.square(g)) for g, zd in zip(
-            jax.tree.leaves(g_shards), jax.tree.leaves(layout)) if zd >= 0)
+            g_sh, flat_zd) if zd >= 0)
         sq_repl = sum(jnp.sum(jnp.square(g)) for g, zd in zip(
-            jax.tree.leaves(g_shards), jax.tree.leaves(layout)) if zd < 0)
-        gnorm = jnp.sqrt(_scalar_allreduce(tcfg, sq_shard) + sq_repl)
+            g_sh, flat_zd) if zd < 0)
+        mkeys = sorted(metrics)
+        stacked = jnp.stack(
+            [jnp.asarray(sq_shard, jnp.float32)]
+            + [jnp.asarray(metrics[k], jnp.float32) for k in mkeys])
+        red = _small_allreduce(tcfg, stacked)
+        gnorm = jnp.sqrt(red[0] + sq_repl)
         scale = jnp.minimum(1.0, tcfg.clip_norm / (gnorm + 1e-9)) \
             if tcfg.clip_norm > 0 else jnp.ones(())
 
         # ---- sharded AdamW + parameter allgather ----
         lr = lr_at(tcfg.adamw, step)
 
-        def upd(st, g, zd, pdt):
+        def upd(i):
             new_master, st2 = adamw_update_leaf(
-                tcfg.adamw, st, g * scale, step, lr)
-            newp = _ag_leaf(tcfg, new_master.astype(pdt), zd)
-            return newp, st2
+                tcfg.adamw, flat_opt[i], g_sh[i] * scale, step, lr)
+            return new_master.astype(flat_p[i].dtype), st2
 
-        flat_p, treedef = jax.tree.flatten(params)
-        flat_opt = treedef.flatten_up_to(opt)
-        flat_g = treedef.flatten_up_to(g_shards)
-        flat_zd = treedef.flatten_up_to(layout)
-        new_p, new_opt = [], []
-        for pleaf, st, g, zd in zip(flat_p, flat_opt, flat_g, flat_zd):
-            np_, st2 = upd(st, g, zd, pleaf.dtype)
-            new_p.append(np_)
-            new_opt.append(st2)
+        new_p: list = [None] * len(flat_p)
+        new_opt: list = [None] * len(flat_p)
+        if plan is None:
+            for i, zd in enumerate(flat_zd):
+                master, new_opt[i] = upd(i)
+                new_p[i] = _ag_leaf(tcfg, master, zd)
+        else:
+            for i in plan.replicated:
+                new_p[i], new_opt[i] = upd(i)
+            # per bucket: per-leaf updates on the bucket's views, then ONE
+            # flat allgather.  Bucket i's update chain shares no dataflow
+            # with bucket i-1's allgather, so XLA is free to overlap them.
+            for bucket in plan.buckets:
+                masters = []
+                for s in bucket.slots:
+                    master, new_opt[s.index] = upd(s.index)
+                    masters.append(master)
+                full = _ag_bucket(tcfg, buckets.pack_shards(bucket, masters))
+                for s, leaf in zip(bucket.slots,
+                                   buckets.unpack_bucket(bucket, full, n_dp)):
+                    new_p[s.index] = leaf
         new_params = jax.tree.unflatten(treedef, new_p)
         new_opt = jax.tree.unflatten(treedef, new_opt)
         new_params = constrain_params(model_cfg, new_params)
 
-        metrics = {k: _scalar_allreduce(tcfg, v) / n_dp
-                   for k, v in metrics.items()}
+        metrics = {k: red[j + 1] / n_dp for j, k in enumerate(mkeys)}
         metrics["grad_norm"] = gnorm
         metrics["lr"] = lr
         return new_params, {"opt": new_opt, "step": step + 1}, metrics
@@ -345,6 +519,9 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
         "params": jax.tree.map(lambda s: ns(s), pspecs),
         "state": {"opt": opt_sharding, "step": ns(P())},
         "batch": {"inputs": ns(P(dp)), "targets": ns(P(dp))},
+        # advisory, like serve's collective plan: the static bucket plan
+        # this step traced with (None = per-leaf collectives)
+        "bucket_plan": plan,
     }
     jitted = jax.jit(stepped, donate_argnums=(0, 1))
     return jitted, shardings, layout

@@ -135,3 +135,53 @@ print("FUSED_DISPATCH_OK")
 def test_pallas_fused_dispatch_matrix(subproc):
     out = subproc(_FUSED_DISPATCH, devices=8, timeout=1200)
     assert "FUSED_DISPATCH_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Bucketed-dispatch row: backend="auto" + gradient bucketing must resolve
+# every bucket to a valid CANDIDATES entry at the BUCKET's byte size (the
+# whole point of packing: the selector prices large uniform payloads, not
+# per-leaf crumbs) — for every shipped topology table.
+# ---------------------------------------------------------------------------
+
+def test_bucketed_auto_dispatch_all_tables():
+    import jax
+    import numpy as np
+
+    from repro.configs import base
+    from repro.models import transformer as T
+    from repro.topology import CANDIDATES, PRESETS, select_backend
+    from repro.train import zero
+    from repro.train.step import (TrainConfig, bucket_backends,
+                                  resolve_bucket_plan)
+
+    n_dp = 8
+    cfg = base.reduced(base.get_config("qwen3-32b"))
+    shapes = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                            jax.random.key(0))
+    layout = zero.zero_layout(cfg, shapes, n_dp)
+    for name in PRESETS:
+        tcfg = TrainConfig(backend="auto", topology=name,
+                           bucket_bytes=200_000)
+        plan = resolve_bucket_plan(tcfg, n_dp, shapes, layout)
+        assert plan is not None and len(plan.buckets) >= 2, name
+        for bucket, (rs, ag) in zip(plan.buckets,
+                                    bucket_backends(tcfg, plan)):
+            assert rs in CANDIDATES["reduce_scatter"], (name, rs)
+            assert ag in CANDIDATES["allgather"], (name, ag)
+            # resolved at the bucket's (not a leaf's) byte size
+            rs_bytes = bucket.nbytes(plan.wire_itemsize, n_dp)
+            ag_bytes = bucket.nbytes(np.dtype(bucket.dtype).itemsize, n_dp)
+            assert rs == select_backend("reduce_scatter", n_dp, rs_bytes,
+                                        name)
+            assert ag == select_backend("allgather", n_dp, ag_bytes, name)
+            for s in bucket.slots:
+                assert rs_bytes >= s.size * plan.wire_itemsize
+        # table-driven capacity resolves too (bucket_bytes=-1)
+        plan2 = resolve_bucket_plan(
+            TrainConfig(backend="auto", topology=name), n_dp, shapes, layout)
+        assert plan2 is not None
+        for rs, ag in bucket_backends(
+                TrainConfig(backend="auto", topology=name), plan2):
+            assert rs in CANDIDATES["reduce_scatter"]
+            assert ag in CANDIDATES["allgather"]

@@ -155,6 +155,39 @@ def test_moe_a2a_backend_valid():
     assert a2a_backend(8, 1 << 24) in ("xla",) + CANDIDATES["alltoall"]
 
 
+def test_bucket_bytes_cached_in_tables():
+    """Every shipped table carries the gradient-bucket capacity per p,
+    equal to a fresh cost-model sweep; lookups snap off-grid p."""
+    from repro.topology import (BUCKET_SIZE_CANDIDATES, get_topology,
+                                optimal_bucket_bytes, select_bucket_bytes)
+
+    for name in PRESETS:
+        tab = load_table(name, build_if_missing=False)
+        assert set(tab.bucket_bytes) == set(P_GRID), name
+        for p in P_GRID:
+            b = tab.bucket_bytes[p]
+            assert b in BUCKET_SIZE_CANDIDATES, (name, p, b)
+            assert b == optimal_bucket_bytes(p, get_topology(name, p)), \
+                (name, p)
+            assert select_bucket_bytes(p, name) == b
+        # off-grid p snaps like the backend lookup does
+        assert select_bucket_bytes(6, name) == tab.bucket_bytes[8]
+        assert select_bucket_bytes(1000, name) == tab.bucket_bytes[128]
+
+
+def test_bucket_sweep_objective():
+    """predict_bucket_time penalizes both extremes: per-bucket latency at
+    tiny capacities, unoverlapped update exposure at one giant bucket."""
+    from repro.topology import get_topology, predict_bucket_time
+
+    topo = get_topology("tpu_multipod", 8)
+    total = float(1 << 30)
+    t_tiny = predict_bucket_time(8, 1 << 12, total, topo)
+    t_best = predict_bucket_time(8, 1 << 26, total, topo)
+    assert t_best < t_tiny          # α amortization is the first-order win
+    assert t_best > 0
+
+
 def test_train_backend_for_auto():
     """TrainConfig(backend="auto") resolves per-leaf outside shard_map via
     the same table the API uses (axis-size path exercised in the 8-dev

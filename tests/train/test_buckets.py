@@ -1,0 +1,152 @@
+"""Gradient-bucket packer: round-trip identity, determinism, fallback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.train import buckets as B
+from repro.train import zero
+
+
+def _rand_tree(seed, specs):
+    rng = np.random.RandomState(seed)
+    tree = {f"l{i}": jnp.asarray(rng.randn(*s).astype(np.float32))
+            for i, (s, _) in enumerate(specs)}
+    layout = {f"l{i}": zd for i, (_, zd) in enumerate(specs)}
+    return tree, layout
+
+
+def _roundtrip(tree, layout, n_dp, cap):
+    """pack -> per-rank rows -> shard views -> pack_shards -> unpack."""
+    plan = B.plan_buckets(tree, layout, n_dp, cap, wire_itemsize=4)
+    flat = jax.tree.leaves(tree)
+    for b in plan.buckets:
+        v = np.asarray(B.pack_bucket(b, [flat[s.index] for s in b.slots],
+                                     n_dp))
+        assert v.shape == (n_dp * b.row_elems,)
+        rows = v.reshape(n_dp, b.row_elems).copy()
+        # each rank's views == the per-leaf ZeRO slices, exactly
+        for r in range(n_dp):
+            views = B.shard_views(b, jnp.asarray(rows[r]), n_dp)
+            for s, view in zip(b.slots, views):
+                ref = zero.slice_leaf(np.asarray(flat[s.index]), s.zero_dim,
+                                      n_dp, r)
+                np.testing.assert_array_equal(np.asarray(view), ref)
+            rows[r] = np.asarray(B.pack_shards(b, views))
+        # allgather output (rank-order rows) unpacks to the exact leaves
+        for s, leaf in zip(b.slots,
+                           B.unpack_bucket(b, jnp.asarray(rows.reshape(-1)),
+                                           n_dp)):
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.asarray(flat[s.index]))
+    return plan
+
+
+def test_roundtrip_random_shape_trees():
+    """Property-style: random dim-general trees round-trip exactly."""
+    rng = np.random.RandomState(7)
+    for trial in range(12):
+        n_dp = int(rng.choice([2, 4, 8]))
+        specs = []
+        for _ in range(rng.randint(2, 9)):
+            nd = rng.randint(1, 4)
+            shape = [int(rng.choice([2, 3, 5, 8])) for _ in range(nd)]
+            zd = rng.randint(0, nd)
+            shape[zd] *= n_dp                       # divisible along zd
+            specs.append((tuple(shape), zd))
+        tree, layout = _rand_tree(trial, specs)
+        cap = int(rng.choice([64, 512, 4096])) * 4
+        plan = _roundtrip(tree, layout, n_dp, cap)
+        # every sharded leaf packed exactly once
+        packed = sorted(s.index for b in plan.buckets for s in b.slots)
+        assert packed == list(range(len(specs)))
+
+
+def test_plan_deterministic_across_dict_order():
+    """The plan depends on tree structure only, not dict insertion order."""
+    specs = [((8, 12), 0), ((16, 4), 0), ((4, 8), 1), ((32,), 0)]
+    t1, l1 = _rand_tree(0, specs)
+    # same keys inserted in reverse order
+    t2 = dict(reversed(list(t1.items())))
+    l2 = dict(reversed(list(l1.items())))
+    p1 = B.plan_buckets(t1, l1, 4, 256, 4)
+    p2 = B.plan_buckets(t2, l2, 4, 256, 4)
+    assert p1 == p2
+
+
+def test_divisibility_fallback_never_bucketed():
+    """A leaf with no n_dp-divisible dim joins the replicated group."""
+    specs = [((8, 12), 0), ((5, 7), -1), ((3,), -1), ((16,), 0)]
+    tree, layout = _rand_tree(1, specs)
+    plan = B.plan_buckets(tree, layout, 4, 1 << 20, 4)
+    assert plan.replicated == (1, 2)
+    packed = {s.index for b in plan.buckets for s in b.slots}
+    assert packed == {0, 3}
+    assert not packed & set(plan.replicated)
+
+
+def test_first_fit_decreasing_and_capacity():
+    # sizes (elems): 96, 64, 48, 32; capacity 128 elems -> FFD packs
+    # {96, 32} and {64, 48}
+    specs = [((4, 8), 0), ((96,), 0), ((64,), 0), ((48,), 0)]
+    tree, layout = _rand_tree(2, specs)
+    plan = B.plan_buckets(tree, layout, 4, 128 * 4, 4)
+    groups = [tuple(s.index for s in b.slots) for b in plan.buckets]
+    assert groups == [(1, 0), (2, 3)]
+    # a leaf larger than the capacity still gets a (singleton) bucket
+    plan = B.plan_buckets(tree, layout, 4, 40 * 4, 4)
+    assert all(len(b.slots) == 1 for b in plan.buckets)
+    assert len(plan.buckets) == 4
+
+
+def test_mixed_dtypes_never_share_a_bucket():
+    tree = {"a": jnp.zeros((16,), jnp.bfloat16),
+            "b": jnp.zeros((16,), jnp.float32),
+            "c": jnp.zeros((16,), jnp.bfloat16)}
+    layout = {"a": 0, "b": 0, "c": 0}
+    plan = B.plan_buckets(tree, layout, 4, 1 << 20, 4)
+    flat = jax.tree.leaves(tree)
+    for b in plan.buckets:
+        assert {str(flat[s.index].dtype) for s in b.slots} == {b.dtype}
+    dts = {b.dtype for b in plan.buckets}
+    assert dts == {"bfloat16", "float32"} and len(plan.buckets) == 2
+
+
+@pytest.mark.parametrize("arch", base.list_configs())
+def test_roundtrip_every_config(arch):
+    """Exact numeric round-trip on the reduced twin of every registered
+    config, plus a structural (eval_shape, no allocation) round-trip on
+    the full-size config."""
+    from repro.models import transformer as T
+
+    n_dp = 4
+    # numeric: reduced twin
+    cfg = base.reduced(base.get_config(arch))
+    key = jax.random.key(0)
+    shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+    layout = zero.zero_layout(cfg, shapes, n_dp)
+    rng = np.random.RandomState(3)
+    tree = jax.tree.map(
+        lambda l: jnp.asarray(rng.randn(*l.shape).astype(np.float32)), shapes)
+    _roundtrip(tree, layout, n_dp, 64 * 1024)
+
+    # structural: full config via eval_shape (qwen3-32b & friends are too
+    # big to materialize on a test host; shapes/dtypes must still agree)
+    full = base.get_config(arch)
+    fshapes = jax.eval_shape(lambda k: T.init_params(k, full), key)
+    flayout = zero.zero_layout(full, fshapes, n_dp)
+    plan = B.plan_buckets(fshapes, flayout, n_dp, 64 << 20, 4)
+    flat = jax.tree.leaves(fshapes)
+    packed = sorted(s.index for b in plan.buckets for s in b.slots)
+    assert packed == sorted(set(range(len(flat))) - set(plan.replicated))
+    for b in plan.buckets:
+        assert b.row_elems == sum(s.size // n_dp for s in b.slots)
+        outs = jax.eval_shape(
+            lambda leaves: B.unpack_bucket(
+                b, B.pack_bucket(b, leaves, n_dp).reshape(-1), n_dp),
+            [flat[s.index] for s in b.slots])
+        for s, o in zip(b.slots, outs):
+            assert tuple(o.shape) == s.shape
+            assert o.dtype == flat[s.index].dtype

@@ -73,3 +73,52 @@ print("ALL_OK")
 def test_train_backends(subproc):
     out = subproc(CODE, devices=8, timeout=1500)
     assert "ALL_OK" in out
+
+
+BF16_OVERFLOW = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.train.step import (TrainConfig, _post_reduce_div, _rs_leaf,
+                              _wire_cast)
+
+mesh = jax.make_mesh((4,), ("data",))
+p = 4
+tcfg = TrainConfig(backend="bine", dp_axes=("data",), wire_dtype="bfloat16")
+
+def reduced_mean(zd):
+    def f(g):
+        out = _rs_leaf(tcfg, g.reshape(g.shape[-1]), zd, p)
+        return out.astype(jnp.float32) / _post_reduce_div(tcfg, p)
+    # zd >= 0: ranks hold disjoint blocks -> global (64,). zd < 0: the
+    # allreduced leaf is replicated; P("data") just stacks the copies.
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                             out_specs=P("data")))
+
+# large-magnitude grads: the SUM of 4 bf16 grads overflows bf16's range
+# (max ~3.39e38) but the mean does not — the pre-scale keeps it finite
+big = np.full((4, 64), 2.5e38, np.float32)
+for zd in (-1, 0):
+    fn = reduced_mean(zd)
+    out = np.asarray(fn(big)).reshape(-1)
+    assert np.all(np.isfinite(out)), (zd, out[:4])
+    np.testing.assert_allclose(out, 2.5e38, rtol=0.02)
+    # post-hoc division (the old behavior) cannot recover: the reduce
+    # itself saturates
+    naive = (jnp.asarray(big, jnp.bfloat16).astype(jnp.float32).sum(0)
+             .astype(jnp.bfloat16))
+    assert np.all(np.isinf(np.asarray(naive, np.float32)))
+
+# small-magnitude sanity: bf16 wire mean matches the fp32 mean within
+# bf16 resolution
+rng = np.random.RandomState(0)
+g = rng.randn(4, 64).astype(np.float32)
+out = np.asarray(reduced_mean(0)(g)).reshape(-1)
+np.testing.assert_allclose(out, g.mean(0), rtol=0.05, atol=0.02)
+print("BF16_OK")
+"""
+
+
+def test_bf16_wire_prescale_no_overflow(subproc):
+    out = subproc(BF16_OVERFLOW, devices=4, timeout=600)
+    assert "BF16_OK" in out
