@@ -29,9 +29,22 @@ class Recorder:
                 "records": self.records}
 
     def write(self, path: str, timestamp: Optional[str]) -> None:
+        self._dump(path, self.to_json_dict(timestamp))
+
+    def write_subset(self, path: str, timestamp: Optional[str],
+                     pred: Callable[[Dict], bool]) -> int:
+        """Write only records matching ``pred`` (same file format);
+        returns how many were written.  ``run.py`` uses this to split the
+        autotune records into their own BENCH_autotune.json artifact."""
+        records = [r for r in self.records if pred(r)]
+        self._dump(path, {"format": 1, "timestamp": timestamp,
+                          "records": records})
+        return len(records)
+
+    @staticmethod
+    def _dump(path: str, payload: Dict) -> None:
         with open(path, "w") as f:
-            json.dump(self.to_json_dict(timestamp), f, indent=1,
-                      sort_keys=True)
+            json.dump(payload, f, indent=1, sort_keys=True)
             f.write("\n")
 
 #: the paper's four systems + the TPU multi-pod target

@@ -3,23 +3,35 @@
   PYTHONPATH=src python -m benchmarks.run            # all analytic benches
   PYTHONPATH=src python -m benchmarks.run --with-jax # + 8-device microbenches
 
-Every run also writes a machine-readable ``BENCH_collectives.json``
-(``--json`` to relocate, ``--no-json`` to disable): per-bench records
-``{bench, config, metric, value}`` plus per-bench wall time, stamped with
-the ``--timestamp`` string the CALLER passes in (benchmarks never invent
-their own clock, so reruns are diffable).  Benches whose ``run`` accepts
-a ``recorder`` kwarg contribute detailed records; the rest contribute
-their wall time.
+Every run also writes machine-readable JSON to the REPO ROOT by default
+(``--json``/``--json-autotune`` to relocate, ``--no-json`` to disable) —
+that is what makes the perf trajectory real: CI uploads every
+``BENCH_*.json`` as an artifact, so numbers persist across commits
+instead of scrolling away in the log.  ``BENCH_autotune.json`` carries
+the empirical-tuner records (bench name ``autotune``);
+``BENCH_collectives.json`` carries everything else.  Records are
+``{bench, config, metric, value}`` plus per-bench wall time, stamped
+with the ``--timestamp`` string the CALLER passes in (benchmarks never
+invent their own clock, so reruns are diffable).  Benches whose ``run``
+accepts a ``recorder`` kwarg contribute detailed records; the rest
+contribute their wall time.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import os
 import sys
 import time
 
 from benchmarks.common import Recorder
+
+#: repo root — where the BENCH_*.json artifacts land by default
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: benches whose records split into BENCH_autotune.json
+AUTOTUNE_BENCHES = ("autotune",)
 
 BENCHES = [
     ("fig1_broadcast_traffic", "Fig. 1: bcast global-link bytes"),
@@ -29,6 +41,7 @@ BENCHES = [
     ("fig8_allreduce_heatmap", "Fig. 8a/9a: best-allreduce heatmap"),
     ("fugaku_torus", "Sec. 5.4: torus + multi-dimensional Bine"),
     ("hier_allreduce", "Sec. 6.2: hierarchical allreduce"),
+    ("autotune", "Empirical tuner: replayed link traffic + refresh"),
 ]
 
 #: benches that spin up the 8-host-device jax subprocess
@@ -47,8 +60,14 @@ def main() -> None:
                     help="also run the 8-device jax microbenches "
                          "(jax_collectives, fused_collectives)")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", default="BENCH_collectives.json",
-                    help="output path for the machine-readable records")
+    ap.add_argument("--json",
+                    default=os.path.join(ROOT, "BENCH_collectives.json"),
+                    help="output path for the machine-readable records "
+                         "(default: repo root)")
+    ap.add_argument("--json-autotune",
+                    default=os.path.join(ROOT, "BENCH_autotune.json"),
+                    help="output path for the empirical-tuner records "
+                         "(default: repo root)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing the JSON records")
     ap.add_argument("--timestamp", default=None,
@@ -79,8 +98,13 @@ def main() -> None:
         print(f"# bench_{name} done in {dt:.1f}s")
 
     if not args.no_json:
-        recorder.write(args.json, args.timestamp)
-        print(f"\nwrote {len(recorder.records)} records to {args.json}")
+        is_autotune = lambda r: r["bench"] in AUTOTUNE_BENCHES  # noqa: E731
+        n_coll = recorder.write_subset(
+            args.json, args.timestamp, lambda r: not is_autotune(r))
+        n_auto = recorder.write_subset(
+            args.json_autotune, args.timestamp, is_autotune)
+        print(f"\nwrote {n_coll} records to {args.json}")
+        print(f"wrote {n_auto} records to {args.json_autotune}")
     print("\nall benchmarks completed")
 
 

@@ -58,6 +58,11 @@ class CollectiveConfig:
     outer_axis: Optional[Axis] = None
     topology: str = "tpu_multipod"    # decision-table preset for backend="auto"
     fused_algo: str = "bine"          # schedule family pallas_fused executes
+    #: decision-table provenance for backend="auto": "analytic" uses the
+    #: cost-model tables, "measured" merges the empirical tuner's measured
+    #: cells over them (repro.tuner; falls back to analytic, with one
+    #: warning, when the topology has no measured table yet)
+    tuning: str = "analytic"
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -85,7 +90,8 @@ def resolve_backend(collective: str, p: int, nbytes: int,
     if cfg.backend != "auto":
         return cfg.backend
     from repro.topology import select_backend
-    return select_backend(collective, p, nbytes, cfg.topology)
+    return select_backend(collective, p, nbytes, cfg.topology,
+                          tuning=cfg.tuning)
 
 
 def _resolve(cfg: CollectiveConfig, collective: str, x, axis: Axis,

@@ -28,8 +28,14 @@ def decompress_bf16(x, dtype):
 
 
 def quantize_int8(x, chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
-    """Per-chunk symmetric int8 quantization.  Returns (q, scales)."""
-    v = x.reshape(-1)
+    """Per-chunk symmetric int8 quantization.  Returns (q, scales).
+
+    Scale and rounding always run in float32, whatever ``x.dtype``: a
+    bf16-computed scale (and a bf16 division whose ulp near 127 is 0.5)
+    pushes the round-trip error to ~1.5x the int8 bound of ``scale/2``
+    per element; upcasting restores the bound exactly.
+    """
+    v = x.reshape(-1).astype(jnp.float32)
     pad = (-v.shape[0]) % chunk
     if pad:
         v = jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
@@ -40,9 +46,13 @@ def quantize_int8(x, chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
     return q, scale.astype(jnp.float32)
 
 
-def dequantize_int8(q, scale, n: int, dtype=jnp.float32):
+def dequantize_int8(q, scale, n: int, dtype=None):
+    """Decode ``n`` leading elements.  ``dtype`` must be the caller's
+    param/wire dtype for a round trip (``ef_compress`` passes it); when
+    omitted the value stays in the float32 accumulation dtype — do NOT
+    rely on the old implicit-float32 default matching bf16 params."""
     v = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
-    return v.astype(dtype)
+    return v if dtype is None else v.astype(dtype)
 
 
 def ef_compress(grad, residual, codec: str = "int8", chunk: int = 256):

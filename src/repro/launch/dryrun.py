@@ -37,7 +37,8 @@ def sds(shape, dtype, sharding=None):
 
 
 def input_specs(arch: str, shape: str, mesh, backend: str = "bine",
-                bucket_bytes: int = -1) -> Dict[str, Any]:
+                bucket_bytes: int = -1,
+                tuning: str = "analytic") -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
     allocation) for every model input of the given cell, plus the step
     callable to lower.  Returns dict(step=fn, args=tuple_of_SDS, meta=...)."""
@@ -68,7 +69,7 @@ def input_specs(arch: str, shape: str, mesh, backend: str = "bine",
 
     if sc.kind == "train":
         tcfg = TrainConfig(backend=backend, dp_axes=dp,
-                           bucket_bytes=bucket_bytes)
+                           bucket_bytes=bucket_bytes, tuning=tuning)
         step_fn, shardings, layout = make_train_step(cfg, tcfg, mesh,
                                                      params_shapes)
         state_shapes = jax.eval_shape(
@@ -85,11 +86,15 @@ def input_specs(arch: str, shape: str, mesh, backend: str = "bine",
                      "targets": sds((B, S), jnp.int32,
                                     shardings["batch"]["targets"])}
         plan = shardings.get("bucket_plan")
+        from repro.train.step import bucket_report
         return {"step": step_fn, "args": (params_sds, state_sds, batch_sds),
                 "kind": "train", "cfg": cfg, "shape": sc,
-                "bucket_plan": plan.describe() if plan is not None else None}
+                "bucket_plan": plan.describe() if plan is not None else None,
+                # per-bucket backend decisions + their table provenance
+                # (measured vs analytic) — the tuner's end-to-end contract
+                "bucket_decisions": bucket_report(tcfg, plan)}
 
-    scfg = ServeConfig(dp_axes=dp)
+    scfg = ServeConfig(dp_axes=dp, tuning=tuning)
     prefill_fn, decode_fn, shardings = make_serve_fns(cfg, scfg, mesh, B, S)
     bspec = P(dp if len(dp) > 1 else dp[0]) if B % n_dp == 0 else P()
     if sc.kind == "prefill":
@@ -151,12 +156,13 @@ def model_flops(cfg, sc) -> float:
 
 def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
              verbose: bool = True, save_hlo: Optional[str] = None,
-             bucket_bytes: int = -1) -> Dict[str, Any]:
+             bucket_bytes: int = -1,
+             tuning: str = "analytic") -> Dict[str, Any]:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
     pod = 256
     t0 = time.time()
-    spec = input_specs(arch, shape, mesh, backend, bucket_bytes)
+    spec = input_specs(arch, shape, mesh, backend, bucket_bytes, tuning)
     with set_mesh(mesh):
         lowered = spec["step"].lower(*spec["args"])
         t_lower = time.time() - t0
@@ -186,12 +192,14 @@ def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
         "arch": arch, "shape": shape,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "backend": backend,
+        "tuning": tuning,
         "n_chips": n_chips,
         "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
         "memory": mem_d,
         "model_flops": mf,
         "useful_ratio": mf / roof.hlo_flops if roof.hlo_flops else None,
         "bucket_plan": spec.get("bucket_plan"),
+        "bucket_decisions": spec.get("bucket_decisions"),
         **roof.as_dict(),
     }
     if verbose:
@@ -202,6 +210,12 @@ def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
                   f"({bp['n_bucketed_leaves']} leaves packed, "
                   f"{bp['n_replicated_leaves']} replicated, "
                   f"cap={bp['capacity_bytes']}B)")
+        for row in spec.get("bucket_decisions") or []:
+            print(f"    bucket {row['bucket']}: "
+                  f"rs={row['rs_backend']} ({row['rs_provenance']}, "
+                  f"{row['rs_bytes']}B) "
+                  f"ag={row['ag_backend']} ({row['ag_provenance']}, "
+                  f"{row['ag_bytes']}B)")
         print(f"  memory_analysis: {mem_d}")
         ca = compiled.cost_analysis()
         if isinstance(ca, list):
@@ -234,6 +248,11 @@ def main(argv=None):
     ap.add_argument("--bucket-bytes", type=int, default=-1,
                     help="gradient-bucket capacity (wire bytes); "
                          "-1 = decision table, 0 = per-leaf collectives")
+    ap.add_argument("--tuning", default="analytic",
+                    choices=["analytic", "measured"],
+                    help="decision-table provenance for backend=auto: "
+                         "'measured' merges the empirical tuner's table "
+                         "(launch/tune.py) over the analytic one")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--save-hlo", default=None)
@@ -254,7 +273,8 @@ def main(argv=None):
             try:
                 res = run_cell(arch, shape, mp, args.backend,
                                save_hlo=args.save_hlo,
-                               bucket_bytes=args.bucket_bytes)
+                               bucket_bytes=args.bucket_bytes,
+                               tuning=args.tuning)
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
             except Exception as e:

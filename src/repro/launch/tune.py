@@ -1,0 +1,131 @@
+"""Empirical autotune CLI: probe the live mesh, write the measured table.
+
+Runs the ``repro.tuner`` probe grid (real compiled collectives — shmap
+and pallas_fused — with warmup and trimmed-median timing), files the
+measurements in the on-disk store, refreshes the topology's decision
+table from them, and writes the measured table where
+``tuning="measured"`` dispatch finds it.
+
+Usage::
+
+  python -m repro.launch.tune --grid tiny --topology tpu_multipod --devices 4
+  python -m repro.launch.tune --grid full --topology torus \
+      --timestamp "$(git rev-parse --short HEAD)"
+
+Environment: ``REPRO_MEASURE_DIR`` relocates the measurement store,
+``REPRO_MEASURED_TABLE_DIR`` the measured tables.  On CPU hosts the
+pallas cells run in interpret mode — wiring-correct, not
+performance-representative (the README's CPU caveat).
+"""
+
+import os
+import sys
+
+
+def _early_device_count() -> str:
+    """--devices must take effect BEFORE jax initializes its backend, so
+    it is peeked from argv at import time (the dryrun.py convention,
+    parameterized).  An externally-set XLA_FLAGS wins untouched."""
+    if "--devices" in sys.argv:
+        try:
+            return sys.argv[sys.argv.index("--devices") + 1]
+        except IndexError:
+            pass
+    return os.environ.get("REPRO_TUNE_DEVICES", "8")
+
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_early_device_count()}")
+
+import argparse
+import json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="probe collective timings and refresh the measured "
+                    "decision table")
+    ap.add_argument("--grid", default="tiny",
+                    help="probe grid name (tiny | small | full)")
+    ap.add_argument("--topology", default="tpu_multipod",
+                    help="decision-table preset the measurements tune")
+    ap.add_argument("--devices", default=None,
+                    help="forced host device count (must cover the grid's "
+                         "largest p; consumed before jax init)")
+    ap.add_argument("--timestamp", default=None,
+                    help="caller-supplied provenance string recorded "
+                         "verbatim (never auto-generated)")
+    ap.add_argument("--store-dir", default=None,
+                    help="measurement store override (REPRO_MEASURE_DIR)")
+    ap.add_argument("--table-out", default=None,
+                    help="measured-table path override (default: "
+                         "topology.measured_table_path)")
+    ap.add_argument("--merge-store", action="store_true",
+                    help="refresh from all cached measurements for this "
+                         "(topology, device kind), not just this run's")
+    ap.add_argument("--dry", action="store_true",
+                    help="list the grid cells and exit without timing")
+    args = ap.parse_args(argv)
+
+    from repro.topology import PRESETS, load_table, measured_table_path
+    from repro.tuner import (GRIDS, load_all_measurements, probe_grid,
+                             refresh_table, save_measurements)
+    from repro.tuner.probe import probe_backends
+
+    if args.grid not in GRIDS:
+        ap.error(f"unknown grid {args.grid!r}; known: {sorted(GRIDS)}")
+    if args.topology not in PRESETS:
+        ap.error(f"unknown topology {args.topology!r}; known: {PRESETS}")
+    spec = GRIDS[args.grid]
+
+    if args.dry:
+        for p in spec.ps:
+            for coll in spec.collectives:
+                for backend in probe_backends(coll):
+                    for nbytes in spec.sizes:
+                        print(f"{coll} {backend} p={p} {nbytes}B")
+        return 0
+
+    print(f"[tune] grid={spec.name} topology={args.topology} "
+          f"ps={spec.ps} sizes={spec.sizes}")
+    sets = probe_grid(spec, args.topology, timestamp=args.timestamp,
+                      progress=True)
+    if not any(ms.measurements for ms in sets):
+        print("[tune] no cells measured (not enough devices?)",
+              file=sys.stderr)
+        return 1
+    for ms in sets:
+        path = save_measurements(ms, args.store_dir)
+        print(f"[tune] wrote {len(ms.measurements)} measurements -> {path}")
+
+    base = load_table(args.topology)
+    if args.merge_store:
+        # filter by THIS machine's device kind: medians across unrelated
+        # hardware (a CPU smoke run + a TPU run) would rank candidates by
+        # an average of two different machines and suit neither
+        flat = [m for ms2 in load_all_measurements(
+            topology=args.topology, dir=args.store_dir,
+            device_kind=sets[0].device_kind)
+            for m in ms2.measurements]
+    else:
+        flat = [m for ms2 in sets for m in ms2.measurements]
+    table = refresh_table(args.topology, flat, base=base)
+
+    out = args.table_out or measured_table_path(args.topology)
+    table.save(out)
+    n_meas = table.measured_cell_count()
+    n_cells = sum(len(row) for per_p in table.entries.values()
+                  for row in per_p.values())
+    overrides = table.overrides_vs(base)
+    print(f"[tune] measured table -> {out}")
+    print(f"[tune] {n_meas}/{n_cells} cells measured, "
+          f"{overrides} override the analytic choice")
+    print(json.dumps({"grid": spec.name, "topology": args.topology,
+                      "measured_cells": n_meas, "total_cells": n_cells,
+                      "analytic_overrides": overrides, "table": out}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,9 @@ class ServeConfig:
     #: build the serving collective plan; "xla" pins the GSPMD defaults.
     backend: str = "auto"
     topology: str = "tpu_multipod"
+    #: table provenance for the plan lookups: "analytic" | "measured"
+    #: (the empirical tuner's cells, repro.tuner; analytic fallback)
+    tuning: str = "analytic"
 
 
 def _dp(scfg: ServeConfig):
@@ -113,18 +116,20 @@ def collective_plan(model_cfg, scfg: ServeConfig, mesh, B: int) -> Dict[str, str
         # flash-decoding partial-softmax combine over the model axis
         attn_bytes = B * model_cfg.n_heads * model_cfg.head_dim * itemsize
         plan["decode_attn_allreduce"] = select_backend(
-            "allreduce", n_tp, attn_bytes, scfg.topology)
+            "allreduce", n_tp, attn_bytes, scfg.topology,
+            tuning=scfg.tuning)
         # vocab-sharded logits re-assembly for sampling
         logit_bytes = B * model_cfg.vocab_size * 4
         plan["logits_allgather"] = select_backend(
-            "allgather", n_tp, logit_bytes, scfg.topology)
+            "allgather", n_tp, logit_bytes, scfg.topology,
+            tuning=scfg.tuning)
     if n_dp > 1:
         # batched token scatter/gather between the frontend and the mesh
         tok_bytes = B * 4
         plan["token_scatter"] = select_backend(
-            "scatter", n_dp, tok_bytes, scfg.topology)
+            "scatter", n_dp, tok_bytes, scfg.topology, tuning=scfg.tuning)
         plan["token_gather"] = select_backend(
-            "gather", n_dp, tok_bytes, scfg.topology)
+            "gather", n_dp, tok_bytes, scfg.topology, tuning=scfg.tuning)
     return plan
 
 

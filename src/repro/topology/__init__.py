@@ -18,15 +18,20 @@ from .cost import (BUCKET_SIZE_CANDIDATES, CANDIDATES, SMALL_CUTOFF_BYTES,
                    optimal_bucket_bytes, predict_bucket_time, predict_time,
                    schedule_algo)
 from .presets import PRESETS, get_topology, torus_dims
-from .table import (P_GRID, SIZE_BUCKETS, DecisionTable, build_table,
-                    load_table, select_backend, select_bucket_bytes,
-                    table_path)
+from .table import (ANALYTIC, MEASURED, P_GRID, SIZE_BUCKETS, TUNINGS,
+                    DecisionTable, build_table, decision_provenance,
+                    load_table, measured_dir, measured_table_path,
+                    merge_measured, select_backend, select_bucket_bytes,
+                    table_path, with_measured_cells)
 
 __all__ = [
     "BUCKET_SIZE_CANDIDATES", "CANDIDATES", "SMALL_CUTOFF_BYTES",
     "optimal_bucket_bytes", "predict_bucket_time", "predict_time",
     "schedule_algo",
     "PRESETS", "get_topology", "torus_dims",
-    "P_GRID", "SIZE_BUCKETS", "DecisionTable", "build_table", "load_table",
+    "ANALYTIC", "MEASURED", "P_GRID", "SIZE_BUCKETS", "TUNINGS",
+    "DecisionTable", "build_table", "decision_provenance", "load_table",
+    "measured_dir", "measured_table_path", "merge_measured",
     "select_backend", "select_bucket_bytes", "table_path",
+    "with_measured_cells",
 ]

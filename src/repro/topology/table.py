@@ -7,12 +7,13 @@ serialized to JSON so production tracing never re-runs the simulator.
 On-disk format (see README for the worked example)::
 
     {
-      "format": 1,
+      "format": 2,
       "topology": "tpu_multipod",
       "small_cutoff_bytes": 16384,
       "ps": [4, 8, ...],
       "size_buckets": [256, 1024, ...],      # inclusive upper edges, bytes
-      "entries": {"allreduce": {"4": ["recdoub", ...]}, ...}
+      "entries": {"allreduce": {"4": ["recdoub", ...]}, ...},
+      "provenance": {"allreduce": {"4": ["measured", "analytic", ...]}}
     }
 
 ``entries[collective][str(p)][i]`` is the backend for vectors whose payload
@@ -20,9 +21,20 @@ falls in bucket ``i`` (``nbytes <= size_buckets[i]``, first match; larger
 payloads use the last bucket).  Lookups for a rank count not on the grid
 snap to the nearest grid point in log-space.
 
+``provenance`` mirrors ``entries`` cell-for-cell and says where each
+decision came from: ``"analytic"`` (the cost-model argmin) or
+``"measured"`` (the empirical tuner's argmin over real timings,
+``repro.tuner.refresh``).  It is optional — format-1 tables, including
+every packaged analytic table, parse unchanged and read as all-analytic.
+
 Tables for all presets ship with the package under ``topology/tables/``;
 ``load_table`` falls back to building (and caching) one on first use for
 anything else.  ``REPRO_TABLE_DIR`` overrides the cache directory.
+Measured tables live in a separate directory (``REPRO_MEASURED_TABLE_DIR``,
+default ``<cache>/measured``) written by ``launch/tune.py``;
+``tuning="measured"`` merges their measured cells over the analytic base
+at load time and falls back to all-analytic — with a once-per-topology
+warning — when no measured table exists.
 """
 
 from __future__ import annotations
@@ -30,6 +42,7 @@ from __future__ import annotations
 import json
 import math
 import os
+import warnings
 from bisect import bisect_left
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -38,7 +51,17 @@ from .cost import (CANDIDATES, SMALL_CUTOFF_BYTES, optimal_bucket_bytes,
                    predict_time)
 from .presets import PRESETS, get_topology
 
-_FORMAT = 1
+_FORMAT = 2
+#: formats ``from_json_dict`` accepts: 1 = pre-provenance (all packaged
+#: analytic tables), 2 = adds the per-cell provenance map
+_COMPAT_FORMATS = (1, 2)
+
+#: decision provenance values
+ANALYTIC = "analytic"
+MEASURED = "measured"
+
+#: valid ``tuning=`` values (CollectiveConfig / TrainConfig / ServeConfig)
+TUNINGS = (ANALYTIC, MEASURED)
 
 #: rank-count grid: powers of two, the domain of every paper schedule
 P_GRID: Tuple[int, ...] = (4, 8, 16, 32, 64, 128)
@@ -59,6 +82,10 @@ class DecisionTable:
     # empty on tables serialized before the bucketing PR (lookups fall back
     # to an on-the-fly sweep in select_bucket_bytes)
     bucket_bytes: Dict[int, int] = field(default_factory=dict)
+    # collective -> p -> ["measured"|"analytic" per size bucket], mirroring
+    # ``entries``; empty = every decision is analytic (format-1 tables)
+    provenance: Dict[str, Dict[int, Tuple[str, ...]]] = \
+        field(default_factory=dict)
 
     # -- lookup ------------------------------------------------------------
 
@@ -77,10 +104,34 @@ class DecisionTable:
         q = p if p in per_p else self.nearest_p(p)
         return per_p[q][self.bucket_of(nbytes)]
 
+    def provenance_of(self, collective: str, p: int, nbytes: float) -> str:
+        """Where the ``lookup`` decision for this cell came from."""
+        per_p = self.provenance.get(collective)
+        if not per_p:
+            return ANALYTIC
+        q = p if p in per_p else self.nearest_p(p)
+        row = per_p.get(q)
+        return row[self.bucket_of(nbytes)] if row else ANALYTIC
+
+    def measured_cell_count(self) -> int:
+        return sum(row.count(MEASURED)
+                   for per_p in self.provenance.values()
+                   for row in per_p.values())
+
+    def overrides_vs(self, base: "DecisionTable") -> int:
+        """How many MEASURED cells pick a different backend than ``base``
+        (the analytic table they were refreshed against)."""
+        return sum(
+            1 for c, per_p in self.entries.items()
+            for p, row in per_p.items()
+            for i, b in enumerate(row)
+            if self.provenance_of(c, p, self.size_buckets[i]) == MEASURED
+            and b != base.entries[c][p][i])
+
     # -- (de)serialization -------------------------------------------------
 
     def to_json_dict(self) -> dict:
-        return {
+        d = {
             "format": _FORMAT,
             "topology": self.topology,
             "small_cutoff_bytes": self.small_cutoff_bytes,
@@ -91,10 +142,15 @@ class DecisionTable:
             "bucket_bytes": {str(p): int(v)
                              for p, v in self.bucket_bytes.items()},
         }
+        if self.provenance:
+            d["provenance"] = {
+                c: {str(p): list(row) for p, row in per_p.items()}
+                for c, per_p in self.provenance.items()}
+        return d
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "DecisionTable":
-        if d.get("format") != _FORMAT:
+        if d.get("format") not in _COMPAT_FORMATS:
             raise ValueError(f"unsupported decision-table format {d.get('format')!r}")
         return cls(
             topology=d["topology"],
@@ -105,6 +161,8 @@ class DecisionTable:
                      for c, per_p in d["entries"].items()},
             bucket_bytes={int(p): int(v)
                           for p, v in d.get("bucket_bytes", {}).items()},
+            provenance={c: {int(p): tuple(row) for p, row in per_p.items()}
+                        for c, per_p in d.get("provenance", {}).items()},
         )
 
     def save(self, path: str) -> None:
@@ -156,11 +214,93 @@ def build_table(topology: str,
 
 
 # ---------------------------------------------------------------------------
+# Measured-cell merging (the empirical tuner's output, repro.tuner.refresh)
+# ---------------------------------------------------------------------------
+
+def with_measured_cells(base: DecisionTable,
+                        cells: Dict[Tuple[str, int, int], str]
+                        ) -> DecisionTable:
+    """Overlay measured decisions onto ``base``.
+
+    ``cells`` maps ``(collective, p, size-bucket index) -> backend``; every
+    named cell takes the measured backend (``provenance_of`` says
+    ``"measured"``) and every other cell keeps the analytic entry.  Cells
+    off ``base``'s grid raise — measurements snap to the grid upstream in
+    ``tuner.refresh``.
+    """
+    entries = {c: {p: list(row) for p, row in per_p.items()}
+               for c, per_p in base.entries.items()}
+    prov = {c: {p: [ANALYTIC] * len(row) for p, row in per_p.items()}
+            for c, per_p in base.entries.items()}
+    if base.provenance:  # preserve measured cells already in the base
+        for c, per_p in base.provenance.items():
+            for p, row in per_p.items():
+                prov[c][p] = list(row)
+    nb = len(base.size_buckets)
+    for (coll, p, bucket), backend in cells.items():
+        if coll not in entries or p not in entries[coll] or not (
+                0 <= bucket < nb):
+            raise KeyError(f"measured cell ({coll}, {p}, {bucket}) is off "
+                           f"the {base.topology!r} table grid")
+        entries[coll][p][bucket] = backend
+        prov[coll][p][bucket] = MEASURED
+    return DecisionTable(
+        topology=base.topology,
+        small_cutoff_bytes=base.small_cutoff_bytes,
+        ps=base.ps, size_buckets=base.size_buckets,
+        entries={c: {p: tuple(row) for p, row in per_p.items()}
+                 for c, per_p in entries.items()},
+        bucket_bytes=dict(base.bucket_bytes),
+        provenance={c: {p: tuple(row) for p, row in per_p.items()}
+                    for c, per_p in prov.items()})
+
+
+def merge_measured(base: DecisionTable,
+                   measured: DecisionTable) -> DecisionTable:
+    """Merge a measured table's MEASURED cells over an analytic base.
+
+    Both tables must share the (ps, size_buckets, small_cutoff) grid —
+    the tuner always refreshes against the current analytic base, so a
+    mismatch means the measured table is stale; the caller decides
+    whether that warns-and-falls-back (``load_table``) or raises.
+    """
+    if (measured.ps != base.ps
+            or measured.size_buckets != base.size_buckets
+            or measured.small_cutoff_bytes != base.small_cutoff_bytes):
+        raise ValueError(
+            f"measured table grid for {base.topology!r} does not match the "
+            f"analytic base (stale measured table? re-run launch/tune.py)")
+    cells = {}
+    for c, per_p in measured.provenance.items():
+        for p, row in per_p.items():
+            for i, src in enumerate(row):
+                if src == MEASURED:
+                    cells[(c, p, i)] = measured.entries[c][p][i]
+    return with_measured_cells(base, cells)
+
+
+# ---------------------------------------------------------------------------
 # Disk cache + process-level cache
 # ---------------------------------------------------------------------------
 
 _PACKAGED_DIR = os.path.join(os.path.dirname(__file__), "tables")
-_LOADED: Dict[str, DecisionTable] = {}
+_LOADED: Dict[Tuple[str, str], DecisionTable] = {}
+
+#: warning keys already emitted this process (see ``_warn_once``)
+_WARNED: set = set()
+
+
+def _warn_once(key, msg: str) -> None:
+    """Emit ``msg`` at most once per process for ``key``.
+
+    Trace-time lookups run per collective call site — a 40-bucket train
+    step alone performs ~80 lookups — so fallback diagnostics must
+    deduplicate or they drown the log.
+    """
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(msg, stacklevel=3)
 
 
 def _cache_dir() -> str:
@@ -169,6 +309,19 @@ def _cache_dir() -> str:
         return env
     return os.path.join(os.path.expanduser("~"), ".cache", "repro-bine",
                         "tables")
+
+
+def measured_dir() -> str:
+    """Where ``launch/tune.py`` writes measured tables
+    (``REPRO_MEASURED_TABLE_DIR`` overrides)."""
+    env = os.environ.get("REPRO_MEASURED_TABLE_DIR")
+    if env:
+        return env
+    return os.path.join(_cache_dir(), "measured")
+
+
+def measured_table_path(topology: str) -> str:
+    return os.path.join(measured_dir(), f"{topology}.json")
 
 
 def table_path(topology: str, cache_dir: Optional[str] = None) -> str:
@@ -181,49 +334,99 @@ def table_path(topology: str, cache_dir: Optional[str] = None) -> str:
 
 
 def load_table(topology: str, cache_dir: Optional[str] = None,
-               build_if_missing: bool = True) -> DecisionTable:
-    """Load a preset's table from disk, building + caching it if absent."""
+               build_if_missing: bool = True,
+               tuning: str = ANALYTIC) -> DecisionTable:
+    """Load a preset's table from disk, building + caching it if absent.
+
+    ``tuning="measured"`` additionally merges the topology's measured
+    table (``measured_table_path``) over the analytic base; a missing or
+    grid-stale measured table warns once per topology and falls back to
+    the analytic decisions — auto-dispatch must never fail because a
+    machine was not tuned yet.
+    """
+    if tuning not in TUNINGS:
+        raise ValueError(f"unknown tuning {tuning!r}; expected one of "
+                         f"{TUNINGS}")
     path = table_path(topology, cache_dir)
     if os.path.exists(path):
-        return DecisionTable.load(path)
-    if not build_if_missing:
+        base = DecisionTable.load(path)
+    elif not build_if_missing:
         raise FileNotFoundError(path)
-    if topology not in PRESETS:
-        raise KeyError(f"unknown topology preset {topology!r}; known: {PRESETS}")
-    table = build_table(topology)
+    else:
+        if topology not in PRESETS:
+            raise KeyError(
+                f"unknown topology preset {topology!r}; known: {PRESETS}")
+        base = build_table(topology)
+        try:
+            base.save(path)
+        except OSError:
+            pass  # read-only installs still work, just without the disk cache
+    if tuning != MEASURED:
+        return base
+    mpath = measured_table_path(topology)
+    if not os.path.exists(mpath):
+        _warn_once(("no-measured-table", topology),
+                   f"tuning='measured' for topology {topology!r} but no "
+                   f"measured table at {mpath}; falling back to analytic "
+                   f"decisions (run `python -m repro.launch.tune` to "
+                   f"produce one)")
+        return base
     try:
-        table.save(path)
-    except OSError:
-        pass  # read-only installs still work, just without the disk cache
+        return merge_measured(base, DecisionTable.load(mpath))
+    except (ValueError, KeyError, TypeError, OSError,
+            json.JSONDecodeError) as e:
+        # any unusable measured file (grid-stale, truncated, hand-edited)
+        # falls back — auto-dispatch must never fail for a bad tune run
+        _warn_once(("stale-measured-table", topology),
+                   f"measured table {mpath} unusable ({e!r}); falling "
+                   f"back to analytic decisions")
+        return base
+
+
+def _table_for(topology: str, tuning: str) -> DecisionTable:
+    key = (topology, tuning)
+    table = _LOADED.get(key)
+    if table is None:
+        table = _LOADED[key] = load_table(topology, tuning=tuning)
     return table
 
 
 def select_backend(collective: str, p: int, nbytes: float,
-                   topology: str = "tpu_multipod") -> str:
+                   topology: str = "tpu_multipod",
+                   tuning: str = ANALYTIC) -> str:
     """The ``backend="auto"`` entry point: table lookup, cached per process.
 
     Called at trace time (shapes are static under jit/shard_map), so the
     lookup has zero runtime cost in the compiled program.
     """
-    table = _LOADED.get(topology)
-    if table is None:
-        table = _LOADED[topology] = load_table(topology)
-    return table.lookup(collective, p, nbytes)
+    return _table_for(topology, tuning).lookup(collective, p, nbytes)
 
 
-def select_bucket_bytes(p: int, topology: str = "tpu_multipod") -> int:
+def decision_provenance(collective: str, p: int, nbytes: float,
+                        topology: str = "tpu_multipod",
+                        tuning: str = ANALYTIC) -> str:
+    """"measured" | "analytic" for the cell ``select_backend`` would use."""
+    return _table_for(topology, tuning).provenance_of(collective, p, nbytes)
+
+
+def select_bucket_bytes(p: int, topology: str = "tpu_multipod",
+                        tuning: str = ANALYTIC) -> int:
     """Table-driven gradient-bucket capacity for ``p`` DP ranks.
 
     Reads the ``bucket_bytes`` entry cached alongside the backend rows
     (same trace-time lookup as ``select_backend``); a table serialized
     before the entry existed falls back to an on-the-fly
-    ``cost.optimal_bucket_bytes`` sweep at the snapped grid point.
+    ``cost.optimal_bucket_bytes`` sweep at the snapped grid point, warning
+    once per (topology, p) — not once per lookup, which would log dozens
+    of times per bucketed train step.
     """
-    table = _LOADED.get(topology)
-    if table is None:
-        table = _LOADED[topology] = load_table(topology)
+    table = _table_for(topology, tuning)
     q = p if p in table.bucket_bytes else table.nearest_p(p)
     if q in table.bucket_bytes:
         return table.bucket_bytes[q]
+    _warn_once(("stale-bucket-bytes", topology, q),
+               f"decision table for {topology!r} predates the bucket_bytes "
+               f"entry (p={q}); sweeping optimal_bucket_bytes on the fly — "
+               f"rebuild the table to cache it")
     return optimal_bucket_bytes(q, get_topology(topology, q),
                                 small_cutoff_bytes=table.small_cutoff_bytes)

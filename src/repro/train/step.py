@@ -68,6 +68,9 @@ class TrainConfig:
     adamw: AdamWConfig = AdamWConfig()
     #: decision-table preset consulted when backend == "auto"
     topology: str = "tpu_multipod"
+    #: table provenance for backend == "auto": "analytic" (cost model) or
+    #: "measured" (empirical tuner cells merged over it; repro.tuner)
+    tuning: str = "analytic"
     #: small/large allreduce switch (inclusive), bytes of the wire dtype
     small_cutoff_bytes: int = 16384
     #: gradient-bucket capacity in wire-dtype bytes: -1 (default) reads the
@@ -105,7 +108,8 @@ def _backend_for_bytes(tcfg: TrainConfig, collective: str, p: int,
     if tcfg.backend != "auto":
         return tcfg.backend
     from repro.topology import select_backend
-    return select_backend(collective, p, nbytes, tcfg.topology)
+    return select_backend(collective, p, nbytes, tcfg.topology,
+                          tuning=tcfg.tuning)
 
 
 def _backend_for(tcfg: TrainConfig, collective: str, arr,
@@ -268,7 +272,7 @@ def resolve_bucket_plan(tcfg: TrainConfig, n_dp: int, params_shapes,
     cap = tcfg.bucket_bytes
     if cap < 0:
         from repro.topology import select_bucket_bytes
-        cap = select_bucket_bytes(n_dp, tcfg.topology)
+        cap = select_bucket_bytes(n_dp, tcfg.topology, tuning=tcfg.tuning)
     plan = buckets.plan_buckets(params_shapes, layout, n_dp, cap,
                                 jnp.dtype(tcfg.wire_dtype).itemsize)
     return plan if plan.buckets else None
@@ -287,6 +291,42 @@ def bucket_backends(tcfg: TrainConfig, plan: buckets.BucketPlan):
             _backend_for_bytes(tcfg, "reduce_scatter", plan.n_dp, rs_bytes),
             _backend_for_bytes(tcfg, "allgather", plan.n_dp, ag_bytes)))
     return out
+
+
+def bucket_report(tcfg: TrainConfig, plan: Optional[buckets.BucketPlan]):
+    """Per-bucket decision report for the dryrun/monitoring paths.
+
+    One row per wire bucket: the resolved (reduce_scatter, allgather)
+    backend at the bucket's payload — through the SAME resolver the step
+    dispatches with — plus where each decision came from: ``"measured"``
+    or ``"analytic"`` table cells under ``backend="auto"``, ``"fixed"``
+    when the backend is pinned by config.  This is the report the tuner's
+    end-to-end test asserts on: after ``launch/tune.py`` populates a
+    measured table, a ``tuning="measured"`` step's buckets must show
+    measured provenance.
+    """
+    if plan is None:
+        return []
+    rows = []
+    for i, (b, (rs_b, ag_b)) in enumerate(
+            zip(plan.buckets, bucket_backends(tcfg, plan))):
+        rs_bytes = b.nbytes(plan.wire_itemsize, plan.n_dp)
+        ag_bytes = b.nbytes(np.dtype(b.dtype).itemsize, plan.n_dp)
+        if tcfg.backend == "auto":
+            from repro.topology import decision_provenance
+            rs_src = decision_provenance("reduce_scatter", plan.n_dp,
+                                         rs_bytes, tcfg.topology,
+                                         tuning=tcfg.tuning)
+            ag_src = decision_provenance("allgather", plan.n_dp, ag_bytes,
+                                         tcfg.topology, tuning=tcfg.tuning)
+        else:
+            rs_src = ag_src = "fixed"
+        rows.append({
+            "bucket": i, "n_leaves": len(b.slots),
+            "rs_backend": rs_b, "rs_bytes": rs_bytes, "rs_provenance": rs_src,
+            "ag_backend": ag_b, "ag_bytes": ag_bytes, "ag_provenance": ag_src,
+        })
+    return rows
 
 
 # ---------------------------------------------------------------------------

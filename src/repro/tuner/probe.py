@@ -1,0 +1,225 @@
+"""Microbenchmark harness: compile and time the REAL collectives.
+
+For every (collective × backend × payload × p) cell of a grid, the probe
+builds the same shard_map program production tracing would build (the
+``collectives.api`` dispatch — shmap schedules and the pallas_fused step
+kernels alike), compiles it once, warms it up, and times it with a
+trimmed median over repetitions.  Payloads are deterministic (seeded
+arange-derived, never RNG-at-probe-time) so two probe runs time
+bit-identical programs.
+
+The probe measures the machine it runs on; ``topology`` is only the
+decision-table key the measurements are filed under (which table
+``refresh`` will rebuild).  On CPU hosts the pallas_fused cells execute
+in interpret mode (the ``kernels.collectives`` default off-TPU) — real
+dispatch plumbing, not real kernel speed; the measured tables such a run
+produces are for wiring tests, not performance claims (see README).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.tuner.store import Measurement, MeasurementSet
+
+#: collectives the probe can drive end-to-end through collectives.api
+PROBE_COLLECTIVES = ("allreduce", "reduce_scatter", "allgather")
+
+
+@dataclass(frozen=True)
+class GridSpec:
+    """One probe grid: the cells ``probe_grid`` compiles and times."""
+    name: str
+    collectives: Tuple[str, ...]
+    sizes: Tuple[int, ...]          # FULL-vector payload bytes (pow2)
+    ps: Tuple[int, ...]
+    warmup: int = 2
+    reps: int = 10
+
+
+#: named grids for launch/tune.py.  Sizes sit exactly on decision-table
+#: bucket edges (SIZE_BUCKETS) so every measurement lands in the cell it
+#: was aimed at.  "tiny" is the CPU/CI smoke grid.
+GRIDS: Dict[str, GridSpec] = {
+    "tiny": GridSpec("tiny", PROBE_COLLECTIVES,
+                     sizes=(1 << 16, 1 << 18, 1 << 20), ps=(4,),
+                     warmup=1, reps=5),
+    "small": GridSpec("small", PROBE_COLLECTIVES,
+                      sizes=(1 << 16, 1 << 20, 1 << 24), ps=(4, 8),
+                      warmup=2, reps=10),
+    "full": GridSpec("full", PROBE_COLLECTIVES,
+                     sizes=tuple(1 << k for k in range(14, 27, 2)),
+                     ps=(4, 8, 16), warmup=2, reps=20),
+}
+
+
+def trimmed_median(times: List[float], trim: float = 0.2) -> float:
+    """Median of the middle (1 - 2*trim) of the sorted samples.
+
+    Robust to the one-off hiccups (GC, interrupts) that poison a mean and
+    to the cold tail a plain min hides behind.
+    """
+    if not times:
+        raise ValueError("no samples")
+    xs = sorted(times)
+    k = int(len(xs) * trim)
+    xs = xs[k:len(xs) - k] or xs
+    mid = len(xs) // 2
+    if len(xs) % 2:
+        return xs[mid]
+    return 0.5 * (xs[mid - 1] + xs[mid])
+
+
+def _payload(nbytes: int, p: int) -> np.ndarray:
+    """Deterministic full-vector payload, one row per rank ([p, n]).
+
+    Cached below: every backend of a (p, nbytes) cell times the identical
+    array, so the O(p * nbytes) construction runs once per grid point,
+    not once per candidate."""
+    n = max(p, nbytes // 4)
+    n -= n % p
+    base = (np.arange(n, dtype=np.float32) % 977.0) / 977.0
+    rows = np.stack([np.roll(base, r) for r in range(p)])
+    return rows
+
+
+_payload_cache: Dict[Tuple[int, int], np.ndarray] = {}
+
+
+def _payload_cached(nbytes: int, p: int) -> np.ndarray:
+    key = (nbytes, p)
+    if key not in _payload_cache:
+        _payload_cache.clear()   # one grid point live at a time
+        _payload_cache[key] = _payload(nbytes, p)
+    return _payload_cache[key]
+
+
+def _build_fn(collective: str, backend: str, p: int, mesh, axis: str):
+    """jitted shard_map program for one probe cell: [p, ...] in, per-rank
+    rows, through the exact ``collectives.api`` dispatch path."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.collectives import api
+    from repro.compat import shard_map
+
+    cfg = api.CollectiveConfig(backend=backend)
+
+    if collective == "allreduce":
+        def body(v):
+            return api.allreduce(v.reshape(-1), axis, cfg).reshape(v.shape)
+    elif collective == "reduce_scatter":
+        def body(v):
+            return api.reduce_scatter(v.reshape(-1), axis, cfg)[None]
+    elif collective == "allgather":
+        def body(v):
+            return api.allgather(v.reshape(-1), axis, cfg)[None]
+    else:
+        raise ValueError(f"probe cannot drive collective {collective!r}")
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=P(axis),
+                             out_specs=P(axis)))
+
+
+def time_collective(collective: str, backend: str, p: int, nbytes: int,
+                    mesh=None, axis: str = "x", warmup: int = 2,
+                    reps: int = 10) -> Measurement:
+    """Compile + warm up + time one cell; returns its ``Measurement``.
+
+    ``allgather`` is fed its block input (``nbytes/p`` per rank) so the
+    FULL-vector payload — the decision-table key — is ``nbytes`` for
+    every collective alike.
+    """
+    import jax
+
+    if mesh is None:
+        mesh = _mesh_for(p, axis)
+    rows = _payload_cached(nbytes, p)
+    if collective == "allgather":
+        rows = rows[:, :rows.shape[1] // p]
+    fn = _build_fn(collective, backend, p, mesh, axis)
+    x = jax.device_put(rows)
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(x))
+    times = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        times.append(time.perf_counter() - t0)
+    return Measurement(collective=collective, backend=backend, p=p,
+                       nbytes=int(nbytes), time_s=trimmed_median(times),
+                       reps=len(times))
+
+
+def _mesh_for(p: int, axis: str):
+    import jax
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < p:
+        raise RuntimeError(
+            f"probe needs {p} devices, have {len(devs)} "
+            f"(set --xla_force_host_platform_device_count or --devices)")
+    return Mesh(np.array(devs[:p]), (axis,))
+
+
+def probe_backends(collective: str) -> Tuple[str, ...]:
+    """The candidate set a measured cell must cover — exactly what the
+    decision table minimizes over."""
+    from repro.topology import CANDIDATES
+    return CANDIDATES[collective]
+
+
+def probe_grid(spec: GridSpec, topology: str,
+               timestamp: Optional[str] = None,
+               progress: bool = False) -> List[MeasurementSet]:
+    """Run every cell of ``spec``; one ``MeasurementSet`` per rank count.
+
+    Rank counts the host cannot provide devices for are skipped loudly
+    (recorded in the set's provenance as ``skipped_ps``) rather than
+    silently shrinking the grid.
+    """
+    import jax
+
+    device_kind = jax.devices()[0].device_kind
+    out: List[MeasurementSet] = []
+    skipped: List[int] = []
+    for p in spec.ps:
+        if len(jax.devices()) < p:
+            skipped.append(p)
+            continue
+        mesh = _mesh_for(p, "x")
+        ms = MeasurementSet(
+            device_kind=device_kind, topology=topology, p=p,
+            provenance={
+                "grid": spec.name,
+                "timestamp": timestamp,
+                "jax": jax.__version__,
+                "platform": jax.default_backend(),
+                "warmup": str(spec.warmup), "reps": str(spec.reps),
+            })
+        # sizes outermost: every candidate of a (p, nbytes) grid point
+        # reuses the one cached payload array (see _payload_cached)
+        for nbytes in spec.sizes:
+            for collective in spec.collectives:
+                for backend in probe_backends(collective):
+                    m = time_collective(collective, backend, p, nbytes,
+                                        mesh=mesh, warmup=spec.warmup,
+                                        reps=spec.reps)
+                    ms.measurements.append(m)
+                    if progress:
+                        print(f"[probe] p={p} {collective:>14} "
+                              f"{backend:>12} {nbytes:>10}B "
+                              f"{m.time_s * 1e6:10.1f}us")
+        out.append(ms)
+    if skipped:
+        for ms in out:
+            ms.provenance["skipped_ps"] = ",".join(map(str, skipped))
+        if progress:
+            print(f"[probe] skipped p={skipped}: not enough devices "
+                  f"({len(jax.devices())} available)")
+    return out

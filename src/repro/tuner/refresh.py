@@ -1,0 +1,101 @@
+"""Rebuild ``DecisionTable`` cells from measurements.
+
+A decision-table cell (collective, p, size-bucket) flips from analytic to
+measured when the probe has timed **every** candidate backend the table
+minimizes over (``topology.CANDIDATES``) for that cell — a partially
+measured cell keeps the analytic prediction, because an argmin over a
+subset silently biases toward whichever backends happened to get probed
+(the classic mistuning mode analytic-only models AND partial empirical
+sweeps share; cf. Barchet-Estefanel & Mounié's fast-tuning work).
+
+Per (cell, backend), multiple measurements (repeat runs, several payloads
+landing in one size bucket) reduce by median; the cell's backend is the
+argmin of those medians, ties breaking toward the earlier entry in
+``CANDIDATES[collective]`` exactly like the analytic builder, so refresh
+is deterministic given a measurement store.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.topology import CANDIDATES
+from repro.topology.table import (DecisionTable, load_table,
+                                  with_measured_cells)
+from repro.tuner.store import (Measurement, MeasurementSet,
+                               load_all_measurements)
+
+#: a measured decision: (collective, p, size-bucket index) -> backend
+Cells = Dict[Tuple[str, int, int], str]
+
+
+def _median(xs: List[float]) -> float:
+    ys = sorted(xs)
+    mid = len(ys) // 2
+    if len(ys) % 2:
+        return ys[mid]
+    return 0.5 * (ys[mid - 1] + ys[mid])
+
+
+def measured_cells(base: DecisionTable,
+                   measurements: Iterable[Measurement]) -> Cells:
+    """Map raw measurements onto ``base``'s grid; keep fully-covered cells.
+
+    Measurements for unknown collectives/backends (a store written by a
+    newer probe) or off-grid rank counts are ignored rather than snapped:
+    a measured decision must describe exactly the cell it claims.
+    """
+    times: Dict[Tuple[str, int, int, str], List[float]] = {}
+    for m in measurements:
+        cands = CANDIDATES.get(m.collective)
+        if cands is None or m.backend not in cands or m.p not in base.ps:
+            continue
+        bucket = base.bucket_of(m.nbytes)
+        times.setdefault((m.collective, m.p, bucket, m.backend),
+                         []).append(m.time_s)
+
+    cells: Cells = {}
+    covered = {(c, p, b) for (c, p, b, _) in times}
+    for coll, p, bucket in sorted(covered):
+        cands = CANDIDATES[coll]
+        medians = {}
+        for backend in cands:
+            ts = times.get((coll, p, bucket, backend))
+            if not ts:
+                break  # partial coverage: stay analytic
+            medians[backend] = _median(ts)
+        else:
+            cells[(coll, p, bucket)] = min(
+                cands, key=lambda b: medians[b])  # tie -> candidate order
+    return cells
+
+
+def refresh_table(topology: str,
+                  measurements: Iterable[Measurement],
+                  base: Optional[DecisionTable] = None) -> DecisionTable:
+    """Measured table for ``topology``: analytic base + measured cells.
+
+    The result is a complete table (every unmeasured cell blends back to
+    the analytic prediction) whose ``provenance`` map says exactly which
+    cells the measurements decided — ready to be saved to
+    ``topology.measured_table_path`` and merged at load time by
+    ``tuning="measured"``.
+    """
+    if base is None:
+        base = load_table(topology)
+    return with_measured_cells(base, measured_cells(base, measurements))
+
+
+def refresh_from_store(topology: str,
+                       store_dir: Optional[str] = None,
+                       device_kind: Optional[str] = None,
+                       base: Optional[DecisionTable] = None
+                       ) -> Tuple[DecisionTable, List[MeasurementSet]]:
+    """``refresh_table`` over every cached measurement set for a topology.
+
+    Returns (table, sets used) so callers can report provenance.
+    """
+    sets = load_all_measurements(topology=topology, dir=store_dir,
+                                 device_kind=device_kind)
+    flat = [m for ms in sets for m in ms.measurements]
+    return refresh_table(topology, flat, base=base), sets

@@ -1,0 +1,149 @@
+"""On-disk measurement cache for the empirical autotuner.
+
+One JSON file per (device_kind, topology, p) — the key under which
+``refresh`` rebuilds decision-table cells — with provenance metadata
+(library versions, grid name, caller-supplied timestamp) so a measured
+table can always be traced back to the run that produced it.
+
+Layout (``REPRO_MEASURE_DIR`` overrides, default
+``~/.cache/repro-bine/measurements``)::
+
+    <dir>/<device_kind>__<topology>__p<p>.json
+
+File format::
+
+    {
+      "format": 1,
+      "device_kind": "cpu", "topology": "tpu_multipod", "p": 4,
+      "provenance": {"grid": "tiny", "timestamp": null, "jax": "0.4.37",
+                     "platform": "cpu"},
+      "measurements": [
+        {"collective": "allreduce", "backend": "bine", "p": 4,
+         "nbytes": 65536, "time_s": 1.2e-4, "reps": 5}, ...
+      ]
+    }
+
+Timestamps are caller-supplied strings recorded verbatim (the repo-wide
+convention from ``benchmarks/run.py``: tools never invent their own
+clock, so reruns stay diffable).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+_FORMAT = 1
+
+
+@dataclass(frozen=True)
+class Measurement:
+    """One timed collective invocation (trimmed-median over reps)."""
+    collective: str
+    backend: str
+    p: int
+    nbytes: int        # FULL-vector payload, the decision-table convention
+    time_s: float
+    reps: int = 0
+
+
+@dataclass
+class MeasurementSet:
+    """All measurements of one probe run at one (device_kind, topology, p)."""
+    device_kind: str
+    topology: str
+    p: int
+    provenance: Dict[str, Optional[str]] = field(default_factory=dict)
+    measurements: List[Measurement] = field(default_factory=list)
+
+    def key(self) -> str:
+        return f"{_slug(self.device_kind)}__{_slug(self.topology)}__p{self.p}"
+
+    def to_json_dict(self) -> dict:
+        return {
+            "format": _FORMAT,
+            "device_kind": self.device_kind,
+            "topology": self.topology,
+            "p": self.p,
+            "provenance": dict(self.provenance),
+            "measurements": [asdict(m) for m in self.measurements],
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "MeasurementSet":
+        if d.get("format") != _FORMAT:
+            raise ValueError(
+                f"unsupported measurement format {d.get('format')!r}")
+        return cls(
+            device_kind=d["device_kind"],
+            topology=d["topology"],
+            p=int(d["p"]),
+            provenance=dict(d.get("provenance", {})),
+            measurements=[Measurement(
+                collective=m["collective"], backend=m["backend"],
+                p=int(m["p"]), nbytes=int(m["nbytes"]),
+                time_s=float(m["time_s"]), reps=int(m.get("reps", 0)))
+                for m in d["measurements"]],
+        )
+
+
+def _slug(s: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "-", s).strip("-") or "unknown"
+
+
+def store_dir() -> str:
+    env = os.environ.get("REPRO_MEASURE_DIR")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-bine",
+                        "measurements")
+
+
+def measurement_path(ms: MeasurementSet, dir: Optional[str] = None) -> str:
+    return os.path.join(dir or store_dir(), ms.key() + ".json")
+
+
+def save_measurements(ms: MeasurementSet, dir: Optional[str] = None) -> str:
+    """Write (atomically) one measurement set; returns the path."""
+    path = measurement_path(ms, dir)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(ms.to_json_dict(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def load_measurements(path: str) -> MeasurementSet:
+    with open(path) as f:
+        return MeasurementSet.from_json_dict(json.load(f))
+
+
+def load_all_measurements(topology: Optional[str] = None,
+                          dir: Optional[str] = None,
+                          device_kind: Optional[str] = None
+                          ) -> List[MeasurementSet]:
+    """Every cached set (optionally filtered), sorted by file name so the
+    refresh input order — and therefore the rebuilt table — is
+    deterministic."""
+    d = dir or store_dir()
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for fname in sorted(os.listdir(d)):
+        if not fname.endswith(".json"):
+            continue
+        try:
+            ms = load_measurements(os.path.join(d, fname))
+        except (ValueError, KeyError, json.JSONDecodeError):
+            continue  # foreign/corrupt file: never poison a refresh
+        if topology is not None and ms.topology != topology:
+            continue
+        if device_kind is not None and ms.device_kind != device_kind:
+            continue
+        out.append(ms)
+    return out

@@ -1,0 +1,132 @@
+"""Wire-codec coverage: bf16/int8 round trips + error-feedback residuals.
+
+Replaces the old tests/train/test_compression.py (its int8-roundtrip and
+EF-bias checks are subsumed below): this file pins the codec contracts —
+per-chunk int8 error bounds for BOTH f32 and bf16 inputs (the bf16 case
+is the one that flushed the compute-in-input-dtype bug: a bf16 scale and
+a bf16 division overshoot the int8 bound by ~1.5x), dtype preservation
+through the wire, and exact residual bookkeeping.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.collectives.compression import (compress_bf16, decompress_bf16,
+                                           dequantize_int8, ef_compress,
+                                           quantize_int8)
+
+
+def _chunk_scales(x32: np.ndarray, chunk: int) -> np.ndarray:
+    m = x32.reshape(-1, chunk)
+    s = np.abs(m).max(axis=1, keepdims=True) / 127.0
+    return np.where(s == 0, 1.0, s)
+
+
+def test_bf16_roundtrip_tolerance_and_dtype():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2048).astype(np.float32) * 5)
+    wire = compress_bf16(x)
+    assert wire.dtype == jnp.bfloat16
+    y = decompress_bf16(wire, x.dtype)
+    assert y.dtype == x.dtype
+    # bf16 keeps 8 mantissa bits: relative error <= 2^-9 half-ulp
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert (err <= np.abs(np.asarray(x)) * 2.0 ** -8 + 1e-30).all()
+
+
+def test_int8_roundtrip_error_bound_f32():
+    """|decoded - x| <= scale/2 per element, chunk-exact."""
+    rng = np.random.RandomState(1)
+    chunk = 128
+    x32 = (rng.randn(4096) * 3).astype(np.float32)
+    q, s = quantize_int8(jnp.asarray(x32), chunk=chunk)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    y = np.asarray(dequantize_int8(q, s, x32.size, dtype=jnp.float32))
+    bound = _chunk_scales(x32, chunk) / 2.0
+    err = np.abs(y.reshape(-1, chunk) - x32.reshape(-1, chunk))
+    assert (err <= bound * (1 + 1e-5)).all()
+
+
+def test_int8_roundtrip_error_bound_bf16_input():
+    """The quantization math must run in f32 even for bf16 inputs.
+
+    The bound is checked against the values the bf16 array actually
+    holds; with scale/round computed in bf16 this overshoots (~1.5x)."""
+    rng = np.random.RandomState(2)
+    chunk = 128
+    x16 = jnp.asarray((rng.randn(4096) * 3).astype(np.float32)
+                      ).astype(jnp.bfloat16)
+    held = np.asarray(x16, dtype=np.float32)
+    q, s = quantize_int8(x16, chunk=chunk)
+    y = np.asarray(dequantize_int8(q, s, held.size, dtype=jnp.float32))
+    bound = _chunk_scales(held, chunk) / 2.0
+    err = np.abs(y.reshape(-1, chunk) - held.reshape(-1, chunk))
+    assert (err <= bound * (1 + 1e-3)).all()
+
+
+def test_int8_ragged_and_zero_chunks():
+    """Padding chunks and all-zero chunks round-trip exactly."""
+    x = jnp.asarray(np.concatenate([
+        np.zeros(300, np.float32),                      # zero chunks
+        np.linspace(-1, 1, 133).astype(np.float32)]))   # ragged tail
+    q, s = quantize_int8(x, chunk=100)
+    y = dequantize_int8(q, s, x.size, dtype=x.dtype)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert np.abs(np.asarray(y[:300])).max() == 0.0
+    assert np.abs(np.asarray(y) - np.asarray(x)).max() <= 2.0 / 127.0
+
+
+def test_dequantize_dtype_contract():
+    """Explicit dtype comes back verbatim; omitted stays f32 accumulation."""
+    x = jnp.asarray(np.ones(64, np.float32))
+    q, s = quantize_int8(x, chunk=64)
+    assert dequantize_int8(q, s, 64).dtype == jnp.float32
+    assert dequantize_int8(q, s, 64, dtype=jnp.bfloat16).dtype == jnp.bfloat16
+
+
+def test_ef_preserves_dtype_bf16_params():
+    """ef_compress on bf16 grads keeps wire value AND residual in bf16
+    (the caller's param dtype — no silent f32 promotion downstream)."""
+    rng = np.random.RandomState(3)
+    g = jnp.asarray(rng.randn(512).astype(np.float32)).astype(jnp.bfloat16)
+    r = jnp.zeros_like(g)
+    for codec in ("none", "bf16", "int8"):
+        sent, r2 = ef_compress(g, r, codec=codec, chunk=64)
+        assert sent.dtype == g.dtype, codec
+        assert r2.dtype == g.dtype, codec
+
+
+def test_ef_residual_identity_and_accumulation():
+    """Per step: corrected == sent + residual' exactly (f32); over many
+    steps the applied sum tracks the true gradient sum (bias-free EF)."""
+    rng = np.random.RandomState(4)
+    residual = jnp.zeros(256, jnp.float32)
+    true_sum = np.zeros(256, np.float64)
+    applied = np.zeros(256, np.float64)
+    for _ in range(40):
+        g = jnp.asarray(rng.randn(256).astype(np.float32))
+        corrected = np.asarray(g + residual, np.float64)
+        sent, residual = ef_compress(g, residual, codec="int8", chunk=64)
+        # the EF invariant, exactly: residual' = corrected - sent
+        np.testing.assert_array_equal(
+            np.asarray(sent, np.float32) + np.asarray(residual, np.float32),
+            corrected.astype(np.float32))
+        true_sum += np.asarray(g, np.float64)
+        applied += np.asarray(sent, np.float64)
+    # applied + residual == true sum up to f32 rounding of the updates
+    np.testing.assert_allclose(applied + np.asarray(residual), true_sum,
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_ef_bf16_codec_removes_bias():
+    rng = np.random.RandomState(5)
+    residual = jnp.zeros(128, jnp.float32)
+    true_sum = np.zeros(128, np.float64)
+    applied = np.zeros(128, np.float64)
+    for _ in range(60):
+        g = jnp.asarray((rng.randn(128) * 1e-2).astype(np.float32))
+        sent, residual = ef_compress(g, residual, codec="bf16")
+        true_sum += np.asarray(g, np.float64)
+        applied += np.asarray(sent, np.float64)
+    np.testing.assert_allclose(applied + np.asarray(residual), true_sum,
+                               rtol=1e-4, atol=1e-6)

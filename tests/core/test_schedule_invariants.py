@@ -1,0 +1,94 @@
+"""Property tests: negabinary encode/decode + per-step schedule peers.
+
+Via the optional-hypothesis shim (tests/core/_hyp.py): with hypothesis
+installed these fuzz the whole registry; without it the ``@given`` tests
+skip and the exhaustive worked checks below still run, so the invariants
+stay pinned in minimal environments too.
+
+The peer invariant is what makes every schedule expressible as one
+``lax.ppermute`` per step (``collectives.shmap``): within a step no rank
+sends to itself, no rank sends twice, and no rank receives twice — the
+step's (src, dst) pairs form a partial permutation.
+"""
+
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import negabinary as nb
+from repro.core.schedules import COLLECTIVES, get_schedule, list_algos
+
+PS = (4, 8, 16)
+
+#: every (collective, algo) pair in the registry, enumerated at import
+#: time so pairs added later are covered automatically
+PAIRS = tuple((coll, algo) for coll in COLLECTIVES
+              for algo in list_algos(coll))
+
+ROOTED = ("broadcast", "reduce", "gather", "scatter")
+
+
+def _check_step_peers(coll, algo, p, root):
+    sched = get_schedule(coll, algo, p, root)
+    assert sched, (coll, algo, p)
+    for i, step in enumerate(sched):
+        srcs = [m.src for m in step]
+        dsts = [m.dst for m in step]
+        where = (coll, algo, p, root, i)
+        assert all(0 <= s < p for s in srcs + dsts), where
+        assert not any(m.src == m.dst for m in step), \
+            ("self-send", *where)
+        assert len(set(srcs)) == len(srcs), ("duplicate sender", *where)
+        assert len(set(dsts)) == len(dsts), ("duplicate receiver", *where)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive worked checks (always run, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("coll,algo", PAIRS)
+@pytest.mark.parametrize("p", PS)
+def test_step_peers_partial_permutation(coll, algo, p):
+    _check_step_peers(coll, algo, p, root=0)
+
+
+@pytest.mark.parametrize("p", PS)
+def test_negabinary_rank_roundtrip_exhaustive(p):
+    for r in range(p):
+        lab = nb.rank2nb(r, p)
+        assert 0 <= lab < p
+        assert nb.nb2rank(lab, p) == r
+    # the labels are a bijection on [0, p)
+    assert sorted(nb.rank2nb(r, p) for r in range(p)) == list(range(p))
+
+
+@pytest.mark.parametrize("p", PS)
+def test_v_table_inverse(p):
+    """v_inverse really inverts the Sec. 4.3.1 block permutation."""
+    v = nb.v_table(p)
+    vi = nb.v_inverse(p)
+    assert sorted(int(x) for x in v) == list(range(p))
+    for r in range(p):
+        assert int(vi[int(v[r])]) == r
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (skip cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60)
+@given(st.sampled_from(PAIRS), st.sampled_from(PS), st.data())
+def test_step_peers_property(pair, p, data):
+    coll, algo = pair
+    root = data.draw(st.integers(0, p - 1)) if coll in ROOTED else 0
+    _check_step_peers(coll, algo, p, root)
+
+
+@given(st.integers(min_value=-(2 ** 50), max_value=2 ** 50))
+def test_negabinary_encode_decode_roundtrip(n):
+    assert nb.neg_to_int(nb.int_to_neg(n)) == n
+
+
+@given(st.sampled_from(PS), st.data())
+def test_negabinary_rank_roundtrip_property(p, data):
+    r = data.draw(st.integers(0, p - 1))
+    assert nb.nb2rank(nb.rank2nb(r, p), p) == r

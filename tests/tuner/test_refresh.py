@@ -1,0 +1,264 @@
+"""Measured tables: store round trips, refresh semantics, merge + load.
+
+Acceptance contract (b): a measured table produced by ``tuner.refresh``
+from a (synthetic) probe run round-trips through ``topology/table.py``,
+overrides the analytic choice where measurements disagree, and falls
+back to analytic for unmeasured cells.  Plus the format-1 backward
+compat and the deduplicated stale-table warning.
+"""
+
+import glob
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.topology import CANDIDATES, build_table
+from repro.topology import table as tbl
+from repro.tuner.refresh import measured_cells, refresh_table
+from repro.tuner.store import (Measurement, MeasurementSet,
+                               load_all_measurements, load_measurements,
+                               save_measurements)
+
+PS = (4, 8)
+SIZES = (1 << 14, 1 << 20, 1 << 24)
+
+
+@pytest.fixture()
+def base():
+    return build_table("tpu_multipod", ps=PS, size_buckets=SIZES)
+
+
+def _full_cell(coll, p, nbytes, fastest, slow=1e-3, fast=1e-4):
+    """Measurements covering every candidate; ``fastest`` wins."""
+    return [Measurement(coll, b, p, nbytes, fast if b == fastest else slow,
+                        reps=5)
+            for b in CANDIDATES[coll]]
+
+
+# ---------------------------------------------------------------------------
+# Store
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_with_provenance(tmp_path):
+    ms = MeasurementSet(
+        device_kind="TPU v5e", topology="tpu_multipod", p=8,
+        provenance={"grid": "tiny", "timestamp": "2026-07-31", "jax": "x"},
+        measurements=_full_cell("allreduce", 8, 1 << 20, "ring"))
+    path = save_measurements(ms, str(tmp_path))
+    assert os.path.basename(path) == "TPU-v5e__tpu_multipod__p8.json"
+    back = load_measurements(path)
+    assert back.measurements == ms.measurements
+    assert back.provenance["timestamp"] == "2026-07-31"
+    # filtered listing
+    assert load_all_measurements(topology="tpu_multipod",
+                                 dir=str(tmp_path))[0].p == 8
+    assert load_all_measurements(topology="torus", dir=str(tmp_path)) == []
+    assert load_all_measurements(dir=str(tmp_path / "nope")) == []
+
+
+def test_store_skips_corrupt_files(tmp_path):
+    (tmp_path / "junk.json").write_text("{not json")
+    (tmp_path / "foreign.json").write_text(json.dumps({"format": 99}))
+    assert load_all_measurements(dir=str(tmp_path)) == []
+
+
+# ---------------------------------------------------------------------------
+# Refresh
+# ---------------------------------------------------------------------------
+
+def test_refresh_overrides_and_falls_back(base, tmp_path):
+    # force ring to win a cell the analytic table gives to bine
+    target = ("reduce_scatter", 4, 1 << 20)
+    assert base.lookup(*target) == "bine"
+    ms = _full_cell(*target, fastest="ring")
+    table = refresh_table("tpu_multipod", ms, base=base)
+
+    # override where measurements disagree
+    assert table.lookup(*target) == "ring"
+    assert table.provenance_of(*target) == "measured"
+    # fallback to analytic for every unmeasured cell
+    assert table.provenance_of("reduce_scatter", 4, 1 << 14) == "analytic"
+    assert table.lookup("reduce_scatter", 8, 1 << 20) == \
+        base.lookup("reduce_scatter", 8, 1 << 20)
+    assert table.lookup("allgather", 4, 1 << 20) == \
+        base.lookup("allgather", 4, 1 << 20)
+    assert table.measured_cell_count() == 1
+    # grid metadata is inherited from the base
+    assert table.ps == base.ps and table.size_buckets == base.size_buckets
+    assert table.bucket_bytes == base.bucket_bytes
+
+    # round trip through the (de)serializer
+    path = os.path.join(str(tmp_path), "m.json")
+    table.save(path)
+    back = tbl.DecisionTable.load(path)
+    assert back == table
+    assert json.load(open(path))["format"] == 2
+
+
+def test_partial_coverage_stays_analytic(base):
+    """A cell measured for only SOME candidates keeps the analytic pick —
+    an argmin over a subset would bias toward whatever got probed."""
+    target = ("allgather", 4, 1 << 20)
+    ms = [Measurement("allgather", b, 4, 1 << 20, 1e-5, 5)
+          for b in CANDIDATES["allgather"][:2]]      # missing two backends
+    table = refresh_table("tpu_multipod", ms, base=base)
+    assert table.provenance_of(*target) == "analytic"
+    assert table.lookup(*target) == base.lookup(*target)
+    assert table.measured_cell_count() == 0
+
+
+def test_median_and_tie_rules(base):
+    coll, p, nbytes = "allreduce", 4, 1 << 24
+    cands = CANDIDATES[coll]
+    ms = []
+    for b in cands:
+        # identical medians across candidates -> earlier candidate wins,
+        # matching the analytic builder's determinism
+        ms.extend(Measurement(coll, b, p, nbytes, t, 1)
+                  for t in (2e-4, 1e-4, 9e9))  # median 2e-4, outlier-proof
+    cells = measured_cells(base, ms)
+    assert cells[(coll, p, base.bucket_of(nbytes))] == cands[0]
+
+
+def test_offgrid_measurements_ignored(base):
+    ms = (_full_cell("allreduce", 16, 1 << 20, "ring")      # p off grid
+          + [Measurement("allreduce", "nonsense", 4, 1 << 20, 1e-6, 1)]
+          + [Measurement("fft", "bine", 4, 1 << 20, 1e-6, 1)])
+    assert measured_cells(base, ms) == {}
+
+
+def test_measured_cells_off_grid_raise(base):
+    with pytest.raises(KeyError):
+        tbl.with_measured_cells(base, {("allreduce", 64, 0): "ring"})
+    with pytest.raises(KeyError):
+        tbl.with_measured_cells(base, {("allreduce", 4, 99): "ring"})
+
+
+# ---------------------------------------------------------------------------
+# Merge + tuning="measured" load path
+# ---------------------------------------------------------------------------
+
+def test_merge_measured_requires_matching_grid(base):
+    other = build_table("tpu_multipod", ps=(4,), size_buckets=SIZES)
+    with pytest.raises(ValueError):
+        tbl.merge_measured(base, other)
+
+
+def test_load_table_measured_merges(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_MEASURED_TABLE_DIR", str(tmp_path))
+    full_base = tbl.load_table("tpu_multipod")
+    target = ("reduce_scatter", 4, 1 << 20)
+    measured = refresh_table("tpu_multipod",
+                             _full_cell(*target, fastest="ring"),
+                             base=full_base)
+    measured.save(tbl.measured_table_path("tpu_multipod"))
+
+    merged = tbl.load_table("tpu_multipod", tuning="measured")
+    assert merged.lookup(*target) == "ring"
+    assert merged.provenance_of(*target) == "measured"
+    assert merged.provenance_of("allreduce", 8, 1 << 24) == "analytic"
+    # analytic load path is untouched
+    assert tbl.load_table("tpu_multipod").lookup(*target) == \
+        full_base.lookup(*target)
+
+
+def test_select_backend_tuning(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_MEASURED_TABLE_DIR", str(tmp_path))
+    full_base = tbl.load_table("tpu_multipod")
+    target = ("reduce_scatter", 4, 1 << 20)
+    refresh_table("tpu_multipod", _full_cell(*target, fastest="ring"),
+                  base=full_base).save(
+        tbl.measured_table_path("tpu_multipod"))
+    # fresh process-level cache so the env override is honored
+    monkeypatch.setattr(tbl, "_LOADED", {})
+    assert tbl.select_backend(*target, "tpu_multipod",
+                              tuning="measured") == "ring"
+    assert tbl.select_backend(*target, "tpu_multipod") == \
+        full_base.lookup(*target)
+    assert tbl.decision_provenance(*target, "tpu_multipod",
+                                   tuning="measured") == "measured"
+    assert tbl.decision_provenance(*target, "tpu_multipod") == "analytic"
+    with pytest.raises(ValueError):
+        tbl.load_table("tpu_multipod", tuning="nonsense")
+
+
+def test_corrupt_measured_table_falls_back(tmp_path, monkeypatch):
+    """A measured file that parses as JSON but is structurally broken
+    (truncated, hand-edited) must warn-and-fall-back, not crash
+    auto-dispatch at trace time."""
+    monkeypatch.setenv("REPRO_MEASURED_TABLE_DIR", str(tmp_path))
+    monkeypatch.setattr(tbl, "_LOADED", {})
+    monkeypatch.setattr(tbl, "_WARNED", set())
+    with open(tbl.measured_table_path("leonardo"), "w") as f:
+        f.write(json.dumps({"format": 2, "topology": "leonardo"}))  # no grid
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        t = tbl.load_table("leonardo", tuning="measured")
+        assert tbl.select_backend("allreduce", 8, 1 << 20, "leonardo",
+                                  tuning="measured")
+    assert t == tbl.load_table("leonardo")
+    assert any("unusable" in str(x.message) for x in w)
+
+
+def test_missing_measured_table_warns_once_and_falls_back(tmp_path,
+                                                          monkeypatch):
+    monkeypatch.setenv("REPRO_MEASURED_TABLE_DIR",
+                       str(tmp_path / "empty"))
+    monkeypatch.setattr(tbl, "_LOADED", {})
+    monkeypatch.setattr(tbl, "_WARNED", set())
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        t1 = tbl.load_table("lumi", tuning="measured")
+        t2 = tbl.load_table("lumi", tuning="measured")
+    assert t1 == t2 == tbl.load_table("lumi")
+    msgs = [str(x.message) for x in w if "measured table" in str(x.message)]
+    assert len(msgs) == 1      # deduplicated per topology
+
+
+# ---------------------------------------------------------------------------
+# Backward compat + stale-table warning dedup (satellites)
+# ---------------------------------------------------------------------------
+
+def test_format1_tables_parse():
+    """Every packaged analytic table predates the provenance field and
+    must keep parsing as all-analytic under the format-2 loader."""
+    packaged = glob.glob(os.path.join(tbl._PACKAGED_DIR, "*.json"))
+    assert packaged
+    for path in packaged:
+        assert json.load(open(path))["format"] == 1
+        t = tbl.DecisionTable.load(path)
+        assert not t.provenance
+        assert t.provenance_of("allreduce", 8, 1 << 20) == "analytic"
+        assert t.measured_cell_count() == 0
+
+
+def test_unknown_format_rejected():
+    with pytest.raises(ValueError):
+        tbl.DecisionTable.from_json_dict({"format": 3})
+
+
+def test_stale_bucket_bytes_warning_deduplicated(monkeypatch):
+    """A 40-bucket step performs ~40 select_bucket_bytes-adjacent lookups;
+    the stale-table fallback must log once per (topology, p), not per
+    lookup."""
+    stale = build_table("tpu_multipod", ps=(4, 8), size_buckets=SIZES)
+    stale = tbl.DecisionTable(
+        topology=stale.topology,
+        small_cutoff_bytes=stale.small_cutoff_bytes, ps=stale.ps,
+        size_buckets=stale.size_buckets, entries=stale.entries,
+        bucket_bytes={})        # pre-bucketing serialization: no entry
+    monkeypatch.setattr(tbl, "_LOADED",
+                        {("tpu_multipod", "analytic"): stale})
+    monkeypatch.setattr(tbl, "_WARNED", set())
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        vals = [tbl.select_bucket_bytes(4, "tpu_multipod")
+                for _ in range(40)]
+        vals8 = [tbl.select_bucket_bytes(8, "tpu_multipod")
+                 for _ in range(40)]
+    assert len(set(vals)) == 1 and len(set(vals8)) == 1
+    stale_msgs = [str(x.message) for x in w if "bucket_bytes" in
+                  str(x.message)]
+    assert len(stale_msgs) == 2     # one per (topology, p), not 80
