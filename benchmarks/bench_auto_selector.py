@@ -19,8 +19,8 @@ import sys
 
 from common import emit  # noqa: E402  (benchmarks/ is the cwd convention)
 
-from repro.topology import (CANDIDATES, PRESETS, get_topology, load_table,
-                            predict_time)
+from repro.topology import (CANDIDATES, PRESETS, candidates_for,
+                            get_topology, load_table, predict_time)
 
 P_SWEEP = (4, 8, 16, 32, 64, 128)
 SIZE_SWEEP = (1 << 10, 1 << 14, 1 << 18, 1 << 22, 1 << 26)
@@ -35,7 +35,9 @@ def sweep(topo_name: str, collectives=None):
     rows = []
     violations = []
     for coll in (collectives or sorted(CANDIDATES)):
-        cands = CANDIDATES[coll]
+        # only backends that are pin-able on this preset (no bine_hier on
+        # the torus — nothing to derive tiers from, api dispatch raises)
+        cands = candidates_for(coll, topo_name)
         for p in P_SWEEP:
             topo = get_topology(topo_name, p)
             for nbytes in SIZE_SWEEP:

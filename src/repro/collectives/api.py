@@ -6,7 +6,13 @@ Backends
   bine         : the paper's algorithms (this work).
   recdoub      : classical binomial/recursive-doubling butterflies.
   ring         : bandwidth-optimal ring (latency-bound at scale).
-  bine_hier    : hierarchical (Sec. 6.2): bine RS/AG intra-pod + bine across.
+  bine_hier    : hierarchical (Sec. 6.2).  With ``outer_axis`` set: bine
+                 RS/AG over the inner mesh axis + bine across the outer.
+                 On a single axis: the tier stack is derived from the
+                 ``cfg.topology`` preset (``topology.tier_split``) and the
+                 composed schedule IR (``core.schedules.compose``) runs
+                 through ``shmap.run_schedule`` — arbitrary depth, no
+                 hard-coded group size.
   pallas_fused : the same schedules executed as fused Pallas step kernels
                  (``repro.kernels.collectives``): one ppermute per step on
                  the wire, one kernel per step locally (keep-slice +
@@ -115,16 +121,63 @@ def allreduce_uses_small(nbytes: int, cfg: CollectiveConfig) -> bool:
     return nbytes <= cfg.small_cutoff_bytes
 
 
+def _hier_tiers(cfg: CollectiveConfig, p: int) -> Tuple[int, ...]:
+    """Tier stack for single-axis ``bine_hier``: derived from the
+    ``cfg.topology`` preset's physical hierarchy (ranks/node, nodes/group)
+    via ``topology.tier_split`` — no hard-coded group size.
+
+    Raises ``ValueError`` naming the preset when no hierarchy can be
+    derived (torus / unknown preset) or when the composed schedule cannot
+    run as static ppermute steps (non-power-of-two axis size)."""
+    from repro.topology import tier_split
+    try:
+        tiers = tier_split(cfg.topology, p)
+    except (KeyError, ValueError) as e:
+        raise ValueError(
+            "backend='bine_hier' on a single mesh axis derives its tier "
+            f"stack from the topology preset {cfg.topology!r}: {e}") from e
+    if p & (p - 1):
+        raise ValueError(
+            f"backend='bine_hier' needs a power-of-two axis size to execute "
+            f"the composed schedule as static ppermute steps; preset "
+            f"{cfg.topology!r} derived tiers {tiers} from p={p}.  Use a "
+            "two-axis mesh (inner_axis/outer_axis) or a flat backend.")
+    return tiers
+
+
+def _composed(collective: str, tiers: Tuple[int, ...]):
+    from repro.core.schedules import compose
+    return compose(collective, tiers, "bine")
+
+
+def _check_hier_divisible(n: int, p: int, cfg: CollectiveConfig,
+                          tiers: Tuple[int, ...]) -> None:
+    if n % p:
+        raise ValueError(
+            f"bine_hier needs the vector length divisible by the total "
+            f"rank count p={p} (preset {cfg.topology!r}, tiers {tiers}); "
+            f"got length {n}")
+
+
 def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "allreduce", x, axis)
     b = cfg.backend
     if b == "xla":
         return lax.psum(x, axis)
     if b == "bine_hier":
-        inner = cfg.inner_axis if cfg.inner_axis is not None else axis
-        outer = cfg.outer_axis
-        assert outer is not None, "bine_hier needs outer_axis"
-        return shmap.allreduce_hierarchical(x, inner, outer, "bine")
+        if cfg.outer_axis is not None:
+            inner = cfg.inner_axis if cfg.inner_axis is not None else axis
+            return shmap.allreduce_hierarchical(x, inner, cfg.outer_axis,
+                                                "bine")
+        # single axis: hierarchy from the topology preset's tier stack
+        p = shmap.axis_size(axis)
+        tiers = _hier_tiers(cfg, p)
+        if len(tiers) == 1:
+            # degenerate split (all ranks inside one node): flat bine
+            if allreduce_uses_small(_nbytes(x), cfg):
+                return shmap.allreduce_small(x, axis, "bine")
+            return shmap.allreduce_butterfly(x, axis, "bine")
+        return shmap.allreduce_sched(x, axis, _composed("allreduce", tiers))
     if b == "ring":
         return shmap.allreduce_ring(x, axis)
     if b == PALLAS_FUSED_BACKEND:
@@ -148,7 +201,8 @@ def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
     over the fast ``inner_axis`` first (the big messages stay on the fast
     links), then over ``outer_axis`` on the 1/p_in shard.  Block ownership
     is inner-major — the inverse of this function's ``bine_hier``
-    allgather, which gathers outer first."""
+    allgather, which gathers outer first.  (The single-axis composed
+    path instead matches the flat convention: rank r ends with block r.)"""
     cfg = _resolve(cfg, "reduce_scatter", x, axis)
     b = cfg.backend
     if b == "xla":
@@ -159,11 +213,17 @@ def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
     if b == PALLAS_FUSED_BACKEND:
         return _fused_ops().reduce_scatter(x, axis, cfg.fused_algo)
     if b == "bine_hier":
-        inner = cfg.inner_axis if cfg.inner_axis is not None else axis
-        outer = cfg.outer_axis
-        assert outer is not None, "bine_hier needs outer_axis"
-        v = shmap.reduce_scatter(x.reshape(-1), inner, "bine")
-        return shmap.reduce_scatter(v, outer, "bine")
+        if cfg.outer_axis is not None:
+            inner = cfg.inner_axis if cfg.inner_axis is not None else axis
+            v = shmap.reduce_scatter(x.reshape(-1), inner, "bine")
+            return shmap.reduce_scatter(v, cfg.outer_axis, "bine")
+        p = shmap.axis_size(axis)
+        tiers = _hier_tiers(cfg, p)
+        _check_hier_divisible(x.reshape(-1).shape[0], p, cfg, tiers)
+        if len(tiers) == 1:
+            return shmap.reduce_scatter(x, axis, "bine")
+        return shmap.reduce_scatter_sched(x, axis,
+                                          _composed("reduce_scatter", tiers))
     if b == "ring":
         return shmap.reduce_scatter(x, axis, "ring")
     return shmap.reduce_scatter(x, axis, "bine" if b.startswith("bine") else b)
@@ -179,11 +239,15 @@ def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
     if b == PALLAS_FUSED_BACKEND:
         return _fused_ops().allgather(x, axis, cfg.fused_algo)
     if b == "bine_hier":
-        inner = cfg.inner_axis if cfg.inner_axis is not None else axis
-        outer = cfg.outer_axis
-        assert outer is not None, "bine_hier needs outer_axis"
-        v = shmap.allgather(x.reshape(-1), outer, "bine")
-        return shmap.allgather(v, inner, "bine")
+        if cfg.outer_axis is not None:
+            inner = cfg.inner_axis if cfg.inner_axis is not None else axis
+            v = shmap.allgather(x.reshape(-1), cfg.outer_axis, "bine")
+            return shmap.allgather(v, inner, "bine")
+        p = shmap.axis_size(axis)
+        tiers = _hier_tiers(cfg, p)
+        if len(tiers) == 1:
+            return shmap.allgather(x, axis, "bine")
+        return shmap.allgather_sched(x, axis, _composed("allgather", tiers))
     if b == "ring":
         return shmap.allgather(x, axis, "ring")
     return shmap.allgather(x, axis, "bine" if b.startswith("bine") else b)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import math
 from contextlib import contextmanager
-from functools import partial
+from functools import lru_cache, partial
 from typing import Sequence, Tuple, Union
 
 import jax
@@ -28,6 +28,7 @@ from jax import lax
 
 from repro import compat
 from repro.core import tables as tb
+from repro.core.schedules import BLOCK_ALL, KIND_REDUCE, Schedule
 
 Axis = Union[str, Tuple[str, ...]]
 
@@ -466,21 +467,115 @@ def all_to_all(x, axis: Axis, algo: str = "bine"):
 
 
 # ---------------------------------------------------------------------------
+# Schedule-IR executor: one ppermute per step, static block-id tables
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _schedule_tables(sched: Schedule):
+    """Static per-step dispatch tables for ``run_schedule``.
+
+    Requires full-permutation steps (every rank sends once and receives
+    once, all messages the same block count) — true of every pow2
+    butterfly/ring/composed schedule; adapter (non-pow2) schedules are
+    not executable here.  Packing order is the message's ``blocks``
+    tuple, so sender and receiver tables agree by construction.
+    """
+    p = sched.p
+    out = []
+    for step, kind in zip(sched.steps, sched.kinds):
+        if len(step) != p:
+            raise ValueError(
+                f"run_schedule needs full-permutation steps; got "
+                f"{len(step)} messages for p={p}")
+        k = len(step[0].blocks)
+        send = np.zeros((p, k), np.int32)
+        recv = np.zeros((p, k), np.int32)
+        perm = []
+        for m in step:
+            assert len(m.blocks) == k, "uneven block counts within a step"
+            assert BLOCK_ALL not in m.blocks
+            send[m.src] = m.blocks
+            recv[m.dst] = m.blocks
+            perm.append((int(m.src), int(m.dst)))
+        out.append((kind, tuple(perm), send, recv))
+    return tuple(out)
+
+
+def run_schedule(v, axis: Axis, sched: Schedule):
+    """Execute a block-schedule IR value on a ``[p, blk]`` buffer.
+
+    Each step gathers the rank's send blocks (static table indexed by
+    ``axis_index``), ships them in one ``lax.ppermute``, and lands them by
+    kind: ``reduce`` accumulates (``.add``), ``copy``/``move`` install
+    (``.set``).  Relinquished blocks simply go stale in the buffer — the
+    IR's kind discipline (checked by the numpy oracle) guarantees they
+    are never re-read, so the caller just slices what the collective
+    defines as live at the end."""
+    idx = axis_index(axis)
+    for kind, perm, send, recv in _schedule_tables(sched):
+        chunk = v[jnp.asarray(send)[idx]]
+        got = lax.ppermute(chunk, axis, perm=list(perm))
+        rids = jnp.asarray(recv)[idx]
+        v = v.at[rids].add(got) if kind == KIND_REDUCE else v.at[rids].set(got)
+    return v
+
+
+def reduce_scatter_sched(x, axis: Axis, sched: Schedule):
+    """Full vector -> own reduced block, via an RS schedule value (e.g.
+    ``core.schedules.compose(\"reduce_scatter\", tiers)``)."""
+    p = sched.p
+    v = x.reshape(-1)
+    assert v.shape[0] % p == 0, (v.shape, p)
+    v = run_schedule(v.reshape(p, -1), axis, sched)
+    return lax.dynamic_index_in_dim(v, axis_index(axis), axis=0,
+                                    keepdims=False)
+
+
+def allgather_sched(x, axis: Axis, sched: Schedule):
+    """Own block -> full vector (rank order), via an AG schedule value."""
+    p = sched.p
+    blk = x.reshape(-1)
+    v = jnp.zeros((p, blk.shape[0]), blk.dtype).at[axis_index(axis)].set(blk)
+    return run_schedule(v, axis, sched).reshape(-1)
+
+
+def allreduce_sched(x, axis: Axis, sched: Schedule):
+    """Full-vector allreduce via a composed RS+AG schedule value."""
+    p = sched.p
+    v, n = _pad_to(x.reshape(-1), p)
+    v = run_schedule(v.reshape(p, -1), axis, sched)
+    return v.reshape(-1)[:n].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
 # Hierarchical allreduce (paper Sec. 6.2) — intra-pod RS/AG + inter-pod AR
 # ---------------------------------------------------------------------------
+
+def allreduce_hier(x, axes: Sequence[Axis], algo: str = "bine"):
+    """Arbitrary-depth hierarchy over mesh axes, innermost (fastest)
+    first: RS down the stack — each level on a 1/p shard of the one
+    above — allreduce at the top, AG back up.  The shard_map twin of
+    ``core.schedules.compose`` over ``tiers = map(axis_size, axes)``;
+    depth 2 is exactly ``allreduce_hierarchical``."""
+    if len(axes) == 1:
+        return allreduce_butterfly(x, axes[0], algo)
+    inner = axes[0]
+    p_in = axis_size(inner)
+    if p_in == 1:
+        return allreduce_hier(x, axes[1:], algo)
+    v = x.reshape(-1)
+    v, n = _pad_to(v, p_in)
+    shard = reduce_scatter(v, inner, algo)
+    shard = allreduce_hier(shard, axes[1:], algo)
+    full = allgather(shard, inner, algo)
+    return full[:n].reshape(x.shape)
+
 
 def allreduce_hierarchical(x, inner_axis: Axis, outer_axis: Axis,
                            algo: str = "bine"):
     """RS within the (fast) inner axis, allreduce across the (slow) outer
     axis on the 1/p_in shard, AG within the inner axis.  Inter-group bytes
     drop from O(n) to n/p_in per rank — the NCCL-style hierarchy the paper
-    evaluates on multi-GPU nodes, mapped to ICI(inner)/DCN(outer)."""
-    p_in = axis_size(inner_axis)
-    if p_in == 1:
-        return allreduce_butterfly(x, outer_axis, algo)
-    v = x.reshape(-1)
-    v, n = _pad_to(v, p_in)
-    shard = reduce_scatter(v, inner_axis, algo)
-    shard = allreduce_butterfly(shard, outer_axis, algo)
-    full = allgather(shard, inner_axis, algo)
-    return full[:n].reshape(x.shape)
+    evaluates on multi-GPU nodes, mapped to ICI(inner)/DCN(outer).  The
+    depth-2 case of ``allreduce_hier``."""
+    return allreduce_hier(x, (inner_axis, outer_axis), algo)

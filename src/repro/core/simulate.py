@@ -16,7 +16,56 @@ from typing import Dict, List
 
 import numpy as np
 
-from .schedules import BLOCK_ALL, Sched, get_schedule
+from .schedules import BLOCK_ALL, Sched, get_schedule, step_kinds
+
+
+def _exec_block_steps(held: List[Dict[int, np.ndarray]], sched: Sched,
+                      kinds) -> None:
+    """Kind-driven block engine (kind semantics: schedules docstring).
+
+    reduce: src relinquishes the blocks; dst must still hold them and
+            accumulates.  move: src relinquishes; dst installs (and must
+            not already hold them).  copy: src keeps; dst installs,
+            values must agree on overlap.
+    """
+    for step, kind in zip(sched, kinds):
+        moves = []
+        for m in step:
+            payload = {}
+            for b in m.blocks:
+                assert b in held[m.src], (
+                    f"{kind}: rank {m.src} sends block {b} it does not hold")
+                payload[b] = held[m.src][b]
+            moves.append((m.src, m.dst, payload))
+        if kind in ("reduce", "move"):
+            for src, _, payload in moves:
+                for b in payload:
+                    del held[src][b]
+        for _, dst, payload in moves:
+            for b, v in payload.items():
+                if kind == "reduce":
+                    assert b in held[dst], (
+                        f"reduce: rank {dst} no longer accumulates block {b}")
+                    held[dst][b] = held[dst][b] + v
+                elif kind == "move":
+                    assert b not in held[dst], (
+                        f"move: rank {dst} already holds block {b}")
+                    held[dst][b] = v
+                else:  # copy
+                    if b in held[dst]:
+                        assert (held[dst][b] == v).all()
+                    held[dst][b] = v
+
+
+def _composite_kinds(sched: Sched, first: str, second: str):
+    """Kinds for a schedule: the IR's own tags, or the legacy symmetric
+    midpoint split for plain step lists."""
+    kinds = getattr(sched, "kinds", None)
+    if kinds is not None:
+        return tuple(kinds)
+    assert len(sched) % 2 == 0
+    half = len(sched) // 2
+    return (first,) * half + (second,) * half
 
 
 def _inputs(p: int, blk: int, seed: int = 0) -> np.ndarray:
@@ -104,22 +153,7 @@ def run_reduce_scatter(sched: Sched, p: int, blk: int = 4) -> None:
     held: List[Dict[int, np.ndarray]] = [
         {b: data[r][b].copy() for b in range(p)} for r in range(p)
     ]
-    for step in sched:
-        moves = []
-        for m in step:
-            payload = {}
-            for b in m.blocks:
-                assert b in held[m.src]
-                payload[b] = held[m.src][b]
-            moves.append((m.src, m.dst, payload))
-        for src, dst, payload in moves:
-            for b in payload:
-                del held[src][b]
-        for src, dst, payload in moves:
-            for b, v in payload.items():
-                assert b in held[dst], (
-                    f"RS: rank {dst} got block {b} it no longer accumulates")
-                held[dst][b] = held[dst][b] + v
+    _exec_block_steps(held, sched, step_kinds(sched, "reduce"))
     expect = data.sum(axis=0)
     for r in range(p):
         assert set(held[r]) == {r}, f"RS: rank {r} ends with {sorted(held[r])}"
@@ -149,49 +183,31 @@ def run_allgather(sched: Sched, p: int, blk: int = 4) -> None:
 def run_allreduce(sched: Sched, p: int, blk: int = 4) -> None:
     """Handles both small (full-vector recursive doubling) and large (RS+AG).
 
-    Large schedules are structurally symmetric (2s butterfly steps or
-    2(p-1) ring steps); the first half is reduce-scatter semantics (sends
-    relinquish partial sums, receives accumulate), the second allgather
-    semantics (receives install completed sums).
+    Step kinds drive the buffer semantics: "reduce" steps relinquish at
+    the sender and accumulate at the receiver, "copy"/"move" steps install
+    completed sums.  Plain step lists fall back to the legacy symmetric
+    midpoint split (first half RS, second half AG).
     """
     data = _inputs(p, blk)
     expect = data.sum(axis=0)
-    # full-vector schedule?
+    # full-vector schedule? (recursive-doubling exchanges + adapter steps)
     if all(m.blocks == (BLOCK_ALL,) for step in sched for m in step):
         acc = [data[r].copy() for r in range(p)]
-        for step in sched:
+        for step, kind in zip(sched, step_kinds(sched, "reduce")):
             snap = [a.copy() for a in acc]
             for m in step:
-                acc[m.dst] = acc[m.dst] + snap[m.src]
+                if kind == "copy":
+                    acc[m.dst] = snap[m.src].copy()
+                else:
+                    acc[m.dst] = acc[m.dst] + snap[m.src]
         for r in range(p):
             assert (acc[r] == expect).all(), f"allreduce wrong at rank {r}"
         return
 
-    assert len(sched) % 2 == 0
-    split = len(sched) // 2
     held: List[Dict[int, np.ndarray]] = [
         {b: data[r][b].copy() for b in range(p)} for r in range(p)
     ]
-    for si, step in enumerate(sched):
-        rs_phase = si < split
-        moves = []
-        for m in step:
-            payload = {b: held[m.src][b] for b in m.blocks}
-            moves.append((m.src, m.dst, payload))
-        if rs_phase:
-            for src, dst, payload in moves:
-                for b in payload:
-                    del held[src][b]
-            for src, dst, payload in moves:
-                for b, v in payload.items():
-                    assert b in held[dst], f"RS phase: {dst} lost block {b}"
-                    held[dst][b] = held[dst][b] + v
-        else:
-            for src, dst, payload in moves:
-                for b, v in payload.items():
-                    if b in held[dst]:
-                        assert (held[dst][b] == v).all()
-                    held[dst][b] = v
+    _exec_block_steps(held, sched, _composite_kinds(sched, "reduce", "copy"))
     for r in range(p):
         assert sorted(held[r]) == list(range(p)), f"rank {r}: {sorted(held[r])}"
         for b in range(p):
@@ -201,27 +217,9 @@ def run_allreduce(sched: Sched, p: int, blk: int = 4) -> None:
 def run_broadcast_large(sched: Sched, p: int, root: int, blk: int = 4) -> None:
     """scatter + allgather composite: root's p blocks reach every rank."""
     data = _inputs(p, blk)[root]
-    assert len(sched) % 2 == 0
-    split = len(sched) // 2
     held: List[Dict[int, np.ndarray]] = [{} for _ in range(p)]
     held[root] = {b: data[b] for b in range(p)}
-    for si, step in enumerate(sched):
-        scatter_phase = si < split
-        moves = []
-        for m in step:
-            for b in m.blocks:
-                assert b in held[m.src], (
-                    f"bcast_large: {m.src} sends block {b} it does not hold")
-            moves.append((m.src, m.dst, {b: held[m.src][b] for b in m.blocks}))
-        if scatter_phase:
-            for src, dst, payload in moves:
-                for b in payload:
-                    del held[src][b]
-        for src, dst, payload in moves:
-            for b, v in payload.items():
-                if b in held[dst]:
-                    assert (held[dst][b] == v).all()
-                held[dst][b] = v
+    _exec_block_steps(held, sched, _composite_kinds(sched, "move", "copy"))
     for r in range(p):
         assert sorted(held[r]) == list(range(p)), f"rank {r}: {sorted(held[r])}"
         for b in range(p):
@@ -232,28 +230,10 @@ def run_reduce_large(sched: Sched, p: int, root: int, blk: int = 4) -> None:
     """reduce-scatter + gather composite: root ends with the full sum."""
     data = _inputs(p, blk)
     expect = data.sum(axis=0)
-    assert len(sched) % 2 == 0
-    split = len(sched) // 2
     held: List[Dict[int, np.ndarray]] = [
         {b: data[r][b].copy() for b in range(p)} for r in range(p)
     ]
-    for si, step in enumerate(sched):
-        rs_phase = si < split
-        moves = []
-        for m in step:
-            payload = {b: held[m.src][b] for b in m.blocks}
-            moves.append((m.src, m.dst, payload))
-        for src, dst, payload in moves:
-            for b in payload:
-                del held[src][b]
-        for src, dst, payload in moves:
-            for b, v in payload.items():
-                if rs_phase:
-                    assert b in held[dst]
-                    held[dst][b] = held[dst][b] + v
-                else:
-                    assert b not in held[dst]
-                    held[dst][b] = v
+    _exec_block_steps(held, sched, _composite_kinds(sched, "reduce", "move"))
     assert sorted(held[root]) == list(range(p))
     for b in range(p):
         assert (held[root][b] == expect[b]).all(), f"reduce_large wrong blk {b}"

@@ -37,20 +37,25 @@ class GroupedTopo:
     alpha_global: float = 2.0e-6
     beta_global: float = 1.0 / 25e9
     uplinks_per_group: int = 32      # concurrent crossing flows share these
+    node_size: int = 1               # ranks per node (the innermost tier)
 
     def group_of(self, node: int) -> int:
         return node // self.group_size
 
 
-#: presets mirroring the paper's four systems + the TPU target
-LUMI = GroupedTopo("lumi_dragonfly", group_size=124)
-LEONARDO = GroupedTopo("leonardo_dragonfly_plus", group_size=180)
-MARENOSTRUM5 = GroupedTopo("mn5_fat_tree_2to1", group_size=160, uplinks_per_group=80)
+#: presets mirroring the paper's four systems + the TPU target.
+#: ``node_size`` = GPUs/chips per node: LUMI 4x MI250X (8 GCDs),
+#: Leonardo/MN5 4x A100/H100, one TPU host = 4 chips — the innermost
+#: tier ``repro.topology.tier_split`` derives hierarchies from.
+LUMI = GroupedTopo("lumi_dragonfly", group_size=124, node_size=8)
+LEONARDO = GroupedTopo("leonardo_dragonfly_plus", group_size=180, node_size=4)
+MARENOSTRUM5 = GroupedTopo("mn5_fat_tree_2to1", group_size=160,
+                           uplinks_per_group=80, node_size=4)
 TPU_MULTIPOD = GroupedTopo(
     "tpu_multipod", group_size=256,
     alpha_local=1.0e-6, beta_local=1.0 / 50e9,     # ICI per-link
     alpha_global=10.0e-6, beta_global=1.0 / 25e9,  # DCN per pod-pair
-    uplinks_per_group=8,
+    uplinks_per_group=8, node_size=4,
 )
 
 
@@ -142,6 +147,89 @@ def traffic_reduction(
     if ga == 0:
         return 0.0
     return (ga - gb) / ga
+
+
+# ---------------------------------------------------------------------------
+# Closed-form byte counts for composed (hierarchical) schedules
+# ---------------------------------------------------------------------------
+
+def _tier_wire_blocks(collective: str, algo: str, pt: int) -> int:
+    """Σ blocks on the wire across the flat tier schedule at radix ``pt``
+    (the same builder ``compose`` lifts, adapters included)."""
+    sched = get_schedule(collective, algo, pt)
+    return sum(m.nblocks(pt) for step in sched for m in step)
+
+
+def compose_phase_bytes(
+    collective: str,
+    tiers: Sequence[int],
+    vec_bytes: float,
+    algo: str = "bine",
+) -> Tuple[float, ...]:
+    """Per-phase wire bytes of ``compose(collective, tiers, algo)``,
+    indexed by tier (innermost first, i.e. digit order — not execution
+    order; allgather runs the same phases mirrored, allreduce both ways).
+
+    Phase j runs the flat radix-``tiers[j]`` schedule inside each of the
+    p/tiers[j] subgroups, and every virtual block lifts to
+    ``E_j = prod(tiers[j+1:])`` real blocks of ``vec_bytes / p``, so
+
+        bytes_j = (p / p_j) · wire_blocks(p_j) · E_j · vec_bytes / p.
+
+    Exact for any tier radix: non-pow2 tiers are priced through the same
+    fold / 3-2-elimination adapters ``compose`` lifts.
+    """
+    tiers = tuple(int(t) for t in tiers)
+    p = int(np.prod(tiers))
+    out = []
+    for j, pt in enumerate(tiers):
+        if pt == 1:
+            out.append(0.0)
+            continue
+        e_j = int(np.prod(tiers[j + 1:], dtype=np.int64))
+        if collective == "allreduce":
+            wire = (_tier_wire_blocks("reduce_scatter", algo, pt)
+                    + _tier_wire_blocks("allgather", algo, pt))
+        else:
+            wire = _tier_wire_blocks(collective, algo, pt)
+        out.append((p // pt) * wire * e_j * vec_bytes / p)
+    return tuple(out)
+
+
+def compose_global_bytes(
+    collective: str,
+    tiers: Sequence[int],
+    vec_bytes: float,
+    per_group: int,
+    algo: str = "bine",
+) -> float:
+    """Bytes of ``compose(collective, tiers, algo)`` crossing group
+    boundaries under tier-aligned placement (``per_group`` consecutive
+    ranks per group, as built by ``tuner.trace.spread_placement``).
+
+    ``per_group`` must equal ``prod(tiers[:k])`` for some k.  Then phase
+    j < k stays inside one group (its subgroup spans prod(tiers[:j+1])
+    ≤ per_group consecutive ranks starting at a multiple of it) and
+    phase j ≥ k is entirely crossing (peers differ by a nonzero multiple
+    of the digit stride, itself a multiple of per_group), so the global
+    traffic is exactly the sum of the outer phases — this is the closed
+    form behind the hierarchy's locality win: the inner (p_0−1)·E_0 term,
+    the bulk of the bytes, never leaves the group.
+    """
+    tiers = tuple(int(t) for t in tiers)
+    prefix, k = 1, None
+    for i in range(len(tiers) + 1):
+        if prefix == per_group:
+            k = i
+            break
+        if i < len(tiers):
+            prefix *= tiers[i]
+    if k is None:
+        raise ValueError(
+            f"per_group={per_group} is not a prefix product of tiers "
+            f"{tiers}; tier-aligned placement needs prod(tiers[:k])")
+    return float(sum(
+        compose_phase_bytes(collective, tiers, vec_bytes, algo)[k:]))
 
 
 # ---------------------------------------------------------------------------

@@ -15,9 +15,9 @@ small/latency-bound regime.  This package closes the loop automatically:
 """
 
 from .cost import (BUCKET_SIZE_CANDIDATES, CANDIDATES, SMALL_CUTOFF_BYTES,
-                   optimal_bucket_bytes, predict_bucket_time, predict_time,
-                   schedule_algo)
-from .presets import PRESETS, get_topology, torus_dims
+                   candidates_for, optimal_bucket_bytes, predict_bucket_time,
+                   predict_time, schedule_algo)
+from .presets import PRESETS, get_topology, tier_split, torus_dims
 from .table import (ANALYTIC, MEASURED, P_GRID, SIZE_BUCKETS, TUNINGS,
                     DecisionTable, build_table, decision_provenance,
                     load_table, measured_dir, measured_table_path,
@@ -26,9 +26,9 @@ from .table import (ANALYTIC, MEASURED, P_GRID, SIZE_BUCKETS, TUNINGS,
 
 __all__ = [
     "BUCKET_SIZE_CANDIDATES", "CANDIDATES", "SMALL_CUTOFF_BYTES",
-    "optimal_bucket_bytes", "predict_bucket_time", "predict_time",
-    "schedule_algo",
-    "PRESETS", "get_topology", "torus_dims",
+    "candidates_for", "optimal_bucket_bytes", "predict_bucket_time",
+    "predict_time", "schedule_algo",
+    "PRESETS", "get_topology", "tier_split", "torus_dims",
     "ANALYTIC", "MEASURED", "P_GRID", "SIZE_BUCKETS", "TUNINGS",
     "DecisionTable", "build_table", "decision_provenance", "load_table",
     "measured_dir", "measured_table_path", "merge_measured",

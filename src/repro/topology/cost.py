@@ -86,18 +86,22 @@ _SCHED_ALGO: Dict[Tuple[str, str], Tuple[str, str, str]] = {
     ("allreduce", "ring"): ("allreduce", "ring", "ring"),
     ("allreduce", "xla"): ("allreduce", "ring", "ring"),
     ("allreduce", "pallas_fused"): ("allreduce", "bine_small", "bine"),
+    ("allreduce", "bine_hier"): ("allreduce", "bine_small", "bine_hier"),
 
     ("reduce_scatter", "bine"): ("reduce_scatter", "bine", "bine"),
     ("reduce_scatter", "recdoub"): ("reduce_scatter", "recdoub", "recdoub"),
     ("reduce_scatter", "ring"): ("reduce_scatter", "ring", "ring"),
     ("reduce_scatter", "xla"): ("reduce_scatter", "ring", "ring"),
     ("reduce_scatter", "pallas_fused"): ("reduce_scatter", "bine", "bine"),
+    ("reduce_scatter", "bine_hier"): ("reduce_scatter", "bine_hier",
+                                      "bine_hier"),
 
     ("allgather", "bine"): ("allgather", "bine", "bine"),
     ("allgather", "recdoub"): ("allgather", "recdoub", "recdoub"),
     ("allgather", "ring"): ("allgather", "ring", "ring"),
     ("allgather", "xla"): ("allgather", "ring", "ring"),
     ("allgather", "pallas_fused"): ("allgather", "bine", "bine"),
+    ("allgather", "bine_hier"): ("allgather", "bine_hier", "bine_hier"),
 
     ("alltoall", "bine"): ("alltoall", "bine", "bine"),
     ("alltoall", "recdoub"): ("alltoall", "recdoub", "recdoub"),
@@ -126,15 +130,30 @@ _SCHED_ALGO: Dict[Tuple[str, str], Tuple[str, str, str]] = {
 #: is dispatchable by ``collectives.api`` (for the rooted collectives,
 #: "recdoub" selects the classical binomial-tree family there).
 CANDIDATES: Dict[str, Tuple[str, ...]] = {
-    "allreduce": ("bine", "recdoub", "ring", "pallas_fused"),
-    "reduce_scatter": ("bine", "recdoub", "ring", "pallas_fused"),
-    "allgather": ("bine", "recdoub", "ring", "pallas_fused"),
+    # bine_hier LAST: the argmin breaks ties toward earlier candidates,
+    # so identity-placement cells (where the composed schedule's bytes
+    # equal the flat bine's) keep selecting flat bine and the hierarchy
+    # only wins where the preset's grouping makes it strictly cheaper.
+    "allreduce": ("bine", "recdoub", "ring", "pallas_fused", "bine_hier"),
+    "reduce_scatter": ("bine", "recdoub", "ring", "pallas_fused",
+                       "bine_hier"),
+    "allgather": ("bine", "recdoub", "ring", "pallas_fused", "bine_hier"),
     "alltoall": ("bine", "recdoub", "bruck"),
     "broadcast": ("bine", "recdoub"),
     "reduce": ("bine", "recdoub"),
     "gather": ("bine", "recdoub"),
     "scatter": ("bine", "recdoub"),
 }
+
+
+def candidates_for(collective: str, topology: str) -> Tuple[str, ...]:
+    """``CANDIDATES`` restricted to what ``collectives.api`` can execute
+    on this preset: ``bine_hier`` derives its tier stack from a grouped
+    preset's hierarchy, so it is not a candidate on the torus."""
+    cands = CANDIDATES[collective]
+    if topology == "torus":
+        cands = tuple(b for b in cands if b != "bine_hier")
+    return cands
 
 
 def schedule_algo(collective: str, backend: str, nbytes: float,

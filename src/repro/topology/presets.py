@@ -48,3 +48,44 @@ def get_topology(name: str, p: int) -> Topo:
     if name == "torus":
         return TorusTopo("torus", torus_dims(p))
     raise KeyError(f"unknown topology preset {name!r}; known: {PRESETS}")
+
+
+def tier_split(name: str, p: int) -> Tuple[int, ...]:
+    """Derive the hierarchical tier stack (innermost first) a grouped
+    preset induces on ``p`` ranks, for ``core.schedules.compose`` /
+    ``collectives.api`` backend="bine_hier".
+
+    Tiers follow the machine's physical hierarchy: ranks within a node
+    (``node_size``), nodes within a group (``group_size``), then groups.
+    Each boundary contributes the largest divisor of the remaining rank
+    count not exceeding the level's capacity — a greedy split, so a tier
+    that cannot divide ``p`` evenly folds into the next level out rather
+    than failing.  Degenerate results collapse: ``p`` ranks all inside
+    one node give the flat ``(p,)``.
+
+    Raises ``ValueError`` for the torus (no grouped hierarchy to derive —
+    use the flat torus-mapped schedules) and unknown presets, naming the
+    preset so ``api`` call sites surface actionable errors.
+    """
+    if name not in GROUPED_PRESETS:
+        if name == "torus":
+            raise ValueError(
+                "preset 'torus' has no grouped hierarchy to derive tiers "
+                "from; bine_hier needs a grouped preset "
+                f"({', '.join(sorted(GROUPED_PRESETS))})")
+        raise KeyError(f"unknown topology preset {name!r}; known: {PRESETS}")
+    if p < 1:
+        raise ValueError(f"tier_split needs p >= 1, got {p}")
+    topo = GROUPED_PRESETS[name]
+    tiers = []
+    rem = p  # counts ranks at level 0, nodes after the first split
+    for cap in (topo.node_size, topo.group_size):
+        if rem == 1:
+            break
+        t = max(d for d in range(1, min(cap, rem) + 1) if rem % d == 0)
+        if t > 1:
+            tiers.append(t)
+            rem //= t
+    if rem > 1:
+        tiers.append(rem)
+    return tuple(tiers) or (p,)

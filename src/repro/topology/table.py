@@ -47,8 +47,8 @@ from bisect import bisect_left
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from .cost import (CANDIDATES, SMALL_CUTOFF_BYTES, optimal_bucket_bytes,
-                   predict_time)
+from .cost import (CANDIDATES, SMALL_CUTOFF_BYTES, candidates_for,
+                   optimal_bucket_bytes, predict_time)
 from .presets import PRESETS, get_topology
 
 _FORMAT = 2
@@ -193,7 +193,8 @@ def build_table(topology: str,
     entry in ``CANDIDATES[collective]`` (deterministic across rebuilds).
     """
     entries: Dict[str, Dict[int, Tuple[str, ...]]] = {}
-    for collective, cands in CANDIDATES.items():
+    for collective in CANDIDATES:
+        cands = candidates_for(collective, topology)
         per_p: Dict[int, Tuple[str, ...]] = {}
         for p in ps:
             topo = get_topology(topology, p)

@@ -98,9 +98,13 @@ def _payload_cached(nbytes: int, p: int) -> np.ndarray:
     return _payload_cache[key]
 
 
-def _build_fn(collective: str, backend: str, p: int, mesh, axis: str):
+def _build_fn(collective: str, backend: str, p: int, mesh, axis: str,
+              topology: Optional[str] = None):
     """jitted shard_map program for one probe cell: [p, ...] in, per-rank
-    rows, through the exact ``collectives.api`` dispatch path."""
+    rows, through the exact ``collectives.api`` dispatch path.
+
+    ``topology`` seeds the config preset so ``bine_hier`` cells execute
+    the tier stack of the table the measurement is filed under."""
     import jax
     from jax.sharding import PartitionSpec as P
 
@@ -108,6 +112,8 @@ def _build_fn(collective: str, backend: str, p: int, mesh, axis: str):
     from repro.compat import shard_map
 
     cfg = api.CollectiveConfig(backend=backend)
+    if topology is not None:
+        cfg = cfg.replace(topology=topology)
 
     if collective == "allreduce":
         def body(v):
@@ -127,7 +133,8 @@ def _build_fn(collective: str, backend: str, p: int, mesh, axis: str):
 
 def time_collective(collective: str, backend: str, p: int, nbytes: int,
                     mesh=None, axis: str = "x", warmup: int = 2,
-                    reps: int = 10) -> Measurement:
+                    reps: int = 10,
+                    topology: Optional[str] = None) -> Measurement:
     """Compile + warm up + time one cell; returns its ``Measurement``.
 
     ``allgather`` is fed its block input (``nbytes/p`` per rank) so the
@@ -141,7 +148,7 @@ def time_collective(collective: str, backend: str, p: int, nbytes: int,
     rows = _payload_cached(nbytes, p)
     if collective == "allgather":
         rows = rows[:, :rows.shape[1] // p]
-    fn = _build_fn(collective, backend, p, mesh, axis)
+    fn = _build_fn(collective, backend, p, mesh, axis, topology)
     x = jax.device_put(rows)
     for _ in range(max(1, warmup)):
         jax.block_until_ready(fn(x))
@@ -167,9 +174,14 @@ def _mesh_for(p: int, axis: str):
     return Mesh(np.array(devs[:p]), (axis,))
 
 
-def probe_backends(collective: str) -> Tuple[str, ...]:
+def probe_backends(collective: str,
+                   topology: Optional[str] = None) -> Tuple[str, ...]:
     """The candidate set a measured cell must cover — exactly what the
-    decision table minimizes over."""
+    decision table for ``topology`` minimizes over (``bine_hier`` is not
+    a candidate on the torus)."""
+    if topology is not None:
+        from repro.topology.cost import candidates_for
+        return candidates_for(collective, topology)
     from repro.topology import CANDIDATES
     return CANDIDATES[collective]
 
@@ -206,10 +218,10 @@ def probe_grid(spec: GridSpec, topology: str,
         # reuses the one cached payload array (see _payload_cached)
         for nbytes in spec.sizes:
             for collective in spec.collectives:
-                for backend in probe_backends(collective):
+                for backend in probe_backends(collective, topology):
                     m = time_collective(collective, backend, p, nbytes,
                                         mesh=mesh, warmup=spec.warmup,
-                                        reps=spec.reps)
+                                        reps=spec.reps, topology=topology)
                     ms.measurements.append(m)
                     if progress:
                         print(f"[probe] p={p} {collective:>14} "

@@ -190,3 +190,38 @@ def spread_placement(p: int, topo: GroupedTopo, per_group: int):
                          f"{topo.group_size}")
     return [(r // per_group) * topo.group_size + (r % per_group)
             for r in range(p)]
+
+
+def hier_global_cut(collective: str, p: int, vec_bytes: float,
+                    topo: GroupedTopo,
+                    tiers: Optional[Sequence[int]] = None,
+                    algo: str = "bine",
+                    flat_algo: str = "bine") -> Tuple[float, float]:
+    """(hier global bytes, flat global bytes) under tier-aligned spread
+    placement — the replayed evidence that a composed hierarchy keeps the
+    inner phases off the global links.
+
+    Replays ``compose(collective, tiers, algo)`` (default: the balanced
+    ``default_tiers`` split) and the flat ``flat_algo`` schedule with
+    ``spread_placement(..., per_group=tiers[0])`` — one innermost subgroup
+    per group — and cross-checks the replayed hierarchical counter against
+    the closed form ``core.traffic.compose_global_bytes`` before returning
+    it.  The hierarchy's outer phases are its only crossing traffic, so
+    for any depth ≥ 2 the first value is strictly below the second.
+    """
+    from repro.core.schedules import compose, default_tiers
+    from repro.core.traffic import compose_global_bytes
+
+    tiers = tuple(int(t) for t in tiers) if tiers is not None \
+        else default_tiers(p)
+    placement = spread_placement(p, topo, per_group=tiers[0])
+    hier = trace_schedule(compose(collective, tiers, algo), p, vec_bytes,
+                          topo, placement)
+    flat = trace_collective(collective, flat_algo, p, vec_bytes, topo,
+                            placement)
+    closed = compose_global_bytes(collective, tiers, vec_bytes, tiers[0],
+                                  algo)
+    assert hier.global_bytes == closed, (
+        "replayed hierarchical global bytes disagree with the closed form",
+        hier.global_bytes, closed, collective, tiers)
+    return hier.global_bytes, flat.global_bytes

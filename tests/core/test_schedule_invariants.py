@@ -15,9 +15,14 @@ import pytest
 from _hyp import given, settings, strategies as st
 
 from repro.core import negabinary as nb
-from repro.core.schedules import COLLECTIVES, get_schedule, list_algos
+from repro.core.schedules import (COLLECTIVES, COMPOSABLE, compose,
+                                  get_schedule, hier_schedule, list_algos)
 
-PS = (4, 8, 16)
+#: pow2 and non-pow2 (adapter-built) rank counts for the peer invariant
+PS = (4, 6, 8, 12, 16)
+
+#: negabinary labels are a pow2-only construction (log2_int)
+POW2_PS = (4, 8, 16)
 
 #: every (collective, algo) pair in the registry, enumerated at import
 #: time so pairs added later are covered automatically
@@ -27,18 +32,23 @@ PAIRS = tuple((coll, algo) for coll in COLLECTIVES
 ROOTED = ("broadcast", "reduce", "gather", "scatter")
 
 
-def _check_step_peers(coll, algo, p, root):
-    sched = get_schedule(coll, algo, p, root)
-    assert sched, (coll, algo, p)
+def _check_sched_peers(sched, p, ctx):
+    assert sched, ctx
+    assert len(sched.kinds) == len(sched.steps), ctx
     for i, step in enumerate(sched):
         srcs = [m.src for m in step]
         dsts = [m.dst for m in step]
-        where = (coll, algo, p, root, i)
+        where = (*ctx, i)
         assert all(0 <= s < p for s in srcs + dsts), where
         assert not any(m.src == m.dst for m in step), \
             ("self-send", *where)
         assert len(set(srcs)) == len(srcs), ("duplicate sender", *where)
         assert len(set(dsts)) == len(dsts), ("duplicate receiver", *where)
+
+
+def _check_step_peers(coll, algo, p, root):
+    sched = get_schedule(coll, algo, p, root)
+    _check_sched_peers(sched, p, (coll, algo, p, root))
 
 
 # ---------------------------------------------------------------------------
@@ -51,7 +61,35 @@ def test_step_peers_partial_permutation(coll, algo, p):
     _check_step_peers(coll, algo, p, root=0)
 
 
-@pytest.mark.parametrize("p", PS)
+#: depth-2 and depth-3 tier stacks (innermost first), pow2 and mixed-radix
+TIER_STACKS = ((2, 2), (4, 2), (2, 2, 2), (4, 2, 2), (2, 2, 4), (3, 2, 2))
+
+
+@pytest.mark.parametrize("coll", COMPOSABLE)
+@pytest.mark.parametrize("tiers", TIER_STACKS,
+                         ids=["x".join(map(str, t)) for t in TIER_STACKS])
+def test_compose_step_peers(coll, tiers):
+    """compose-built hierarchies (incl. depth-3) keep every step a valid
+    partial permutation — the lifted subgroup schedules are disjoint."""
+    p = 1
+    for t in tiers:
+        p *= t
+    for algo in ("bine", "recdoub", "ring"):
+        _check_sched_peers(compose(coll, tiers, algo), p,
+                           (coll, algo, tiers))
+
+
+@pytest.mark.parametrize("coll", COMPOSABLE)
+@pytest.mark.parametrize("p", (3, 5, 6, 7, 12, 24))
+def test_nonpow2_adapter_step_peers(coll, p):
+    """Fold/3-2-elimination adapted schedules (flat and hierarchical)
+    keep the per-step partial-permutation invariant at non-pow2 p."""
+    for algo in ("bine", "recdoub"):
+        _check_sched_peers(get_schedule(coll, algo, p), p, (coll, algo, p))
+    _check_sched_peers(hier_schedule(coll, p), p, (coll, "bine_hier", p))
+
+
+@pytest.mark.parametrize("p", POW2_PS)
 def test_negabinary_rank_roundtrip_exhaustive(p):
     for r in range(p):
         lab = nb.rank2nb(r, p)
@@ -61,7 +99,7 @@ def test_negabinary_rank_roundtrip_exhaustive(p):
     assert sorted(nb.rank2nb(r, p) for r in range(p)) == list(range(p))
 
 
-@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("p", POW2_PS)
 def test_v_table_inverse(p):
     """v_inverse really inverts the Sec. 4.3.1 block permutation."""
     v = nb.v_table(p)
@@ -88,7 +126,7 @@ def test_negabinary_encode_decode_roundtrip(n):
     assert nb.neg_to_int(nb.int_to_neg(n)) == n
 
 
-@given(st.sampled_from(PS), st.data())
+@given(st.sampled_from(POW2_PS), st.data())
 def test_negabinary_rank_roundtrip_property(p, data):
     r = data.draw(st.integers(0, p - 1))
     assert nb.nb2rank(nb.rank2nb(r, p), p) == r

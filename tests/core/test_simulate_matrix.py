@@ -1,13 +1,13 @@
 """Conformance matrix: every (collective, algo) pair in the schedule
-registry executes correctly on the numpy oracle at p in {4, 6, 8, 16}.
+registry executes correctly on the numpy oracle at p in
+{4, 6, 8, 12, 16, 24} — power-of-two AND non-power-of-two rank counts.
 
-The paper's constructions are defined for p = 2**s; the matrix pins that
-contract explicitly: power-of-two rank counts must pass the oracle, and at
-the non-power-of-two point every schedule either still passes (the ring
-family is defined for any p) or refuses loudly with the ``log2_int``
-ValueError — silently wrong schedules can no longer hide until a
-benchmark sweep happens to hit them.  New algorithms added to the registry
-are picked up automatically via ``list_algos``.
+The paper's flat constructions are defined for p = 2**s; the schedule IR's
+non-pow2 adapters (proxy-rank folding / 3-2 elimination, see
+``core.schedules``) extend every registered pair to arbitrary p, so the
+old "ring passes or ``log2_int`` raises" escape hatch is gone: anything in
+the registry must pass the oracle at every p here.  New algorithms added
+to the registry are picked up automatically via ``list_algos``.
 """
 
 import pytest
@@ -15,42 +15,27 @@ import pytest
 from repro.core import simulate
 from repro.core.schedules import COLLECTIVES, get_schedule, list_algos
 
-PS = (4, 6, 8, 16)
+PS = (4, 6, 8, 12, 16, 24)
 
 #: rooted collectives: re-check at a nonzero root (the paper's rotation)
 ROOTED = ("broadcast", "reduce", "gather", "scatter")
 
-#: pairs whose construction is rank-count agnostic (linear rings): these
-#: must KEEP working at non-powers-of-two
-NONPOW2_OK = {
-    ("reduce_scatter", "ring"),
-    ("allgather", "ring"),
-    ("allreduce", "ring"),
-}
-
 MATRIX = [(c, a, p) for c in COLLECTIVES for a in list_algos(c) for p in PS]
-
-
-def _is_pow2(p: int) -> bool:
-    return p & (p - 1) == 0
 
 
 @pytest.mark.parametrize("collective,algo,p", MATRIX,
                          ids=[f"{c}-{a}-p{p}" for c, a, p in MATRIX])
 def test_schedule_conformance(collective, algo, p):
-    if _is_pow2(p) or (collective, algo) in NONPOW2_OK:
-        simulate.check(collective, algo, p)
-    else:
-        with pytest.raises(ValueError, match="power of two"):
-            simulate.check(collective, algo, p)
+    simulate.check(collective, algo, p)
 
 
 @pytest.mark.parametrize(
     "collective,algo", [(c, a) for c in ROOTED for a in list_algos(c)],
     ids=[f"{c}-{a}" for c in ROOTED for a in list_algos(c)])
-@pytest.mark.parametrize("p", [p for p in PS if _is_pow2(p)])
+@pytest.mark.parametrize("p", PS)
 def test_rooted_nonzero_roots(collective, algo, p):
-    """Root rotation (Sec. 2.2): correctness at every root class."""
+    """Root rotation (Sec. 2.2): correctness at every root class,
+    including non-pow2 p where the rotation relabels adapter proxies."""
     for root in (1, p // 2, p - 1):
         simulate.check(collective, algo, p, root=root)
 

@@ -8,9 +8,9 @@ import pytest
 from repro.collectives import api
 from repro.core import simulate
 from repro.topology import (CANDIDATES, P_GRID, SIZE_BUCKETS, DecisionTable,
-                            PRESETS, build_table, get_topology, load_table,
-                            predict_time, schedule_algo, select_backend,
-                            table_path)
+                            PRESETS, build_table, candidates_for,
+                            get_topology, load_table, predict_time,
+                            schedule_algo, select_backend, table_path)
 
 TEST_PS = (4, 8, 16, 64)
 TEST_SIZES = (1 << 10, 1 << 14, 1 << 20, 1 << 26)
@@ -23,9 +23,11 @@ def tables():
 
 
 def test_table_matches_bruteforce_argmin(tables):
-    """Every entry equals the argmin of predict_time over the candidates."""
+    """Every entry equals the argmin of predict_time over the candidates
+    (the preset-aware set: no bine_hier on the torus)."""
     for name, tab in tables.items():
-        for coll, cands in CANDIDATES.items():
+        for coll in CANDIDATES:
+            cands = candidates_for(coll, name)
             for p in TEST_PS:
                 topo = get_topology(name, p)
                 for i, edge in enumerate(TEST_SIZES):

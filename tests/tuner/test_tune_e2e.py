@@ -33,7 +33,7 @@ from repro.tuner import load_all_measurements
 sets = load_all_measurements(topology="tpu_multipod")
 assert len(sets) == 1 and sets[0].provenance["grid"] == "tiny"
 assert sets[0].provenance["timestamp"] == "e2e"
-assert len(sets[0].measurements) == 36   # 3 colls x 4 candidates x 3 sizes
+assert len(sets[0].measurements) == 45   # 3 colls x 5 candidates x 3 sizes
 assert all(m.time_s > 0 for m in sets[0].measurements)
 
 # ---- 2. a measured-tuning train step dispatches from that table ----
