@@ -29,7 +29,9 @@ import json, time
 import jax, numpy as np
 from repro.configs import base
 from repro.models import transformer as T
-from repro.train.step import TrainConfig, make_train_step, make_init_fns
+from repro.train.step import (TrainConfig, bucket_decisions, make_train_step,
+                              make_init_fns)
+from repro.kernels.collectives import plan as kplan
 from repro.compat import set_mesh
 from repro.train.data import DataConfig, make_batch
 from repro.launch import hlo, dryrun
@@ -42,10 +44,13 @@ dcfg = DataConfig(global_batch=8, seq_len=64, vocab_size=cfg.vocab_size)
 N_DP, REPS = 8, 3
 rows = []
 
-for backend, bb, tag in (("bine", 0, "per_leaf"), ("bine", -1, "bucketed"),
-                         ("auto", -1, "bucketed_auto")):
+for backend, bb, tag, wire in (
+        ("bine", 0, "per_leaf", "float32"),
+        ("bine", -1, "bucketed", "float32"),
+        ("auto", -1, "bucketed_auto", "float32"),
+        ("bine", -1, "bucketed_int8", "int8")):
     tcfg = TrainConfig(backend=backend, dp_axes=("pod", "data"),
-                       bucket_bytes=bb)
+                       bucket_bytes=bb, wire_dtype=wire)
     step_fn, shardings, _ = make_train_step(cfg, tcfg, mesh, params_shapes)
     init_p, init_s = make_init_fns(cfg, tcfg, mesh, params_shapes)
     with set_mesh(mesh):
@@ -85,12 +90,25 @@ for backend, bb, tag in (("bine", 0, "per_leaf"), ("bine", -1, "bucketed"),
             jax.block_until_ready(m["loss"])
             best = min(best, time.perf_counter() - t0)
     plan = shardings["bucket_plan"]
+    # scheduled wire bytes per step (RS + AG over every bucket at ITS
+    # resolved wire dtype, scale metadata included) — the analytic twin
+    # of the tracer's per-link accounting
+    wps = 0.0
+    if plan is not None:
+        for b, (_, rs_w, _, ag_w) in zip(plan.buckets,
+                                         bucket_decisions(tcfg, plan)):
+            n = b.row_elems * N_DP
+            wps += kplan.wire_payload_bytes(
+                "reduce_scatter", "bine", N_DP, n, rs_w)
+            wps += kplan.wire_payload_bytes("allgather", "bine", N_DP, n, ag_w)
     rows.append({
         "tag": tag, "backend": backend, "bucket_bytes": bb,
+        "wire_dtype": wire,
         "n_buckets": len(plan.buckets) if plan is not None else 0,
         "ppermute_ops": counts.get("collective-permute", 0)
                         + counts.get("collective-permute-start", 0),
         "wire_bytes_per_chip": roof.coll_bytes_per_chip,
+        "wire_bytes_per_step": wps,
         "wall_time_ms": best * 1e3,
     })
 
@@ -102,6 +120,11 @@ for r in rows:
     assert ratio >= 5.0, (per_leaf["ppermute_ops"], r["ppermute_ops"])
     assert r["wire_bytes_per_chip"] <= per_leaf["wire_bytes_per_chip"] * 1.01, \
         (r["tag"], r["wire_bytes_per_chip"], per_leaf["wire_bytes_per_chip"])
+f32b = next(r for r in rows if r["tag"] == "bucketed")
+i8b = next(r for r in rows if r["tag"] == "bucketed_int8")
+# int8 wires (1 + 4/256 B/elem) must cut scheduled bytes ~4x vs f32
+assert i8b["wire_bytes_per_step"] < 0.3 * f32b["wire_bytes_per_step"], \
+    (i8b["wire_bytes_per_step"], f32b["wire_bytes_per_step"])
 print("BENCH_JSON " + json.dumps(rows))
 """
 
@@ -125,17 +148,18 @@ def run(recorder=None) -> None:
             rows = json.loads(line[len("BENCH_JSON "):])
     assert rows, proc.stdout[-2000:]
 
-    hdr = ("tag", "backend", "n_buckets", "ppermute_ops",
-           "wire_bytes_per_chip", "wall_time_ms")
+    hdr = ("tag", "backend", "wire_dtype", "n_buckets", "ppermute_ops",
+           "wire_bytes_per_chip", "wire_bytes_per_step", "wall_time_ms")
     print(",".join(hdr))
     for r in rows:
         print(",".join(f"{r[h]:.4g}" if isinstance(r[h], float) else str(r[h])
                        for h in hdr))
         if recorder is not None:
             cfg = {"tag": r["tag"], "backend": r["backend"],
-                   "bucket_bytes": r["bucket_bytes"]}
+                   "bucket_bytes": r["bucket_bytes"],
+                   "wire_dtype": r["wire_dtype"]}
             for m in ("n_buckets", "ppermute_ops", "wire_bytes_per_chip",
-                      "wall_time_ms"):
+                      "wire_bytes_per_step", "wall_time_ms"):
                 recorder.add("bucketed_grads", cfg, m, r[m])
     per_leaf = next(r for r in rows if r["tag"] == "per_leaf")
     bucketed = next(r for r in rows if r["tag"] == "bucketed")

@@ -5,8 +5,8 @@
 # in interpret mode), then asserts:
 #   * the measured table round-trips through topology/table.py and
 #     carries measured cells;
-#   * every packaged analytic table (format 1) still parses under the
-#     provenance-aware format 2 loader.
+#   * every packaged analytic table carries the joint (backend, wire)
+#     rows of format 3 and reads as all-analytic.
 #
 # Usage: scripts/tune_smoke.sh [out-dir]   (default ./tune-smoke)
 set -euo pipefail
@@ -36,15 +36,19 @@ os.environ.pop("REPRO_TABLE_DIR", None)
 merged = tbl.load_table("tpu_multipod", tuning="measured")
 assert merged.measured_cell_count() == n
 
-# backward compat: every packaged format-1 analytic table still parses
+# every packaged analytic table is current-format with wire rows and
+# reads as all-analytic (old formats 1/2 parse too -- tests/tuner)
 packaged = glob.glob(os.path.join(tbl._PACKAGED_DIR, "*.json"))
 assert packaged, "no packaged tables found"
 for f in packaged:
     with open(f) as fh:
-        assert json.load(fh)["format"] == 1, f  # stays format 1 on disk
+        d = json.load(fh)
+    assert d["format"] == 3 and d["wire_entries"], f
     tab = tbl.DecisionTable.load(f)
     assert not tab.provenance  # reads as all-analytic
     assert tab.provenance_of("allreduce", 8, 1 << 20) == "analytic"
+    b, w = tab.lookup_wire("reduce_scatter", 8, 1 << 26)
+    assert w in ("float32", "bfloat16", "int8"), (f, b, w)
 print(f"tune-smoke OK: {n} measured cells; "
       f"{len(packaged)} packaged tables parse")
 EOF

@@ -55,6 +55,14 @@ Axis = shmap.Axis
 PALLAS_FUSED_BACKEND = "pallas_fused"
 
 
+#: wire dtypes CollectiveConfig accepts ("auto" resolves per call site)
+WIRE_DTYPES = ("float32", "bfloat16", "int8", "auto")
+
+#: backends with an int8 wire-codec path (shmap.reduce_scatter_q /
+#: allgather_q and the fused twins) — mirrors cost.WIRE_CODEC_BACKENDS
+WIRE_CODEC_BACKENDS = ("bine", "recdoub", PALLAS_FUSED_BACKEND)
+
+
 @dataclass(frozen=True)
 class CollectiveConfig:
     backend: str = "bine"             # bine | recdoub | ring | xla | bine_hier
@@ -69,6 +77,17 @@ class CollectiveConfig:
     #: cells over them (repro.tuner; falls back to analytic, with one
     #: warning, when the topology has no measured table yet)
     tuning: str = "analytic"
+    #: what travels on the wire for reduce_scatter/allgather:
+    #: "float32" (uncompressed), "bfloat16" (cast, 2x), "int8" (per-chunk
+    #: pow2-scale codec, ~4x, see collectives.compression), or "auto"
+    #: (joint (backend, wire) decision-table lookup per call site)
+    wire_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"unsupported wire_dtype {self.wire_dtype!r}; expected one "
+                f"of {WIRE_DTYPES}")
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -102,23 +121,95 @@ def resolve_backend(collective: str, p: int, nbytes: int,
 
 def _resolve(cfg: CollectiveConfig, collective: str, x, axis: Axis,
              gathered: bool = False) -> CollectiveConfig:
-    """Resolve backend="auto" for this call site.
+    """Resolve backend="auto" / wire_dtype="auto" for this call site.
 
     The decision table is keyed on the FULL-vector payload (the
     ``core.traffic.msg_bytes`` convention).  For the collectives whose
     input is one rank's block (allgather/gather), pass ``gathered=True``
-    to scale the local size up by the axis size."""
-    if cfg.backend != "auto":
+    to scale the local size up by the axis size.
+
+    ``wire_dtype="auto"`` on reduce_scatter/allgather reads the joint
+    ``(backend, wire)`` row of the table (``topology.select_wire``); with
+    an explicit backend only the wire half is taken, and it snaps back to
+    float32 when that backend has no codec path.  On the codec-less
+    collectives "auto" wire resolves to float32.
+    """
+    auto_b = cfg.backend == "auto"
+    auto_w = cfg.wire_dtype == "auto"
+    if not auto_b and not auto_w:
         return cfg
     p = shmap.axis_size(axis)
     nbytes = _nbytes(x) * (p if gathered else 1)
-    b = resolve_backend(collective, p, nbytes, cfg)
-    return cfg.replace(backend=b)
+    if auto_w and collective in ("reduce_scatter", "allgather"):
+        from repro.topology import select_wire
+        b, w = select_wire(collective, p, nbytes, cfg.topology,
+                           tuning=cfg.tuning)
+        if not auto_b:
+            b = cfg.backend
+            if b not in WIRE_CODEC_BACKENDS:
+                w = "float32"
+        return cfg.replace(backend=b, wire_dtype=w)
+    kw = {}
+    if auto_w:
+        kw["wire_dtype"] = "float32"
+    if auto_b:
+        kw["backend"] = resolve_backend(collective, p, nbytes, cfg)
+    return cfg.replace(**kw)
 
 
 def allreduce_uses_small(nbytes: int, cfg: CollectiveConfig) -> bool:
     """The small/large switch, exposed for tests: INCLUSIVE at the cutoff."""
     return nbytes <= cfg.small_cutoff_bytes
+
+
+def _check_wire_plain(cfg: CollectiveConfig, collective: str) -> None:
+    """The codec wire paths exist for reduce_scatter/allgather only; an
+    explicitly compressed wire anywhere else is a config error, not a
+    silent float32 fall-through (the bug class this guards against)."""
+    if cfg.wire_dtype != "float32":
+        raise ValueError(
+            f"wire_dtype={cfg.wire_dtype!r} is not implemented for "
+            f"{collective!r}; compressed wires exist for reduce_scatter "
+            f"and allgather only")
+
+
+def _wire_rs_ag(collective: str, x, axis: Axis, cfg: CollectiveConfig):
+    """Execute reduce_scatter/allgather with a compressed wire.
+
+    Returns the result, or ``None`` to tell the caller to run the plain
+    float32 path — the *adapter pass-through*: non-power-of-two axis
+    sizes (the shmap non-pow2 adapters have no codec variant) and a
+    ``pallas_fused`` config pinned to the ring family (no ring codec)
+    stay uncompressed rather than failing.
+
+    bfloat16 rides the existing dtype-generic paths (cast in, collective,
+    cast out); int8 dispatches to the ``_q`` twins — shmap and fused
+    decode bit-identically (shared chunk rule, pow2 scales).
+    """
+    b = cfg.backend
+    if cfg.wire_dtype == "bfloat16":
+        v = x.reshape(-1).astype(jnp.bfloat16)
+        f = reduce_scatter if collective == "reduce_scatter" else allgather
+        return f(v, axis, cfg.replace(wire_dtype="float32")).astype(x.dtype)
+    # int8
+    if b not in WIRE_CODEC_BACKENDS:
+        raise ValueError(
+            f"wire_dtype='int8' needs a codec backend "
+            f"{WIRE_CODEC_BACKENDS}; got backend={b!r}")
+    p = shmap.axis_size(axis)
+    if p & (p - 1):
+        return None  # non-pow2 adapter: float32 pass-through
+    algo = cfg.fused_algo if b == PALLAS_FUSED_BACKEND else b
+    if algo not in ("bine", "recdoub"):
+        return None  # ring-family fused_algo: no codec schedule
+    if b == PALLAS_FUSED_BACKEND:
+        ops = _fused_ops()
+        f = (ops.reduce_scatter_q if collective == "reduce_scatter"
+             else ops.allgather_q)
+    else:
+        f = (shmap.reduce_scatter_q if collective == "reduce_scatter"
+             else shmap.allgather_q)
+    return f(x.reshape(-1), axis, algo).astype(x.dtype)
 
 
 def _hier_tiers(cfg: CollectiveConfig, p: int) -> Tuple[int, ...]:
@@ -161,6 +252,7 @@ def _check_hier_divisible(n: int, p: int, cfg: CollectiveConfig,
 
 def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "allreduce", x, axis)
+    _check_wire_plain(cfg, "allreduce")
     b = cfg.backend
     if b == "xla":
         return lax.psum(x, axis)
@@ -204,6 +296,10 @@ def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
     allgather, which gathers outer first.  (The single-axis composed
     path instead matches the flat convention: rank r ends with block r.)"""
     cfg = _resolve(cfg, "reduce_scatter", x, axis)
+    if cfg.wire_dtype != "float32":
+        out = _wire_rs_ag("reduce_scatter", x, axis, cfg)
+        if out is not None:
+            return out
     b = cfg.backend
     if b == "xla":
         p = shmap.axis_size(axis)
@@ -233,6 +329,10 @@ def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
     """Own block -> full vector in rank order (``bine_hier``: inner-major,
     inverting this module's ``bine_hier`` reduce_scatter)."""
     cfg = _resolve(cfg, "allgather", x, axis, gathered=True)
+    if cfg.wire_dtype != "float32":
+        out = _wire_rs_ag("allgather", x, axis, cfg)
+        if out is not None:
+            return out
     b = cfg.backend
     if b == "xla":
         return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
@@ -256,6 +356,7 @@ def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
 def all_to_all(x, axis: Axis, cfg: CollectiveConfig = BINE):
     """[p, ...] row d to rank d  ->  [p, ...] row o from rank o."""
     cfg = _resolve(cfg, "alltoall", x, axis)
+    _check_wire_plain(cfg, "alltoall")
     b = cfg.backend
     if b == "xla":
         return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
@@ -290,6 +391,7 @@ def _psum_exact(dtype) -> bool:
 
 def broadcast(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "broadcast", x, axis)
+    _check_wire_plain(cfg, "broadcast")
     if cfg.backend == "xla":
         # XLA has no direct bcast primitive at this level; emulate.
         if _psum_exact(x.dtype):
@@ -306,6 +408,7 @@ def broadcast(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
 
 def reduce(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "reduce", x, axis)
+    _check_wire_plain(cfg, "reduce")
     if cfg.backend == "xla":
         return lax.psum(x, axis)  # all ranks get it; root semantics upstream
     algo = _rooted_algo(cfg)
@@ -314,6 +417,7 @@ def reduce(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
 
 def gather(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "gather", x, axis, gathered=True)
+    _check_wire_plain(cfg, "gather")
     if cfg.backend == "xla":
         return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
     algo = _rooted_algo(cfg)
@@ -322,6 +426,7 @@ def gather(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
 
 def scatter(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "scatter", x, axis)
+    _check_wire_plain(cfg, "scatter")
     if cfg.backend == "xla":
         p = shmap.axis_size(axis)
         idx = shmap.axis_index(axis)

@@ -18,6 +18,83 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+#: wire dtypes the collective stack can put on the wire
+WIRE_DTYPES = ("float32", "bfloat16", "int8")
+
+#: codec chunk cap (elements) shared by the shmap and pallas_fused int8
+#: wire paths — both quantize at exactly these boundaries, which is what
+#: makes their decoded results bit-identical
+WIRE_CHUNK = 256
+
+#: wire bytes per f32 element for each wire dtype.  int8 counts the
+#: per-chunk f32 scale metadata (4 bytes per WIRE_CHUNK elements), so the
+#: cost model and the bucket planner price the true payload.
+WIRE_BYTES_PER_ELEM = {
+    "float32": 4.0,
+    "bfloat16": 2.0,
+    "int8": 1.0 + 4.0 / WIRE_CHUNK,
+}
+
+
+def wire_factor(wire_dtype: str) -> float:
+    """Wire bytes relative to float32 (scale metadata included)."""
+    return WIRE_BYTES_PER_ELEM[wire_dtype] / 4.0
+
+
+def wire_chunk(n: int, cap: int = WIRE_CHUNK) -> int:
+    """Effective codec chunk for a payload of ``n`` elements: the largest
+    power of two dividing ``n``, capped at ``cap`` (1 when ``n`` is odd).
+
+    This is the *shared chunking rule*: every int8 wire payload — shmap or
+    pallas_fused, any schedule step — is quantized per ``wire_chunk(len)``
+    chunk, so the two backends hit identical quantize points.
+    """
+    if n <= 0:
+        return cap
+    return min(n & -n, cap)
+
+
+def pow2_scale(t) -> jax.Array:
+    """Smallest power of two >= ``t`` (elementwise; 1.0 where ``t == 0``),
+    read straight off the float32 exponent bits — no transcendentals.
+
+    The wire codec's scales are powers of two so that the decode multiply
+    ``q * scale`` is EXACT in float32: the receiver's ``kept + q * scale``
+    then has a single rounding, making the decoded result bit-identical
+    across backends however XLA fuses the multiply-add (a max/127 scale
+    leaves the product inexact and the sum FMA-sensitive).  The price is
+    at most one extra doubling of the quantization step.
+    """
+    t = t.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(t, jnp.int32)
+    frac = bits & 0x7FFFFF
+    up = jnp.where(frac == 0, bits, (((bits >> 23) & 0xFF) + 1) << 23)
+    scale = jax.lax.bitcast_convert_type(up, jnp.float32)
+    return jnp.where(t > 0, scale, jnp.float32(1.0))
+
+
+def quantize_wire(v) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a flat vector at the shared chunk rule.
+
+    Returns ``(q, scales)``: ``q`` int8 with ``v``'s length, ``scales``
+    float32 with ``len(v) // wire_chunk(len(v))`` entries — each the
+    power-of-two ceiling of max|chunk| / 127 (see :func:`pow2_scale`).
+    Scale math runs in float32 whatever ``v.dtype``.
+    """
+    n = v.shape[0]
+    ch = wire_chunk(n)
+    m = v.astype(jnp.float32).reshape(-1, ch)
+    scale = pow2_scale(jnp.max(jnp.abs(m), axis=1) / 127.0)
+    q = jnp.clip(jnp.round(m / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_wire(q, scales) -> jax.Array:
+    """Decode a :func:`quantize_wire` pair back to float32 (full length)."""
+    ch = q.shape[0] // scales.shape[0]
+    return (q.astype(jnp.float32).reshape(-1, ch)
+            * scales[:, None]).reshape(-1)
+
 
 def compress_bf16(x):
     return x.astype(jnp.bfloat16)
@@ -62,16 +139,42 @@ def ef_compress(grad, residual, codec: str = "int8", chunk: int = 256):
     Returns (wire_value, new_residual).  wire_value is already decoded —
     callers that want true wire savings pass the encoded form through the
     collective; the train step uses the decoded value so accounting stays
-    exact on CPU."""
-    corrected = grad + residual
+    exact on CPU.
+
+    Correction and residual always accumulate in float32 and the residual
+    is *returned* float32, whatever the gradient dtype: a bf16-stored
+    residual rounds away exactly the sub-quantization error it exists to
+    carry, so with bf16 gradients error feedback silently degrades to
+    plain quantization.  The residual pytree therefore lives in the
+    optimizer state as float32.  ``residual'`` accounts for the wire value
+    as the receiver sees it — after the cast back to ``grad.dtype`` — so
+    ``corrected == sent + residual'`` holds exactly in float32.
+
+    ``codec="wire_int8"`` compresses with the *wire* codec
+    (:func:`quantize_wire`, pow2 scales at the shared chunk rule) instead
+    of the legacy max/127 one.  This is what the int8-wire train step
+    threads through: because the scales are powers of two, the wire's own
+    first-step re-encode of ``sent`` is LOSSLESS (``sent = q * 2^e``
+    re-quantizes to exactly ``q`` at a scale ``<= 2^e``), so the residual
+    accounts for the entire first quantization — only the per-step
+    re-quantization of partial sums inside the butterfly adds error the
+    feedback cannot see, and that error is bounded by ``scale/2`` per
+    received chunk per step.
+    """
+    corrected = grad.astype(jnp.float32) + residual.astype(jnp.float32)
     if codec == "none":
-        return corrected, jnp.zeros_like(residual)
+        return (corrected.astype(grad.dtype),
+                jnp.zeros(residual.shape, jnp.float32))
     if codec == "bf16":
-        sent = decompress_bf16(compress_bf16(corrected), corrected.dtype)
+        sent = compress_bf16(corrected).astype(jnp.float32)
     elif codec == "int8":
         q, s = quantize_int8(corrected, chunk)
-        sent = dequantize_int8(q, s, corrected.size, corrected.dtype).reshape(
-            corrected.shape)
+        sent = dequantize_int8(q, s, corrected.size).reshape(corrected.shape)
+    elif codec == "wire_int8":
+        flat = corrected.reshape(-1)
+        q, s = quantize_wire(flat)
+        sent = dequantize_wire(q, s).reshape(corrected.shape)
     else:
         raise ValueError(codec)
-    return sent, corrected - sent
+    sent = sent.astype(grad.dtype)
+    return sent, corrected - sent.astype(jnp.float32)

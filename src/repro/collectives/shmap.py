@@ -27,6 +27,7 @@ import numpy as np
 from jax import lax
 
 from repro import compat
+from repro.collectives import compression as comp
 from repro.core import tables as tb
 from repro.core.schedules import BLOCK_ALL, KIND_REDUCE, Schedule
 
@@ -187,6 +188,98 @@ def allgather(x, axis: Axis, algo: str = "bine"):
     blk = v.shape[0]
     v = _ag_core(v, axis, bt)
     return v.reshape(p, blk)[jnp.asarray(bt.final_block)].reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# int8-wire butterfly RS / AG (quantized payload, f32 accumulation)
+# ---------------------------------------------------------------------------
+# Same schedules and the same ``kept + recv`` operand order as the f32
+# cores, but the bytes that travel are int8 + per-chunk f32 scales
+# (``compression.quantize_wire``'s shared chunk rule).  RS re-quantizes the
+# freshly accumulated half before each send; AG quantizes once at entry,
+# moves (q, scales) pairs through the whole butterfly, and decodes once at
+# the end — so every rank (the block owner included) uses the decoded
+# values and params stay consistent across ranks.
+
+def _rs_core_q(buf, axis: Axis, bt: tb.ButterflyTables):
+    """int8-wire vector-halving RS.  ``buf`` float32, len % p == 0.
+
+    Step i: quantize the (1-c)-half at ``wire_chunk(half)``, ship
+    (q, scales), dequantize the partner's half and accumulate in f32.
+    Only what travels is quantized — the kept half stays full precision.
+    """
+    idx = axis_index(axis)
+    for i in range(bt.s):
+        half = buf.shape[0] // 2
+        c = jnp.asarray(bt.cbit[i])[idx]
+        send = lax.dynamic_slice(buf, ((1 - c) * half,), (half,))
+        kept = lax.dynamic_slice(buf, (c * half,), (half,))
+        q, s = comp.quantize_wire(send)
+        rq = lax.ppermute(q, axis, perm=list(bt.perms[i]))
+        rs = lax.ppermute(s, axis, perm=list(bt.perms[i]))
+        buf = kept + comp.dequantize_wire(rq, rs)
+    return buf
+
+
+def _ag_core_q(q, s, axis: Axis, bt: tb.ButterflyTables):
+    """int8-wire vector-doubling AG on an encoded (q, scales) pair.
+
+    The c-ordered merges apply to q and scales separately; their windows
+    double together because the codec chunk divides the block.
+    """
+    idx = axis_index(axis)
+    for i in range(bt.s - 1, -1, -1):
+        rq = lax.ppermute(q, axis, perm=list(bt.perms[i]))
+        rs = lax.ppermute(s, axis, perm=list(bt.perms[i]))
+        c = jnp.asarray(bt.cbit[i])[idx]
+        q = jnp.where(c == 0, jnp.concatenate([q, rq]),
+                      jnp.concatenate([rq, q]))
+        s = jnp.where(c == 0, jnp.concatenate([s, rs]),
+                      jnp.concatenate([rs, s]))
+    return q, s
+
+
+def reduce_scatter_q(x, axis: Axis, algo: str = "bine"):
+    """int8-wire reduce-scatter: full vector -> this rank's reduced block
+    (float32).  NOT bit-identical to the f32 path — each received half
+    carries per-element error bounded by its chunk scale / 2 — but
+    bit-identical to the ``pallas_fused`` int8 path, which quantizes at
+    the same points with the same arithmetic."""
+    p = axis_size(axis)
+    v = x.reshape(-1).astype(jnp.float32)
+    if p == 1:
+        return v.reshape(x.shape)
+    if algo not in _KIND:
+        raise ValueError(f"int8 wire supports bine/recdoub, not {algo!r}")
+    bt = tb.butterfly_tables(_KIND[algo], p)
+    assert v.shape[0] % p == 0, "reduce_scatter needs len divisible by p"
+    blk = v.shape[0] // p
+    v = v.reshape(p, blk)[jnp.asarray(bt.inv_final)].reshape(-1)
+    return _rs_core_q(v, axis, bt)
+
+
+def allgather_q(x, axis: Axis, algo: str = "bine"):
+    """int8-wire allgather: this rank's block -> full vector (float32).
+
+    Quantize-once / move / dequantize-once: the block is encoded at entry,
+    the butterfly moves (q, scales), and the final un-permuted vector is
+    decoded in one pass — own block included, so all ranks hold identical
+    values with a single quantization error."""
+    p = axis_size(axis)
+    v = x.reshape(-1).astype(jnp.float32)
+    if p == 1:
+        return v
+    if algo not in _KIND:
+        raise ValueError(f"int8 wire supports bine/recdoub, not {algo!r}")
+    bt = tb.butterfly_tables(_KIND[algo], p)
+    blk = v.shape[0]
+    q, s = comp.quantize_wire(v)
+    q, s = _ag_core_q(q, s, axis, bt)
+    ch = comp.wire_chunk(blk)
+    fb = jnp.asarray(bt.final_block)
+    q = q.reshape(p, blk)[fb].reshape(-1)
+    s = s.reshape(p, blk // ch)[fb].reshape(-1)
+    return comp.dequantize_wire(q, s)
 
 
 # ---------------------------------------------------------------------------

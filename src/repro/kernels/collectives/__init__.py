@@ -10,9 +10,11 @@ unfused op/byte emission accounting for the dry-run roofline).
 
 from . import plan
 from .kernel import (ag_step_kernel, gather_matmul_kernel,
-                     matmul_pack_kernel, ring_update_kernel, rs_step_kernel)
+                     matmul_pack_kernel, ring_update_kernel, rs_step_kernel,
+                     rs_step_kernel_q)
 from .ops import (ALGOS, allgather, allgather_dim, allgather_matmul,
-                  allreduce, default_interpret, matmul_reduce_scatter,
-                  reduce_scatter, reduce_scatter_dim)
+                  allgather_q, allreduce, default_interpret,
+                  matmul_reduce_scatter, reduce_scatter, reduce_scatter_dim,
+                  reduce_scatter_q)
 from .ref import (ag_step_ref, gather_matmul_ref, matmul_pack_ref,
-                  ring_update_ref, rs_step_ref)
+                  ring_update_ref, rs_step_ref, rs_step_ref_q)

@@ -132,6 +132,119 @@ def rs_step_kernel(buf, recv, c, c_next=None, *, interpret: bool = True):
 
 
 # ---------------------------------------------------------------------------
+# int8-wire reduce-scatter step: dequantize + reduce + re-quantize, one pass
+# ---------------------------------------------------------------------------
+
+def _rs_step_q_body_send(cs_ref, buf_ref, rq_ref, rs_ref, out_ref, sq_ref,
+                         ss_ref, *, chunk, w, ch_r, ch_s):
+    j = pl.program_id(0)
+    deq = (rq_ref[...].astype(jnp.float32).reshape(chunk // ch_r, ch_r)
+           * rs_ref[...][:, None]).reshape(chunk)
+    v = buf_ref[...] + deq
+    out_ref[...] = v
+    w0 = (1 - cs_ref[1]) * w
+    base = j * chunk
+
+    @pl.when(jnp.logical_and(base >= w0, base < w0 + w))
+    def _():
+        from repro.collectives.compression import pow2_scale
+        m = v.reshape(chunk // ch_s, ch_s)
+        scale = pow2_scale(jnp.max(jnp.abs(m), axis=1) / 127.0)
+        q = jnp.clip(jnp.round(m / scale[:, None]), -127,
+                     127).astype(jnp.int8)
+        sq_ref[pl.ds(base - w0, chunk)] = q.reshape(chunk)
+        ss_ref[pl.ds((base - w0) // ch_s, chunk // ch_s)] = scale
+
+
+def _rs_step_q_body_nosend(cs_ref, buf_ref, rq_ref, rs_ref, out_ref, *,
+                           chunk, ch_r):
+    deq = (rq_ref[...].astype(jnp.float32).reshape(chunk // ch_r, ch_r)
+           * rs_ref[...][:, None]).reshape(chunk)
+    out_ref[...] = buf_ref[...] + deq
+
+
+def rs_step_kernel_q(buf, recv_q, recv_s, c, c_next=None, *,
+                     interpret: bool = True):
+    """int8-wire twin of :func:`rs_step_kernel` (oracle:
+    ``ref.rs_step_ref_q``).
+
+    ``buf``: [2h] float32; ``recv_q``: [h] int8; ``recv_s``: [h // ch]
+    float32 per-chunk scales (``ch = compression.wire_chunk(h)``).  Each
+    grid block dequantizes its slice of the received payload, accumulates
+    against the kept half in float32, and — with ``c_next`` given —
+    re-quantizes its slice of the next outgoing half (per-codec-chunk
+    scales computed in-block) in the same HBM pass: int8 stays on the
+    wire, f32 only ever lives in the accumulation.
+
+    The codec chunk must divide the grid chunk so scales stay blockwise:
+    the send variant requires ``h % 512 == 0`` (callers fall back to the
+    shmap int8 path — bit-identical by construction — when the payload is
+    not 256-aligned per rank block).
+    """
+    from repro.collectives import compression as comp
+
+    h = recv_q.shape[0]
+    assert buf.shape == (2 * h,), (buf.shape, h)
+    ch_r = comp.wire_chunk(h)
+    assert recv_s.shape == (h // ch_r,), (recv_s.shape, h, ch_r)
+    if c_next is None:
+        chunk = _pow2_divisor(h)
+        assert chunk % ch_r == 0, (chunk, ch_r)
+        nch = h // chunk
+        cs = jnp.stack([jnp.asarray(c, jnp.int32)])
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(nch,),
+            in_specs=[
+                pl.BlockSpec((chunk,), lambda j, cs: (cs[0] * nch + j,)),
+                pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+                pl.BlockSpec((chunk // ch_r,), lambda j, cs: (j,)),
+            ],
+            out_specs=pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+        )
+        return pl.pallas_call(
+            functools.partial(_rs_step_q_body_nosend, chunk=chunk,
+                              ch_r=ch_r),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((h,), jnp.float32),
+            interpret=interpret,
+        )(cs, buf, recv_q, recv_s)
+
+    assert h % 512 == 0, (
+        f"rs_step_kernel_q send variant needs h % 512 == 0, got {h}")
+    w = h // 2
+    ch_s = comp.wire_chunk(w)
+    chunk = _pow2_divisor(w)
+    assert chunk % ch_r == 0 and chunk % ch_s == 0, (chunk, ch_r, ch_s)
+    nch = h // chunk
+    cs = jnp.stack([jnp.asarray(c, jnp.int32),
+                    jnp.asarray(c_next, jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(nch,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda j, cs: (cs[0] * nch + j,)),
+            pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+            pl.BlockSpec((chunk // ch_r,), lambda j, cs: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda j, cs: (j,)),
+            # the outgoing (q, scales) pair stays resident for the whole
+            # grid; window chunks stream into it as they are re-quantized
+            pl.BlockSpec((w,), lambda j, cs: (0,)),
+            pl.BlockSpec((w // ch_s,), lambda j, cs: (0,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_rs_step_q_body_send, chunk=chunk, w=w,
+                          ch_r=ch_r, ch_s=ch_s),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((h,), jnp.float32),
+                   jax.ShapeDtypeStruct((w,), jnp.int8),
+                   jax.ShapeDtypeStruct((w // ch_s,), jnp.float32)],
+        interpret=interpret,
+    )(cs, buf, recv_q, recv_s)
+
+
+# ---------------------------------------------------------------------------
 # Allgather step: fused c-ordered merge
 # ---------------------------------------------------------------------------
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.collectives import compression as comp
 from repro.collectives import shmap
 from repro.core import tables as tb
 
@@ -81,6 +82,99 @@ def _ag_core_fused(buf, axis: Axis, bt: tb.ButterflyTables, interpret):
         c = jnp.asarray(bt.cbit[i])[idx]
         buf = K.ag_step_kernel(buf, recv, c, interpret=interpret)
     return buf
+
+
+# ---------------------------------------------------------------------------
+# int8-wire butterfly cores (quantized payload, f32 accumulation in-kernel)
+# ---------------------------------------------------------------------------
+
+def _rs_core_fused_q(buf, axis: Axis, bt: tb.ButterflyTables, interpret):
+    """int8 on the wire: each step ppermutes the (q, scales) pair the
+    previous ``rs_step_kernel_q`` re-quantized; the kernel dequantizes the
+    received half, accumulates in f32, and packs the next quantized send
+    in the same HBM pass.  The first step's pack has no earlier kernel to
+    ride, so it is a bare slice + ``quantize_wire``."""
+    idx = shmap.axis_index(axis)
+    half = buf.shape[0] // 2
+    c = jnp.asarray(bt.cbit[0])[idx]
+    send = lax.dynamic_slice(buf, ((1 - c) * half,), (half,))
+    q, s = comp.quantize_wire(send)
+    for i in range(bt.s):
+        rq = lax.ppermute(q, axis, perm=list(bt.perms[i]))
+        rs = lax.ppermute(s, axis, perm=list(bt.perms[i]))
+        if i + 1 < bt.s:
+            c_next = jnp.asarray(bt.cbit[i + 1])[idx]
+            buf, q, s = K.rs_step_kernel_q(buf, rq, rs, c, c_next,
+                                           interpret=interpret)
+            c = c_next
+        else:
+            buf = K.rs_step_kernel_q(buf, rq, rs, c, interpret=interpret)
+    return buf
+
+
+def _ag_core_fused_q(q, s, axis: Axis, bt: tb.ButterflyTables, interpret):
+    """Moves an encoded (q, scales) pair through the butterfly: the int8
+    payload merges through ``ag_step_kernel`` (dtype-agnostic placement
+    pass); the scales — 1/WIRE_CHUNK of the payload — merge as plain
+    concats."""
+    idx = shmap.axis_index(axis)
+    for i in range(bt.s - 1, -1, -1):
+        rq = lax.ppermute(q, axis, perm=list(bt.perms[i]))
+        rs = lax.ppermute(s, axis, perm=list(bt.perms[i]))
+        c = jnp.asarray(bt.cbit[i])[idx]
+        q = K.ag_step_kernel(q, rq, c, interpret=interpret)
+        s = jnp.where(c == 0, jnp.concatenate([s, rs]),
+                      jnp.concatenate([rs, s]))
+    return q, s
+
+
+def reduce_scatter_q(x, axis: Axis, algo: str = "bine", interpret=None):
+    """int8-wire fused reduce-scatter: full vector -> this rank's reduced
+    block (float32).  Bit-identical to ``shmap.reduce_scatter_q`` (same
+    quantize points, same arithmetic); NOT bit-identical to the f32 path —
+    per-element error is bounded by the received chunk's scale / 2.
+
+    The fused step kernel needs the per-rank block 256-aligned so codec
+    chunks stay blockwise; other payloads fall back to the (bit-identical)
+    shmap int8 path.
+    """
+    p = shmap.axis_size(axis)
+    v = x.reshape(-1).astype(jnp.float32)
+    if p == 1:
+        return v.reshape(x.shape)
+    if algo not in _KIND:
+        raise ValueError(f"int8 wire supports bine/recdoub, not {algo!r}")
+    assert v.shape[0] % p == 0, "reduce_scatter needs len divisible by p"
+    blk = v.shape[0] // p
+    if blk % comp.WIRE_CHUNK:
+        return shmap.reduce_scatter_q(v, axis, algo)
+    interpret = _interp(interpret)
+    bt = tb.butterfly_tables(_KIND[algo], p)
+    v = v.reshape(p, blk)[jnp.asarray(bt.inv_final)].reshape(-1)
+    return _rs_core_fused_q(v, axis, bt, interpret)
+
+
+def allgather_q(x, axis: Axis, algo: str = "bine", interpret=None):
+    """int8-wire fused allgather: this rank's block -> full vector
+    (float32).  Quantize-once / move / dequantize-once, exactly as
+    ``shmap.allgather_q`` — every rank decodes the same (q, scales)
+    vector, own block included, so gathered params agree across ranks."""
+    p = shmap.axis_size(axis)
+    v = x.reshape(-1).astype(jnp.float32)
+    if p == 1:
+        return v
+    if algo not in _KIND:
+        raise ValueError(f"int8 wire supports bine/recdoub, not {algo!r}")
+    interpret = _interp(interpret)
+    bt = tb.butterfly_tables(_KIND[algo], p)
+    blk = v.shape[0]
+    q, s = comp.quantize_wire(v)
+    q, s = _ag_core_fused_q(q, s, axis, bt, interpret)
+    ch = comp.wire_chunk(blk)
+    fb = jnp.asarray(bt.final_block)
+    q = q.reshape(p, blk)[fb].reshape(-1)
+    s = s.reshape(p, blk // ch)[fb].reshape(-1)
+    return comp.dequantize_wire(q, s)
 
 
 # ---------------------------------------------------------------------------

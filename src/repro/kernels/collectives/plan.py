@@ -158,6 +158,20 @@ def path_plans(collective: str, algo: str, p: int, nelems: int,
     return (_concat(urs, uag), _concat(frs, fag))
 
 
+def wire_payload_bytes(collective: str, algo: str, p: int, nelems: int,
+                       wire_dtype: str = "float32") -> float:
+    """Per-rank wire bytes of one invocation under a wire codec.
+
+    The schedule (and hence the element traffic) is wire-dtype-invariant;
+    only the bytes per element change — int8 includes the per-chunk f32
+    scale metadata (``compression.WIRE_BYTES_PER_ELEM``).  This is the
+    ``wire_bytes_per_step`` accounting ``bench_bucketed_grads.py`` emits.
+    """
+    from repro.collectives.compression import wire_factor
+    unfused, _ = path_plans(collective, algo, p, nelems, itemsize=4)
+    return unfused.wire_bytes * wire_factor(wire_dtype)
+
+
 def _concat(a: PathPlan, b: PathPlan) -> PathPlan:
     return PathPlan(a.ops + b.ops, a.hbm_bytes + b.hbm_bytes,
                     a.ppermute_ops + b.ppermute_ops,

@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from repro.collectives import compression as comp
+
 
 def rs_step_ref(buf, recv, c, c_next=None):
     """One vector-halving reduce-scatter step (paper Sec. 4.3).
@@ -32,6 +34,28 @@ def rs_step_ref(buf, recv, c, c_next=None):
     q = h // 2
     send = lax.dynamic_slice(newbuf, ((1 - c_next) * q,), (q,))
     return newbuf, send
+
+
+def rs_step_ref_q(buf, recv_q, recv_s, c, c_next=None):
+    """int8-wire RS step oracle: dequantize the partner's transmitted half
+    (``recv_q`` int8 + ``recv_s`` per-chunk f32 scales), accumulate in f32
+    against the kept half, and — with ``c_next`` given — re-quantize the
+    next outgoing half at the shared chunk rule, all in one pass.
+
+    The Pallas twin (``kernel.rs_step_kernel_q``) must reproduce this
+    bitwise; ``collectives.shmap._rs_core_q`` computes the same values
+    with the same operand order, which is what makes the fused and shmap
+    int8 paths decode bit-identically.
+    """
+    h = recv_q.shape[0]
+    newbuf = (lax.dynamic_slice(buf, (c * h,), (h,))
+              + comp.dequantize_wire(recv_q, recv_s))
+    if c_next is None:
+        return newbuf
+    w = h // 2
+    send = lax.dynamic_slice(newbuf, ((1 - c_next) * w,), (w,))
+    q, s = comp.quantize_wire(send)
+    return newbuf, q, s
 
 
 def ag_step_ref(buf, recv, c):

@@ -38,7 +38,8 @@ def sds(shape, dtype, sharding=None):
 
 def input_specs(arch: str, shape: str, mesh, backend: str = "bine",
                 bucket_bytes: int = -1,
-                tuning: str = "analytic") -> Dict[str, Any]:
+                tuning: str = "analytic",
+                wire_dtype: str = "float32") -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
     allocation) for every model input of the given cell, plus the step
     callable to lower.  Returns dict(step=fn, args=tuple_of_SDS, meta=...)."""
@@ -69,7 +70,8 @@ def input_specs(arch: str, shape: str, mesh, backend: str = "bine",
 
     if sc.kind == "train":
         tcfg = TrainConfig(backend=backend, dp_axes=dp,
-                           bucket_bytes=bucket_bytes, tuning=tuning)
+                           bucket_bytes=bucket_bytes, tuning=tuning,
+                           wire_dtype=wire_dtype)
         step_fn, shardings, layout = make_train_step(cfg, tcfg, mesh,
                                                      params_shapes)
         state_shapes = jax.eval_shape(
@@ -137,7 +139,14 @@ def _opt_shapes(cfg, tcfg, params, n_dp):
                 for k in ("master", "m", "v")}
 
     opt = jax.tree.map(one, params, layout)
-    return {"opt": opt, "step": jnp.zeros((), jnp.int32)}
+    state = {"opt": opt, "step": jnp.zeros((), jnp.int32)}
+    # int8-wire buckets carry a GLOBAL (n_dp, L) error-feedback residual
+    from repro.train.step import _ef_init, resolve_bucket_plan
+    ef = _ef_init(tcfg, resolve_bucket_plan(tcfg, n_dp, params, layout))
+    if ef:
+        state["ef"] = {bid: jnp.zeros((n_dp, v.shape[1]), jnp.float32)
+                       for bid, v in ef.items()}
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -157,12 +166,14 @@ def model_flops(cfg, sc) -> float:
 def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
              verbose: bool = True, save_hlo: Optional[str] = None,
              bucket_bytes: int = -1,
-             tuning: str = "analytic") -> Dict[str, Any]:
+             tuning: str = "analytic",
+             wire_dtype: str = "float32") -> Dict[str, Any]:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
     pod = 256
     t0 = time.time()
-    spec = input_specs(arch, shape, mesh, backend, bucket_bytes, tuning)
+    spec = input_specs(arch, shape, mesh, backend, bucket_bytes, tuning,
+                       wire_dtype)
     with set_mesh(mesh):
         lowered = spec["step"].lower(*spec["args"])
         t_lower = time.time() - t0
@@ -193,6 +204,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
         "mesh": "2x16x16" if multi_pod else "16x16",
         "backend": backend,
         "tuning": tuning,
+        "wire_dtype": wire_dtype,
         "n_chips": n_chips,
         "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
         "memory": mem_d,
@@ -212,10 +224,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "bine",
                   f"cap={bp['capacity_bytes']}B)")
         for row in spec.get("bucket_decisions") or []:
             print(f"    bucket {row['bucket']}: "
-                  f"rs={row['rs_backend']} ({row['rs_provenance']}, "
-                  f"{row['rs_bytes']}B) "
-                  f"ag={row['ag_backend']} ({row['ag_provenance']}, "
-                  f"{row['ag_bytes']}B)")
+                  f"rs={row['rs_backend']}/{row['rs_wire']} "
+                  f"({row['rs_provenance']}, {row['rs_bytes']}B) "
+                  f"ag={row['ag_backend']}/{row['ag_wire']} "
+                  f"({row['ag_provenance']}, {row['ag_bytes']}B)")
         print(f"  memory_analysis: {mem_d}")
         ca = compiled.cost_analysis()
         if isinstance(ca, list):
@@ -248,6 +260,10 @@ def main(argv=None):
     ap.add_argument("--bucket-bytes", type=int, default=-1,
                     help="gradient-bucket capacity (wire bytes); "
                          "-1 = decision table, 0 = per-leaf collectives")
+    ap.add_argument("--wire-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8", "auto"],
+                    help="gradient/param wire compression (int8 = pow2-scale"
+                         " codec + error feedback; auto = per-bucket table)")
     ap.add_argument("--tuning", default="analytic",
                     choices=["analytic", "measured"],
                     help="decision-table provenance for backend=auto: "
@@ -274,7 +290,8 @@ def main(argv=None):
                 res = run_cell(arch, shape, mp, args.backend,
                                save_hlo=args.save_hlo,
                                bucket_bytes=args.bucket_bytes,
-                               tuning=args.tuning)
+                               tuning=args.tuning,
+                               wire_dtype=args.wire_dtype)
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
             except Exception as e:

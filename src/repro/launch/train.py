@@ -45,7 +45,10 @@ def main(argv=None):
     ap.add_argument("--topology", default="tpu_multipod",
                     help="decision-table preset for --backend auto")
     ap.add_argument("--wire-dtype", default="float32",
-                    choices=["float32", "bfloat16"])
+                    choices=["float32", "bfloat16", "int8", "auto"],
+                    help="gradient/param wire compression; int8 = pow2-scale "
+                         "wire codec with error feedback (bucketed path), "
+                         "auto = per-bucket (backend, wire) table lookup")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--warmup", type=int, default=20)

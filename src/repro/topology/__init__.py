@@ -15,23 +15,26 @@ small/latency-bound regime.  This package closes the loop automatically:
 """
 
 from .cost import (BUCKET_SIZE_CANDIDATES, CANDIDATES, SMALL_CUTOFF_BYTES,
+                   WIRE_CODEC_BACKENDS, WIRE_CODEC_COLLECTIVES,
                    candidates_for, optimal_bucket_bytes, predict_bucket_time,
-                   predict_time, schedule_algo)
+                   predict_time, schedule_algo, wire_candidates)
 from .presets import PRESETS, get_topology, tier_split, torus_dims
 from .table import (ANALYTIC, MEASURED, P_GRID, SIZE_BUCKETS, TUNINGS,
                     DecisionTable, build_table, decision_provenance,
                     load_table, measured_dir, measured_table_path,
                     merge_measured, select_backend, select_bucket_bytes,
-                    table_path, with_measured_cells)
+                    select_wire, table_path, wire_decision_provenance,
+                    with_measured_cells)
 
 __all__ = [
     "BUCKET_SIZE_CANDIDATES", "CANDIDATES", "SMALL_CUTOFF_BYTES",
+    "WIRE_CODEC_BACKENDS", "WIRE_CODEC_COLLECTIVES",
     "candidates_for", "optimal_bucket_bytes", "predict_bucket_time",
-    "predict_time", "schedule_algo",
+    "predict_time", "schedule_algo", "wire_candidates",
     "PRESETS", "get_topology", "tier_split", "torus_dims",
     "ANALYTIC", "MEASURED", "P_GRID", "SIZE_BUCKETS", "TUNINGS",
     "DecisionTable", "build_table", "decision_provenance", "load_table",
     "measured_dir", "measured_table_path", "merge_measured",
-    "select_backend", "select_bucket_bytes", "table_path",
-    "with_measured_cells",
+    "select_backend", "select_bucket_bytes", "select_wire", "table_path",
+    "wire_decision_provenance", "with_measured_cells",
 ]

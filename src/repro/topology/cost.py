@@ -64,6 +64,25 @@ FUSED_STEP_OVERHEAD_S = 1.0e-6
 #: backends executed by ``repro.kernels.collectives`` fused step kernels
 FUSED_BACKENDS = ("pallas_fused",)
 
+#: collectives / backends that can put a compressed dtype on the wire.
+#: int8/bf16 wire is implemented for the butterfly reduce-scatter and
+#: allgather paths only (``collectives.shmap.reduce_scatter_q`` /
+#: ``allgather_q`` and the fused ``kernels.collectives.ops`` twins);
+#: everything else stays float32.
+WIRE_CODEC_COLLECTIVES = ("reduce_scatter", "allgather")
+WIRE_CODEC_BACKENDS = ("bine", "recdoub", "pallas_fused")
+
+#: extra HBM round trips the *unfused* shmap codec path pays per step:
+#: the quantized send and the dequantized recv are materialized as
+#: separate HLO values.  The fused step kernels fold encode/decode into
+#: the same single pass as the reduction, so they pay none.
+CODEC_HBM_PASSES = 2.0
+
+#: per-step codec compute overhead (scale reduction + rounding), charged
+#: whenever a non-f32 wire dtype is in play.  Keeps tiny latency-bound
+#: payloads on float32: the bandwidth saved must outweigh the codec work.
+CODEC_STEP_OVERHEAD_S = 5.0e-7
+
 #: HBM round trips of one AdamW step on a gradient shard: read g/m/v/master,
 #: write m/v/master, write the wire-dtype new param, plus the mhat/vhat
 #: normalization traffic — the local work a bucket's allgather overlaps.
@@ -156,6 +175,24 @@ def candidates_for(collective: str, topology: str) -> Tuple[str, ...]:
     return cands
 
 
+def wire_candidates(collective: str,
+                    topology: str) -> Tuple[Tuple[str, str], ...]:
+    """``(backend, wire_dtype)`` pairs the joint argmin minimizes over.
+
+    Every plain backend candidate at float32 comes first (so ties break
+    toward the uncompressed wire, exactly like the backend-only table),
+    then the codec-capable backends at bfloat16 and int8 — but only for
+    the collectives the codec paths implement (``WIRE_CODEC_COLLECTIVES``).
+    """
+    cands = candidates_for(collective, topology)
+    pairs = [(b, "float32") for b in cands]
+    if collective in WIRE_CODEC_COLLECTIVES:
+        for wire in ("bfloat16", "int8"):
+            pairs.extend((b, wire) for b in cands
+                         if b in WIRE_CODEC_BACKENDS)
+    return tuple(pairs)
+
+
 def schedule_algo(collective: str, backend: str, nbytes: float,
                   small_cutoff_bytes: int = SMALL_CUTOFF_BYTES
                   ) -> Tuple[str, str]:
@@ -199,27 +236,64 @@ def _local_mem_time(sched: Sched, p: int, nbytes: float,
     return t
 
 
+def _wire_scale(collective: str, backend: str, wire_dtype: str) -> float:
+    """Wire-byte multiplier for ``wire_dtype``, validating the combo.
+
+    float32 is always 1.0; a compressed wire is only meaningful on the
+    collective/backend pairs that implement the codec paths.
+    """
+    if wire_dtype == "float32":
+        return 1.0
+    from repro.collectives.compression import WIRE_DTYPES, wire_factor
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire dtype {wire_dtype!r}; expected one "
+                         f"of {WIRE_DTYPES}")
+    if (collective not in WIRE_CODEC_COLLECTIVES
+            or backend not in WIRE_CODEC_BACKENDS):
+        raise ValueError(
+            f"wire_dtype={wire_dtype!r} is not implemented for "
+            f"({collective!r}, backend={backend!r}); codec wires exist for "
+            f"{WIRE_CODEC_COLLECTIVES} on {WIRE_CODEC_BACKENDS}")
+    return wire_factor(wire_dtype)
+
+
 def predict_time(collective: str, backend: str, p: int, nbytes: float,
                  topo: Union[GroupedTopo, TorusTopo],
-                 small_cutoff_bytes: int = SMALL_CUTOFF_BYTES) -> float:
+                 small_cutoff_bytes: int = SMALL_CUTOFF_BYTES,
+                 wire_dtype: str = "float32") -> float:
     """Modeled completion time (seconds) of one collective invocation.
 
     Wire time (α-β/contention) plus the local-memory term (see module
     docstring).  ``nbytes`` is the *full-vector* payload (the convention
     of ``core.traffic.msg_bytes``); ``p`` must be a power of two, like
     every schedule in ``core.schedules``.
+
+    ``wire_dtype`` compresses the wire only: the schedule is unchanged
+    (size-regime switching still keys on the float32 ``nbytes``) and the
+    β term sees ``nbytes × wire_factor``, while the local term still
+    moves float32 payloads through HBM — plus the codec charge: the
+    unfused shmap codec path materializes encode/decode as
+    ``CODEC_HBM_PASSES`` extra round trips, the fused kernels fold them
+    into their single pass, and both pay ``CODEC_STEP_OVERHEAD_S`` per
+    step.  At float32 the result is bit-for-bit the pre-codec model.
     """
+    wscale = _wire_scale(collective, backend, wire_dtype)
     sched_coll, algo = schedule_algo(collective, backend, nbytes,
                                      small_cutoff_bytes)
     sched = _cached_schedule(sched_coll, algo, p)
     if isinstance(topo, TorusTopo):
-        wire = torus_time(sched, p, float(nbytes), topo)
+        wire = torus_time(sched, p, float(nbytes) * wscale, topo)
     else:
-        wire = sched_time(sched, p, float(nbytes), topo)
+        wire = sched_time(sched, p, float(nbytes) * wscale, topo)
     passes = hbm_passes(backend, algo)
     local = _local_mem_time(sched, p, float(nbytes), passes)
     if passes == FUSED_HBM_PASSES:
         local += FUSED_STEP_OVERHEAD_S * len(sched)
+    if wire_dtype != "float32":
+        if passes != FUSED_HBM_PASSES:
+            local += _local_mem_time(sched, p, float(nbytes),
+                                     CODEC_HBM_PASSES)
+        local += CODEC_STEP_OVERHEAD_S * len(sched)
     return wire + local
 
 

@@ -7,13 +7,16 @@ serialized to JSON so production tracing never re-runs the simulator.
 On-disk format (see README for the worked example)::
 
     {
-      "format": 2,
+      "format": 3,
       "topology": "tpu_multipod",
       "small_cutoff_bytes": 16384,
       "ps": [4, 8, ...],
       "size_buckets": [256, 1024, ...],      # inclusive upper edges, bytes
       "entries": {"allreduce": {"4": ["recdoub", ...]}, ...},
-      "provenance": {"allreduce": {"4": ["measured", "analytic", ...]}}
+      "provenance": {"allreduce": {"4": ["measured", "analytic", ...]}},
+      "wire_entries": {"reduce_scatter":
+                       {"4": [["bine", "float32"], ...]}, ...},
+      "wire_provenance": {"reduce_scatter": {"4": ["analytic", ...]}}
     }
 
 ``entries[collective][str(p)][i]`` is the backend for vectors whose payload
@@ -26,6 +29,13 @@ decision came from: ``"analytic"`` (the cost-model argmin) or
 ``"measured"`` (the empirical tuner's argmin over real timings,
 ``repro.tuner.refresh``).  It is optional — format-1 tables, including
 every packaged analytic table, parse unchanged and read as all-analytic.
+
+``wire_entries`` (format 3) holds the **joint** ``(backend, wire_dtype)``
+argmin over ``cost.wire_candidates`` for the collectives with a codec
+wire path (reduce_scatter / allgather); ``wire_provenance`` mirrors it.
+``entries`` stays the float32-pinned backend argmin, so formats 1/2 and
+``select_backend`` keep their exact meaning — older tables parse with
+wire decisions defaulting to ``(entries backend, "float32")``.
 
 Tables for all presets ship with the package under ``topology/tables/``;
 ``load_table`` falls back to building (and caching) one on first use for
@@ -47,14 +57,16 @@ from bisect import bisect_left
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from .cost import (CANDIDATES, SMALL_CUTOFF_BYTES, candidates_for,
-                   optimal_bucket_bytes, predict_time)
+from .cost import (CANDIDATES, SMALL_CUTOFF_BYTES, WIRE_CODEC_COLLECTIVES,
+                   candidates_for, optimal_bucket_bytes, predict_time,
+                   wire_candidates)
 from .presets import PRESETS, get_topology
 
-_FORMAT = 2
+_FORMAT = 3
 #: formats ``from_json_dict`` accepts: 1 = pre-provenance (all packaged
-#: analytic tables), 2 = adds the per-cell provenance map
-_COMPAT_FORMATS = (1, 2)
+#: analytic tables), 2 = adds the per-cell provenance map, 3 = adds the
+#: joint (backend, wire_dtype) rows
+_COMPAT_FORMATS = (1, 2, 3)
 
 #: decision provenance values
 ANALYTIC = "analytic"
@@ -86,6 +98,15 @@ class DecisionTable:
     # ``entries``; empty = every decision is analytic (format-1 tables)
     provenance: Dict[str, Dict[int, Tuple[str, ...]]] = \
         field(default_factory=dict)
+    # collective -> p -> [(backend, wire_dtype) per size bucket]: the joint
+    # argmin over cost.wire_candidates, stored only for the collectives
+    # with a codec wire path.  Empty on format-1/2 tables — lookups fall
+    # back to (entries backend, "float32").
+    wire_entries: Dict[str, Dict[int, Tuple[Tuple[str, str], ...]]] = \
+        field(default_factory=dict)
+    # mirrors ``wire_entries`` cell-for-cell with "measured"/"analytic"
+    wire_provenance: Dict[str, Dict[int, Tuple[str, ...]]] = \
+        field(default_factory=dict)
 
     # -- lookup ------------------------------------------------------------
 
@@ -107,6 +128,33 @@ class DecisionTable:
     def provenance_of(self, collective: str, p: int, nbytes: float) -> str:
         """Where the ``lookup`` decision for this cell came from."""
         per_p = self.provenance.get(collective)
+        if not per_p:
+            return ANALYTIC
+        q = p if p in per_p else self.nearest_p(p)
+        row = per_p.get(q)
+        return row[self.bucket_of(nbytes)] if row else ANALYTIC
+
+    def lookup_wire(self, collective: str, p: int,
+                    nbytes: float) -> Tuple[str, str]:
+        """Joint ``(backend, wire_dtype)`` decision for this cell.
+
+        Collectives without a wire row — every collective on format-1/2
+        tables, and the codec-less collectives everywhere — fall back to
+        the float32-pinned backend decision with an uncompressed wire.
+        """
+        per_p = self.wire_entries.get(collective)
+        if not per_p:
+            return self.lookup(collective, p, nbytes), "float32"
+        q = p if p in per_p else self.nearest_p(p)
+        row = per_p.get(q)
+        if not row:
+            return self.lookup(collective, p, nbytes), "float32"
+        return row[self.bucket_of(nbytes)]
+
+    def wire_provenance_of(self, collective: str, p: int,
+                           nbytes: float) -> str:
+        """Where the ``lookup_wire`` decision for this cell came from."""
+        per_p = self.wire_provenance.get(collective)
         if not per_p:
             return ANALYTIC
         q = p if p in per_p else self.nearest_p(p)
@@ -146,6 +194,15 @@ class DecisionTable:
             d["provenance"] = {
                 c: {str(p): list(row) for p, row in per_p.items()}
                 for c, per_p in self.provenance.items()}
+        if self.wire_entries:
+            d["wire_entries"] = {
+                c: {str(p): [list(cell) for cell in row]
+                    for p, row in per_p.items()}
+                for c, per_p in self.wire_entries.items()}
+        if self.wire_provenance:
+            d["wire_provenance"] = {
+                c: {str(p): list(row) for p, row in per_p.items()}
+                for c, per_p in self.wire_provenance.items()}
         return d
 
     @classmethod
@@ -163,6 +220,13 @@ class DecisionTable:
                           for p, v in d.get("bucket_bytes", {}).items()},
             provenance={c: {int(p): tuple(row) for p, row in per_p.items()}
                         for c, per_p in d.get("provenance", {}).items()},
+            wire_entries={
+                c: {int(p): tuple((cell[0], cell[1]) for cell in row)
+                    for p, row in per_p.items()}
+                for c, per_p in d.get("wire_entries", {}).items()},
+            wire_provenance={
+                c: {int(p): tuple(row) for p, row in per_p.items()}
+                for c, per_p in d.get("wire_provenance", {}).items()},
         )
 
     def save(self, path: str) -> None:
@@ -191,27 +255,46 @@ def build_table(topology: str,
 
     Each bucket is priced at its upper edge; ties break toward the earlier
     entry in ``CANDIDATES[collective]`` (deterministic across rebuilds).
+
+    The ``wire_entries`` rows run the same argmin over the joint
+    ``cost.wire_candidates`` grid for the codec collectives; the float32
+    pairs enumerate first, so on a tie the uncompressed wire wins and a
+    cell only flips to bf16/int8 where the modeled bandwidth saving beats
+    the codec charge.  ``entries`` itself stays float32-pinned.
     """
     entries: Dict[str, Dict[int, Tuple[str, ...]]] = {}
+    wire_entries: Dict[str, Dict[int, Tuple[Tuple[str, str], ...]]] = {}
     for collective in CANDIDATES:
         cands = candidates_for(collective, topology)
+        wcands = wire_candidates(collective, topology)
         per_p: Dict[int, Tuple[str, ...]] = {}
+        wire_per_p: Dict[int, Tuple[Tuple[str, str], ...]] = {}
         for p in ps:
             topo = get_topology(topology, p)
             row: List[str] = []
+            wrow: List[Tuple[str, str]] = []
             for edge in size_buckets:
                 best = min(cands, key=lambda b: predict_time(
                     collective, b, p, edge, topo, small_cutoff_bytes))
                 row.append(best)
+                if collective in WIRE_CODEC_COLLECTIVES:
+                    wrow.append(min(wcands, key=lambda bw: predict_time(
+                        collective, bw[0], p, edge, topo,
+                        small_cutoff_bytes, wire_dtype=bw[1])))
             per_p[p] = tuple(row)
+            if wrow:
+                wire_per_p[p] = tuple(wrow)
         entries[collective] = per_p
+        if wire_per_p:
+            wire_entries[collective] = wire_per_p
     bucket_bytes = {p: optimal_bucket_bytes(
         p, get_topology(topology, p),
         small_cutoff_bytes=small_cutoff_bytes) for p in ps}
     return DecisionTable(topology=topology,
                          small_cutoff_bytes=small_cutoff_bytes,
                          ps=tuple(ps), size_buckets=tuple(size_buckets),
-                         entries=entries, bucket_bytes=bucket_bytes)
+                         entries=entries, bucket_bytes=bucket_bytes,
+                         wire_entries=wire_entries)
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +302,10 @@ def build_table(topology: str,
 # ---------------------------------------------------------------------------
 
 def with_measured_cells(base: DecisionTable,
-                        cells: Dict[Tuple[str, int, int], str]
+                        cells: Dict[Tuple[str, int, int], str],
+                        wire_cells: Optional[
+                            Dict[Tuple[str, int, int],
+                                 Tuple[str, str]]] = None
                         ) -> DecisionTable:
     """Overlay measured decisions onto ``base``.
 
@@ -228,6 +314,10 @@ def with_measured_cells(base: DecisionTable,
     ``"measured"``) and every other cell keeps the analytic entry.  Cells
     off ``base``'s grid raise — measurements snap to the grid upstream in
     ``tuner.refresh``.
+
+    ``wire_cells`` overlays the joint ``(backend, wire_dtype)`` rows the
+    same way; a wire cell for a collective ``base`` carries no wire row
+    for raises (the codec-less collectives have nothing to overlay).
     """
     entries = {c: {p: list(row) for p, row in per_p.items()}
                for c, per_p in base.entries.items()}
@@ -245,6 +335,22 @@ def with_measured_cells(base: DecisionTable,
                            f"the {base.topology!r} table grid")
         entries[coll][p][bucket] = backend
         prov[coll][p][bucket] = MEASURED
+    wentries = {c: {p: list(row) for p, row in per_p.items()}
+                for c, per_p in base.wire_entries.items()}
+    wprov = {c: {p: [ANALYTIC] * len(row) for p, row in per_p.items()}
+             for c, per_p in base.wire_entries.items()}
+    if base.wire_provenance:
+        for c, per_p in base.wire_provenance.items():
+            for p, row in per_p.items():
+                if c in wprov and p in wprov[c]:
+                    wprov[c][p] = list(row)
+    for (coll, p, bucket), pair in (wire_cells or {}).items():
+        if coll not in wentries or p not in wentries[coll] or not (
+                0 <= bucket < nb):
+            raise KeyError(f"measured wire cell ({coll}, {p}, {bucket}) is "
+                           f"off the {base.topology!r} table grid")
+        wentries[coll][p][bucket] = (pair[0], pair[1])
+        wprov[coll][p][bucket] = MEASURED
     return DecisionTable(
         topology=base.topology,
         small_cutoff_bytes=base.small_cutoff_bytes,
@@ -253,7 +359,11 @@ def with_measured_cells(base: DecisionTable,
                  for c, per_p in entries.items()},
         bucket_bytes=dict(base.bucket_bytes),
         provenance={c: {p: tuple(row) for p, row in per_p.items()}
-                    for c, per_p in prov.items()})
+                    for c, per_p in prov.items()},
+        wire_entries={c: {p: tuple(row) for p, row in per_p.items()}
+                      for c, per_p in wentries.items()},
+        wire_provenance={c: {p: tuple(row) for p, row in per_p.items()}
+                         for c, per_p in wprov.items()})
 
 
 def merge_measured(base: DecisionTable,
@@ -277,7 +387,13 @@ def merge_measured(base: DecisionTable,
             for i, src in enumerate(row):
                 if src == MEASURED:
                     cells[(c, p, i)] = measured.entries[c][p][i]
-    return with_measured_cells(base, cells)
+    wire_cells = {}
+    for c, per_p in measured.wire_provenance.items():
+        for p, row in per_p.items():
+            for i, src in enumerate(row):
+                if src == MEASURED and c in base.wire_entries:
+                    wire_cells[(c, p, i)] = measured.wire_entries[c][p][i]
+    return with_measured_cells(base, cells, wire_cells)
 
 
 # ---------------------------------------------------------------------------
@@ -408,6 +524,27 @@ def decision_provenance(collective: str, p: int, nbytes: float,
                         tuning: str = ANALYTIC) -> str:
     """"measured" | "analytic" for the cell ``select_backend`` would use."""
     return _table_for(topology, tuning).provenance_of(collective, p, nbytes)
+
+
+def select_wire(collective: str, p: int, nbytes: float,
+                topology: str = "tpu_multipod",
+                tuning: str = ANALYTIC) -> Tuple[str, str]:
+    """The ``wire_dtype="auto"`` entry point: joint ``(backend, wire)``
+    table lookup, cached per process like ``select_backend``.
+
+    ``nbytes`` is the float32 full-vector payload — the table rows were
+    built pricing each wire dtype's compressed bytes against that, so the
+    caller does NOT pre-scale.
+    """
+    return _table_for(topology, tuning).lookup_wire(collective, p, nbytes)
+
+
+def wire_decision_provenance(collective: str, p: int, nbytes: float,
+                             topology: str = "tpu_multipod",
+                             tuning: str = ANALYTIC) -> str:
+    """"measured" | "analytic" for the cell ``select_wire`` would use."""
+    return _table_for(topology, tuning).wire_provenance_of(
+        collective, p, nbytes)
 
 
 def select_bucket_bytes(p: int, topology: str = "tpu_multipod",

@@ -37,6 +37,7 @@ before.  Leaves larger than the capacity get a singleton bucket.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any, List, Sequence, Tuple
 
@@ -76,18 +77,27 @@ class Bucket:
     slots: Tuple[LeafSlot, ...]
     row_elems: int             # per-rank elements = sum of slot row_elems
 
-    def nbytes(self, itemsize: int, n_dp: int) -> int:
+    def nbytes(self, itemsize: float, n_dp: int) -> int:
         """Full-vector payload in bytes of an ``itemsize``-wide wire dtype
         (the ``core.traffic.msg_bytes`` convention the decision table and
-        ``_backend_for`` price collectives with)."""
-        return self.row_elems * n_dp * itemsize
+        ``_backend_for`` price collectives with).
+
+        ``itemsize`` may be fractional: the int8 wire codec ships a
+        float32 scale per ``compression.WIRE_CHUNK`` elements, so its
+        effective width is ``1 + 4/256`` bytes per element — a sizing
+        that ignored the scale rows would under-count every int8 bucket
+        by ~1.6%% and overfill the capacity.  Rounded up to whole bytes.
+        """
+        return int(math.ceil(self.row_elems * n_dp * itemsize))
 
 
 @dataclass(frozen=True)
 class BucketPlan:
     n_dp: int
     capacity_bytes: int        # wire-dtype bytes per bucket (0 = unbounded)
-    wire_itemsize: int
+    # effective wire bytes per element — fractional for int8 (1 + 4/256,
+    # the per-chunk scale rows; compression.WIRE_BYTES_PER_ELEM)
+    wire_itemsize: float
     buckets: Tuple[Bucket, ...]
     replicated: Tuple[int, ...]  # leaf indices with zero_dim < 0
 
@@ -112,7 +122,7 @@ class BucketPlan:
 # ---------------------------------------------------------------------------
 
 def plan_buckets(params_shapes: Any, layout: Any, n_dp: int,
-                 capacity_bytes: int, wire_itemsize: int) -> BucketPlan:
+                 capacity_bytes: int, wire_itemsize: float) -> BucketPlan:
     """Greedy first-fit-decreasing packing of the ZeRO-sharded leaves.
 
     ``params_shapes``/``layout`` are the param pytree (arrays or
@@ -135,7 +145,10 @@ def plan_buckets(params_shapes: Any, layout: Any, n_dp: int,
             assert leaf.shape[zd] % n_dp == 0, (leaf.shape, zd, n_dp)
             sharded.append((i, leaf, zd))
 
-    cap_elems = (capacity_bytes // wire_itemsize) if capacity_bytes > 0 \
+    # capacity in elements at the EFFECTIVE wire width (int8's fractional
+    # scale overhead included), floored so a full bucket never exceeds
+    # capacity_bytes on the wire
+    cap_elems = int(capacity_bytes / wire_itemsize) if capacity_bytes > 0 \
         else None
     order = sorted(sharded,
                    key=lambda t: (-int(np.prod(t[1].shape, dtype=np.int64)),

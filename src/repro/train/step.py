@@ -56,6 +56,14 @@ from repro.optim.adamw import AdamWConfig, adamw_init_leaf, adamw_update_leaf, l
 from repro.train import buckets, zero
 
 
+#: wire dtypes TrainConfig accepts — "auto" resolves per bucket via the
+#: joint (backend, wire) decision table (topology.select_wire)
+WIRE_DTYPES = ("float32", "bfloat16", "int8", "auto")
+
+#: backends with an int8 wire-codec path (mirrors cost.WIRE_CODEC_BACKENDS)
+_CODEC_BACKENDS = ("bine", "recdoub", "pallas_fused")
+
+
 @dataclass(frozen=True)
 class TrainConfig:
     backend: str = "bine"            # bine | recdoub | ring | xla | bine_hier
@@ -64,7 +72,10 @@ class TrainConfig:
     model_axis: str = "model"
     accum_steps: int = 1
     clip_norm: float = 1.0
-    wire_dtype: str = "float32"      # float32 | bfloat16 (gradient compression)
+    #: gradient/param wire compression: float32 | bfloat16 (cast) | int8
+    #: (pow2-scale wire codec + error feedback, bucketed path only) | auto
+    #: (per-bucket joint (backend, wire) table lookup)
+    wire_dtype: str = "float32"
     adamw: AdamWConfig = AdamWConfig()
     #: decision-table preset consulted when backend == "auto"
     topology: str = "tpu_multipod"
@@ -77,6 +88,24 @@ class TrainConfig:
     #: per-topology choice cached in the decision table, 0 disables
     #: bucketing (per-leaf collectives), >0 is an explicit capacity
     bucket_bytes: int = -1
+
+    def __post_init__(self):
+        # Fail at construction, not silently mid-step: the old _wire_cast
+        # fell through to a plain astype for any dtype it did not know,
+        # shipping e.g. a float16 wire with no decode or mean-scaling.
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"unsupported wire_dtype {self.wire_dtype!r}: expected one "
+                f"of {WIRE_DTYPES}")
+        if self.wire_dtype == "int8":
+            if self.backend not in _CODEC_BACKENDS + ("auto",):
+                raise ValueError(
+                    f"wire_dtype='int8' needs a codec-capable backend "
+                    f"{_CODEC_BACKENDS} or 'auto', got {self.backend!r}")
+            if self.bucket_bytes == 0:
+                raise ValueError(
+                    "wire_dtype='int8' runs on the bucketed flat-vector "
+                    "path; bucket_bytes=0 disables bucketing")
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -126,7 +155,7 @@ def _backend_for(tcfg: TrainConfig, collective: str, arr,
 
 
 def _wire_cast(tcfg: TrainConfig, g, n_dp: int):
-    """Cast one gradient leaf to the wire dtype.
+    """Cast one gradient leaf to the wire dtype (per-leaf/replicated path).
 
     bf16 wire pre-scales by ``1/n_dp`` BEFORE the reduce: the sum of
     ``n_dp`` large bf16 gradients can overflow to inf before the post-hoc
@@ -134,16 +163,43 @@ def _wire_cast(tcfg: TrainConfig, g, n_dp: int):
     bf16 reaches it ``n_dp``× sooner).  ``n_dp`` is a power of two, so the
     pre-scale is exact (an exponent shift) and costs no precision.  The
     fp32 path is untouched — it divides after the reduce, bit-compatible
-    with the pre-bucketing step."""
-    wire = jnp.dtype(tcfg.wire_dtype)
-    if wire == jnp.bfloat16:
-        return (g / n_dp).astype(wire)
-    return g.astype(wire)
+    with the pre-bucketing step.
+
+    ``int8``/``auto`` leaves stay float32 here: the wire codec only runs
+    on the bucketed flat path (``_bucket_wire_cast``); per-leaf and
+    replicated collectives are plain f32.  Anything else raises —
+    ``TrainConfig.__post_init__`` enforces the same set, so a step can
+    never silently ship an uncoded wire dtype (the old astype
+    fall-through)."""
+    wire = tcfg.wire_dtype
+    if wire == "bfloat16":
+        return (g / n_dp).astype(jnp.bfloat16)
+    if wire in ("float32", "int8", "auto"):
+        return g.astype(jnp.float32)
+    raise ValueError(f"unsupported wire_dtype {wire!r}")
 
 
 def _post_reduce_div(tcfg: TrainConfig, n_dp: int) -> float:
     """What the reduced wire value still must be divided by for the mean."""
-    return 1.0 if jnp.dtype(tcfg.wire_dtype) == jnp.bfloat16 else float(n_dp)
+    return 1.0 if tcfg.wire_dtype == "bfloat16" else float(n_dp)
+
+
+def _bucket_wire_cast(wire: str, g, n_dp: int):
+    """``_wire_cast`` for one bucket's RESOLVED wire dtype.
+
+    int8 pre-scales by the exact ``1/n_dp`` exponent shift like bf16 —
+    the codec then quantizes mean-scale values, so its per-chunk scales
+    (and the error-feedback residual) are in gradient-mean units."""
+    if wire == "bfloat16":
+        return (g / n_dp).astype(jnp.bfloat16)
+    if wire == "int8":
+        return g.astype(jnp.float32) / n_dp
+    return g.astype(jnp.float32)
+
+
+def _bucket_post(wire: str, n_dp: int) -> float:
+    """Post-reduce divisor for one bucket's resolved wire dtype."""
+    return 1.0 if wire in ("bfloat16", "int8") else float(n_dp)
 
 
 def _rs_leaf(tcfg: TrainConfig, g, zd: int, n_dp: int):
@@ -202,16 +258,18 @@ def _ag_leaf(tcfg: TrainConfig, x, zd: int):
     return shmap.allgather_dim(x, zd, axes, algo)
 
 
-def _rs_bucket(tcfg: TrainConfig, v):
+def _rs_bucket(tcfg: TrainConfig, v, backend: Optional[str] = None):
     """One flat reduce-scatter: full bucket vector -> this rank's row.
 
     The backend is resolved per BUCKET (``backend="auto"`` prices the
     bucket's full payload, not a leaf's), mirroring ``_rs_leaf``'s
     dispatch on a flat vector; bine_hier runs the same intra-pod-first
     axis sequence as the per-leaf path, so block ownership matches the
-    ``opt_dp_order`` shard layout."""
+    ``opt_dp_order`` shard layout.  ``backend`` overrides the resolution
+    (the bucketed step passes its static ``bucket_decisions``)."""
     axes = tcfg.dp_axes
-    b = _backend_for(tcfg, "reduce_scatter", v)
+    b = backend if backend is not None \
+        else _backend_for(tcfg, "reduce_scatter", v)
     if b == "xla":
         p = shmap.axis_size(axes)
         return lax.psum_scatter(v.reshape(p, -1), axes, scatter_dimension=0,
@@ -229,10 +287,32 @@ def _rs_bucket(tcfg: TrainConfig, v):
     return shmap.reduce_scatter(v, axes, algo)
 
 
-def _ag_bucket(tcfg: TrainConfig, row):
+def _rs_bucket_q(backend: str, axes, v):
+    """Int8-wire flat reduce-scatter: f32 bucket vector -> decoded f32 row.
+
+    Dispatches the codec'd twins (``shmap.reduce_scatter_q`` /
+    ``kernels.collectives.reduce_scatter_q``), which are bit-identical to
+    each other — the backend choice changes speed, never the decode."""
+    if backend == "pallas_fused":
+        from repro.kernels import collectives as fused
+        return fused.reduce_scatter_q(v, axes, "bine")
+    return shmap.reduce_scatter_q(v, axes, backend)
+
+
+def _ag_bucket_q(backend: str, axes, row):
+    """Int8-wire flat allgather: this rank's row -> decoded f32 vector,
+    identical on every rank (quantize-once / move / dequantize-once)."""
+    if backend == "pallas_fused":
+        from repro.kernels import collectives as fused
+        return fused.allgather_q(row, axes, "bine")
+    return shmap.allgather_q(row, axes, backend)
+
+
+def _ag_bucket(tcfg: TrainConfig, row, backend: Optional[str] = None):
     """Inverse flat allgather: this rank's row -> the full bucket vector."""
     axes = tcfg.dp_axes
-    b = _backend_for(tcfg, "allgather", row, gathered=True)
+    b = backend if backend is not None \
+        else _backend_for(tcfg, "allgather", row, gathered=True)
     if b == "xla":
         return lax.all_gather(row, axes, axis=0, tiled=True)
     if b == "bine_hier" and len(axes) > 1:
@@ -273,24 +353,78 @@ def resolve_bucket_plan(tcfg: TrainConfig, n_dp: int, params_shapes,
     if cap < 0:
         from repro.topology import select_bucket_bytes
         cap = select_bucket_bytes(n_dp, tcfg.topology, tuning=tcfg.tuning)
+    # effective wire width: fractional for int8 (scale metadata included);
+    # "auto" sizes conservatively at f32 — a bucket planned at 4 B/elem
+    # never overfills whatever wire the per-bucket decision later picks
+    from repro.collectives.compression import WIRE_BYTES_PER_ELEM
+    wire_itemsize = WIRE_BYTES_PER_ELEM.get(tcfg.wire_dtype, 4.0)
     plan = buckets.plan_buckets(params_shapes, layout, n_dp, cap,
-                                jnp.dtype(tcfg.wire_dtype).itemsize)
+                                wire_itemsize)
     return plan if plan.buckets else None
 
 
-def bucket_backends(tcfg: TrainConfig, plan: buckets.BucketPlan):
-    """Concrete (reduce_scatter, allgather) backend per bucket, through
-    the SAME resolver the step dispatches with (``_backend_for_bytes``):
-    the RS is priced at the bucket's wire-dtype payload, the AG at its
-    param-dtype payload."""
+def _bucket_decision(tcfg: TrainConfig, collective: str, p: int,
+                     f32_bytes: int, wire_bytes: int) -> Tuple[str, str]:
+    """Joint ``(backend, wire_dtype)`` for one bucket collective.
+
+    ``wire_dtype="auto"`` asks the decision table's joint wire rows
+    (``topology.select_wire``) at the bucket's f32 payload; a pinned
+    backend keeps its choice and takes the wire only if codec-capable.
+    Explicit wire dtypes price the backend at the actual wire payload
+    (the pre-codec behavior); an auto-resolved non-codec backend under
+    explicit int8 snaps to "bine" — the codec family's default — rather
+    than dropping the compression the user asked for."""
+    wire = tcfg.wire_dtype
+    if wire == "auto":
+        if p & (p - 1):
+            # codec butterflies need a power-of-two rank count; non-pow2
+            # meshes stay uncompressed rather than faulting mid-trace
+            return _backend_for_bytes(tcfg, collective, p, f32_bytes), \
+                "float32"
+        from repro.topology import select_wire
+        b, w = select_wire(collective, p, f32_bytes, tcfg.topology,
+                           tuning=tcfg.tuning)
+        if tcfg.backend != "auto":
+            b = tcfg.backend
+            if b not in _CODEC_BACKENDS:
+                w = "float32"
+        return b, w
+    b = _backend_for_bytes(tcfg, collective, p, wire_bytes)
+    if wire == "int8" and b not in _CODEC_BACKENDS:
+        b = "bine"
+    return b, wire
+
+
+def bucket_decisions(tcfg: TrainConfig, plan: buckets.BucketPlan):
+    """Static per-bucket ``(rs_backend, rs_wire, ag_backend, ag_wire)``.
+
+    The RS decision prices the bucket's gradient payload, the AG its
+    param-dtype payload.  The allgather wire only ever goes int8 — a
+    bf16-resolved AG falls back to the plain param-dtype gather (params
+    already travel at their own dtype; a lossy extra cast has no codec
+    path to decode it)."""
+    p = plan.n_dp
     out = []
     for b in plan.buckets:
-        rs_bytes = b.nbytes(plan.wire_itemsize, plan.n_dp)
-        ag_bytes = b.nbytes(np.dtype(b.dtype).itemsize, plan.n_dp)
-        out.append((
-            _backend_for_bytes(tcfg, "reduce_scatter", plan.n_dp, rs_bytes),
-            _backend_for_bytes(tcfg, "allgather", plan.n_dp, ag_bytes)))
+        f32_rs = b.nbytes(4.0, p)
+        rs_wire_bytes = b.nbytes(plan.wire_itemsize, p)
+        ag_bytes = b.nbytes(np.dtype(b.dtype).itemsize, p)
+        rs_b, rs_w = _bucket_decision(tcfg, "reduce_scatter", p, f32_rs,
+                                      rs_wire_bytes)
+        ag_b, ag_w = _bucket_decision(tcfg, "allgather", p, ag_bytes,
+                                      ag_bytes)
+        if ag_w == "bfloat16":
+            ag_w = "float32"
+        out.append((rs_b, rs_w, ag_b, ag_w))
     return out
+
+
+def bucket_backends(tcfg: TrainConfig, plan: buckets.BucketPlan):
+    """Concrete (reduce_scatter, allgather) backend per bucket — the
+    backend projection of ``bucket_decisions``, so introspection and the
+    step's dispatch can never drift."""
+    return [(rs_b, ag_b)
+            for rs_b, _, ag_b, _ in bucket_decisions(tcfg, plan)]
 
 
 def bucket_report(tcfg: TrainConfig, plan: Optional[buckets.BucketPlan]):
@@ -308,8 +442,8 @@ def bucket_report(tcfg: TrainConfig, plan: Optional[buckets.BucketPlan]):
     if plan is None:
         return []
     rows = []
-    for i, (b, (rs_b, ag_b)) in enumerate(
-            zip(plan.buckets, bucket_backends(tcfg, plan))):
+    for i, (b, (rs_b, rs_w, ag_b, ag_w)) in enumerate(
+            zip(plan.buckets, bucket_decisions(tcfg, plan))):
         rs_bytes = b.nbytes(plan.wire_itemsize, plan.n_dp)
         ag_bytes = b.nbytes(np.dtype(b.dtype).itemsize, plan.n_dp)
         if tcfg.backend == "auto":
@@ -321,10 +455,23 @@ def bucket_report(tcfg: TrainConfig, plan: Optional[buckets.BucketPlan]):
                                          tcfg.topology, tuning=tcfg.tuning)
         else:
             rs_src = ag_src = "fixed"
+        if tcfg.wire_dtype == "auto":
+            from repro.topology import wire_decision_provenance
+            f32_rs = b.nbytes(4.0, plan.n_dp)
+            rs_wsrc = wire_decision_provenance(
+                "reduce_scatter", plan.n_dp, f32_rs, tcfg.topology,
+                tuning=tcfg.tuning)
+            ag_wsrc = wire_decision_provenance(
+                "allgather", plan.n_dp, ag_bytes, tcfg.topology,
+                tuning=tcfg.tuning)
+        else:
+            rs_wsrc = ag_wsrc = "fixed"
         rows.append({
             "bucket": i, "n_leaves": len(b.slots),
             "rs_backend": rs_b, "rs_bytes": rs_bytes, "rs_provenance": rs_src,
+            "rs_wire": rs_w, "rs_wire_provenance": rs_wsrc,
             "ag_backend": ag_b, "ag_bytes": ag_bytes, "ag_provenance": ag_src,
+            "ag_wire": ag_w, "ag_wire_provenance": ag_wsrc,
         })
     return rows
 
@@ -332,6 +479,23 @@ def bucket_report(tcfg: TrainConfig, plan: Optional[buckets.BucketPlan]):
 # ---------------------------------------------------------------------------
 # Train state
 # ---------------------------------------------------------------------------
+
+def _ef_init(tcfg: TrainConfig, plan: Optional[buckets.BucketPlan]
+             ) -> Dict[str, Any]:
+    """Zero error-feedback residuals, one per int8-wire bucket.
+
+    Each leaf is this rank's LOCAL ``(1, L)`` row (``L`` = the bucket's
+    full flat length): the residual corrects the rank's own pre-collective
+    contribution, so it is per-rank data sharded ``P(dp)`` along dim 0 —
+    global shape ``(n_dp, L)``.  float32 always (see ``ef_compress``).
+    Empty dict when no bucket compresses — the state tree then carries no
+    ``"ef"`` key at all, keeping f32/bf16 checkpoints unchanged."""
+    if plan is None:
+        return {}
+    return {str(b.bid): jnp.zeros((1, b.row_elems * plan.n_dp), jnp.float32)
+            for b, d in zip(plan.buckets, bucket_decisions(tcfg, plan))
+            if d[1] == "int8"}
+
 
 def init_train_state(model_cfg, tcfg: TrainConfig, params, n_dp: int,
                      dp_rank: Optional[int] = None):
@@ -350,7 +514,11 @@ def init_train_state(model_cfg, tcfg: TrainConfig, params, n_dp: int,
         return adamw_init_leaf(zero.slice_leaf(p, zd, n_dp, dp_rank))
 
     opt = jax.tree.map(one, params, layout)
-    return {"opt": opt, "step": jnp.zeros((), jnp.int32)}
+    state = {"opt": opt, "step": jnp.zeros((), jnp.int32)}
+    ef = _ef_init(tcfg, resolve_bucket_plan(tcfg, n_dp, params, layout))
+    if ef:
+        state["ef"] = ef
+    return state
 
 
 def init_train_state_spmd(model_cfg, tcfg: TrainConfig, params, n_dp: int):
@@ -366,7 +534,11 @@ def init_train_state_spmd(model_cfg, tcfg: TrainConfig, params, n_dp: int):
         return adamw_init_leaf(sl)
 
     opt = jax.tree.map(one, params, layout)
-    return {"opt": opt, "step": jnp.zeros((), jnp.int32)}
+    state = {"opt": opt, "step": jnp.zeros((), jnp.int32)}
+    ef = _ef_init(tcfg, resolve_bucket_plan(tcfg, n_dp, params, layout))
+    if ef:
+        state["ef"] = ef
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -384,6 +556,19 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
     layout = zero.zero_layout(model_cfg, params_shapes, n_dp)
     pspecs = param_specs(model_cfg, params_shapes)
     plan = resolve_bucket_plan(tcfg, n_dp, params_shapes, layout)
+    if tcfg.wire_dtype == "int8":
+        if n_dp & (n_dp - 1):
+            raise ValueError(
+                f"wire_dtype='int8' needs a power-of-two DP rank count "
+                f"(the codec schedules are butterfly-only), got {n_dp}")
+        if plan is None and n_dp > 1:
+            raise ValueError(
+                "wire_dtype='int8' needs the bucketed path; this model has "
+                "no bucketable (ZeRO-sharded) leaves")
+    decisions = None if plan is None else bucket_decisions(tcfg, plan)
+    ef_bids = [] if plan is None else [
+        str(b.bid) for b, d in zip(plan.buckets, decisions)
+        if d[1] == "int8"]
 
     dp = tcfg.dp_axes if len(tcfg.dp_axes) > 1 else tcfg.dp_axes[0]
 
@@ -449,6 +634,7 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
         flat_zd = treedef.flatten_up_to(layout)
         post = _post_reduce_div(tcfg, n_dp)
         g_sh: list = [None] * len(flat_p)
+        new_ef: Dict[str, Any] = {}
         if plan is None:
             for i, (g, zd) in enumerate(zip(flat_gr, flat_zd)):
                 g_sh[i] = _rs_leaf(tcfg, g, zd, n_dp).astype(
@@ -457,12 +643,26 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
             for i in plan.replicated:
                 g_sh[i] = _rs_leaf(tcfg, flat_gr[i], -1, n_dp).astype(
                     jnp.float32) / post
-            for bucket in plan.buckets:
+            for bucket, (rs_b, rs_w, _, _) in zip(plan.buckets, decisions):
                 v = buckets.pack_bucket(
                     bucket,
-                    [_wire_cast(tcfg, flat_gr[s.index], n_dp)
+                    [_bucket_wire_cast(rs_w, flat_gr[s.index], n_dp)
                      for s in bucket.slots], n_dp)
-                row = _rs_bucket(tcfg, v).astype(jnp.float32) / post
+                if rs_w == "int8":
+                    # error feedback: quantization error this rank's wire
+                    # codec will commit lands in the residual and rides
+                    # into next step's gradient (wire_int8 = the SAME
+                    # codec, so the first re-encode on the wire is
+                    # lossless and the residual is exact for it)
+                    from repro.collectives import compression as comp
+                    sent, res = comp.ef_compress(
+                        v, state["ef"][str(bucket.bid)][0],
+                        codec="wire_int8")
+                    new_ef[str(bucket.bid)] = res[None]
+                    row = _rs_bucket_q(rs_b, tcfg.dp_axes, sent)
+                else:
+                    row = _rs_bucket(tcfg, v, backend=rs_b)
+                row = row.astype(jnp.float32) / _bucket_post(rs_w, n_dp)
                 for s, view in zip(bucket.slots,
                                    buckets.shard_views(bucket, row, n_dp)):
                     g_sh[s.index] = view
@@ -502,12 +702,21 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
             # per bucket: per-leaf updates on the bucket's views, then ONE
             # flat allgather.  Bucket i's update chain shares no dataflow
             # with bucket i-1's allgather, so XLA is free to overlap them.
-            for bucket in plan.buckets:
+            for bucket, (_, _, ag_b, ag_w) in zip(plan.buckets, decisions):
                 masters = []
                 for s in bucket.slots:
                     master, new_opt[s.index] = upd(s.index)
                     masters.append(master)
-                full = _ag_bucket(tcfg, buckets.pack_shards(bucket, masters))
+                packed = buckets.pack_shards(bucket, masters)
+                if ag_w == "int8":
+                    # int8 param allgather: quantization error does NOT
+                    # compound — every step re-derives the wire value from
+                    # the exact f32 master, and all ranks decode the same
+                    # bits (quantize-once / move / dequantize-once)
+                    full = _ag_bucket_q(ag_b, tcfg.dp_axes, packed).astype(
+                        jnp.dtype(bucket.dtype))
+                else:
+                    full = _ag_bucket(tcfg, packed, backend=ag_b)
                 for s, leaf in zip(bucket.slots,
                                    buckets.unpack_bucket(bucket, full, n_dp)):
                     new_p[s.index] = leaf
@@ -518,7 +727,10 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
         metrics = {k: red[j + 1] / n_dp for j, k in enumerate(mkeys)}
         metrics["grad_norm"] = gnorm
         metrics["lr"] = lr
-        return new_params, {"opt": new_opt, "step": step + 1}, metrics
+        new_state = {"opt": new_opt, "step": step + 1}
+        if ef_bids:
+            new_state["ef"] = new_ef
+        return new_params, new_state, metrics
 
     # ---- specs ----
     param_in = jax.tree.map(lambda _: P(), params_shapes)
@@ -528,6 +740,9 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
                           for k in ("master", "m", "v")},
         params_shapes, layout)
     state_in = {"opt": opt_manual, "step": P()}
+    if ef_bids:
+        # EF residual: per-rank rows, global (n_dp, L), sharded on dim 0
+        state_in["ef"] = {bid: P(dp) for bid in ef_bids}
     batch_in = jax.tree.map(lambda _: P(dp), {"inputs": 0, "targets": 0})
     metrics_out = P()
 
@@ -555,9 +770,12 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
             k: ns(_merge_spec(spec, zd, tcfg.opt_dp_order, leaf.ndim))
             for k in ("master", "m", "v")},
         params_shapes, pspecs, layout)
+    state_sharding = {"opt": opt_sharding, "step": ns(P())}
+    if ef_bids:
+        state_sharding["ef"] = {bid: ns(P(dp)) for bid in ef_bids}
     shardings = {
         "params": jax.tree.map(lambda s: ns(s), pspecs),
-        "state": {"opt": opt_sharding, "step": ns(P())},
+        "state": state_sharding,
         "batch": {"inputs": ns(P(dp)), "targets": ns(P(dp))},
         # advisory, like serve's collective plan: the static bucket plan
         # this step traced with (None = per-leaf collectives)
@@ -607,6 +825,15 @@ def make_init_fns(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
                                                     tcfg.opt_dp_order)
                           for k in ("master", "m", "v")},
         params_shapes, layout)
+    state_out = {"opt": opt_manual, "step": P()}
+    plan = resolve_bucket_plan(tcfg, n_dp, params_shapes, layout)
+    if plan is not None:
+        dp = tcfg.dp_axes if len(tcfg.dp_axes) > 1 else tcfg.dp_axes[0]
+        efs = {str(b.bid): P(dp)
+               for b, d in zip(plan.buckets, bucket_decisions(tcfg, plan))
+               if d[1] == "int8"}
+        if efs:
+            state_out["ef"] = efs
 
     def init_p(key):
         return constrain_params(model_cfg, T.init_params(key, model_cfg))
@@ -619,7 +846,7 @@ def make_init_fns(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
     rank_in = {a: P(a) for a in tcfg.dp_axes}
     smapped_init = compat.shard_map(
         init_s, mesh=mesh, in_specs=(param_in, rank_in),
-        out_specs={"opt": opt_manual, "step": P()},
+        out_specs=state_out,
         axis_names=_manual_axes(tcfg, mesh), check_vma=False)
     init_state_fn = jax.jit(
         lambda params: smapped_init(params, _rank_arrays(tcfg, mesh)))

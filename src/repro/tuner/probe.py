@@ -99,19 +99,22 @@ def _payload_cached(nbytes: int, p: int) -> np.ndarray:
 
 
 def _build_fn(collective: str, backend: str, p: int, mesh, axis: str,
-              topology: Optional[str] = None):
+              topology: Optional[str] = None,
+              wire_dtype: str = "float32"):
     """jitted shard_map program for one probe cell: [p, ...] in, per-rank
     rows, through the exact ``collectives.api`` dispatch path.
 
     ``topology`` seeds the config preset so ``bine_hier`` cells execute
-    the tier stack of the table the measurement is filed under."""
+    the tier stack of the table the measurement is filed under.
+    ``wire_dtype`` times the codec'd program — quantize/dequantize
+    included, exactly what production would run."""
     import jax
     from jax.sharding import PartitionSpec as P
 
     from repro.collectives import api
     from repro.compat import shard_map
 
-    cfg = api.CollectiveConfig(backend=backend)
+    cfg = api.CollectiveConfig(backend=backend, wire_dtype=wire_dtype)
     if topology is not None:
         cfg = cfg.replace(topology=topology)
 
@@ -134,12 +137,14 @@ def _build_fn(collective: str, backend: str, p: int, mesh, axis: str,
 def time_collective(collective: str, backend: str, p: int, nbytes: int,
                     mesh=None, axis: str = "x", warmup: int = 2,
                     reps: int = 10,
-                    topology: Optional[str] = None) -> Measurement:
+                    topology: Optional[str] = None,
+                    wire_dtype: str = "float32") -> Measurement:
     """Compile + warm up + time one cell; returns its ``Measurement``.
 
     ``allgather`` is fed its block input (``nbytes/p`` per rank) so the
     FULL-vector payload — the decision-table key — is ``nbytes`` for
-    every collective alike.
+    every collective alike (and stays the float32 payload whatever
+    ``wire_dtype`` the timed program compresses to).
     """
     import jax
 
@@ -148,7 +153,7 @@ def time_collective(collective: str, backend: str, p: int, nbytes: int,
     rows = _payload_cached(nbytes, p)
     if collective == "allgather":
         rows = rows[:, :rows.shape[1] // p]
-    fn = _build_fn(collective, backend, p, mesh, axis, topology)
+    fn = _build_fn(collective, backend, p, mesh, axis, topology, wire_dtype)
     x = jax.device_put(rows)
     for _ in range(max(1, warmup)):
         jax.block_until_ready(fn(x))
@@ -159,7 +164,7 @@ def time_collective(collective: str, backend: str, p: int, nbytes: int,
         times.append(time.perf_counter() - t0)
     return Measurement(collective=collective, backend=backend, p=p,
                        nbytes=int(nbytes), time_s=trimmed_median(times),
-                       reps=len(times))
+                       reps=len(times), wire_dtype=wire_dtype)
 
 
 def _mesh_for(p: int, axis: str):
@@ -184,6 +189,16 @@ def probe_backends(collective: str,
         return candidates_for(collective, topology)
     from repro.topology import CANDIDATES
     return CANDIDATES[collective]
+
+
+def probe_wire_pairs(collective: str,
+                     topology: str) -> Tuple[Tuple[str, str], ...]:
+    """The *compressed* ``(backend, wire_dtype)`` cells of the joint wire
+    grid — the float32 pairs are already covered by the plain backend
+    sweep, so the probe only adds the codec variants on top."""
+    from repro.topology.cost import wire_candidates
+    return tuple(bw for bw in wire_candidates(collective, topology)
+                 if bw[1] != "float32")
 
 
 def probe_grid(spec: GridSpec, topology: str,
@@ -218,14 +233,18 @@ def probe_grid(spec: GridSpec, topology: str,
         # reuses the one cached payload array (see _payload_cached)
         for nbytes in spec.sizes:
             for collective in spec.collectives:
-                for backend in probe_backends(collective, topology):
+                cells = [(b, "float32")
+                         for b in probe_backends(collective, topology)]
+                cells += list(probe_wire_pairs(collective, topology))
+                for backend, wire in cells:
                     m = time_collective(collective, backend, p, nbytes,
                                         mesh=mesh, warmup=spec.warmup,
-                                        reps=spec.reps, topology=topology)
+                                        reps=spec.reps, topology=topology,
+                                        wire_dtype=wire)
                     ms.measurements.append(m)
                     if progress:
                         print(f"[probe] p={p} {collective:>14} "
-                              f"{backend:>12} {nbytes:>10}B "
+                              f"{backend:>12} {wire:>8} {nbytes:>10}B "
                               f"{m.time_s * 1e6:10.1f}us")
         out.append(ms)
     if skipped:

@@ -20,6 +20,7 @@ from __future__ import annotations
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.topology import CANDIDATES
+from repro.topology.cost import wire_candidates
 from repro.topology.table import (DecisionTable, load_table,
                                   with_measured_cells)
 from repro.tuner.store import (Measurement, MeasurementSet,
@@ -27,6 +28,9 @@ from repro.tuner.store import (Measurement, MeasurementSet,
 
 #: a measured decision: (collective, p, size-bucket index) -> backend
 Cells = Dict[Tuple[str, int, int], str]
+
+#: a measured joint decision: cell -> (backend, wire_dtype)
+WireCells = Dict[Tuple[str, int, int], Tuple[str, str]]
 
 
 def _median(xs: List[float]) -> float:
@@ -47,6 +51,8 @@ def measured_cells(base: DecisionTable,
     """
     times: Dict[Tuple[str, int, int, str], List[float]] = {}
     for m in measurements:
+        if m.wire_dtype != "float32":
+            continue  # backend rows are float32-pinned, like the table's
         cands = CANDIDATES.get(m.collective)
         if cands is None or m.backend not in cands or m.p not in base.ps:
             continue
@@ -70,6 +76,45 @@ def measured_cells(base: DecisionTable,
     return cells
 
 
+def measured_wire_cells(base: DecisionTable,
+                        measurements: Iterable[Measurement]) -> WireCells:
+    """Joint ``(backend, wire)`` decisions from measurements.
+
+    Same full-coverage rule as ``measured_cells``, over the joint
+    ``cost.wire_candidates`` grid: a wire cell only flips to measured
+    when *every* (backend, wire) pair the table minimizes over was timed
+    — a sweep that probed the codec variants but skipped a plain backend
+    (or vice versa) keeps the analytic joint decision.  Only collectives
+    ``base`` carries wire rows for are considered.
+    """
+    times: Dict[Tuple[str, int, int, Tuple[str, str]], List[float]] = {}
+    for m in measurements:
+        if m.collective not in base.wire_entries or m.p not in base.ps:
+            continue
+        pairs = wire_candidates(m.collective, base.topology)
+        if (m.backend, m.wire_dtype) not in pairs:
+            continue
+        bucket = base.bucket_of(m.nbytes)
+        times.setdefault(
+            (m.collective, m.p, bucket, (m.backend, m.wire_dtype)),
+            []).append(m.time_s)
+
+    cells: WireCells = {}
+    covered = {(c, p, b) for (c, p, b, _) in times}
+    for coll, p, bucket in sorted(covered):
+        pairs = wire_candidates(coll, base.topology)
+        medians = {}
+        for bw in pairs:
+            ts = times.get((coll, p, bucket, bw))
+            if not ts:
+                break  # partial (backend, wire) coverage: stay analytic
+            medians[bw] = _median(ts)
+        else:
+            cells[(coll, p, bucket)] = min(
+                pairs, key=lambda bw: medians[bw])  # tie -> f32 first
+    return cells
+
+
 def refresh_table(topology: str,
                   measurements: Iterable[Measurement],
                   base: Optional[DecisionTable] = None) -> DecisionTable:
@@ -79,11 +124,14 @@ def refresh_table(topology: str,
     the analytic prediction) whose ``provenance`` map says exactly which
     cells the measurements decided — ready to be saved to
     ``topology.measured_table_path`` and merged at load time by
-    ``tuning="measured"``.
+    ``tuning="measured"``.  Wire rows refresh the same way, each joint
+    cell needing full (backend, wire) coverage.
     """
     if base is None:
         base = load_table(topology)
-    return with_measured_cells(base, measured_cells(base, measurements))
+    measurements = list(measurements)
+    return with_measured_cells(base, measured_cells(base, measurements),
+                               measured_wire_cells(base, measurements))
 
 
 def refresh_from_store(topology: str,

@@ -41,13 +41,19 @@ _FORMAT = 1
 
 @dataclass(frozen=True)
 class Measurement:
-    """One timed collective invocation (trimmed-median over reps)."""
+    """One timed collective invocation (trimmed-median over reps).
+
+    ``nbytes`` stays the FULL-vector float32 payload whatever the wire
+    dtype — the decision-table key convention; the codec's byte saving is
+    a property of the timed program, not of the key.
+    """
     collective: str
     backend: str
     p: int
     nbytes: int        # FULL-vector payload, the decision-table convention
     time_s: float
     reps: int = 0
+    wire_dtype: str = "float32"
 
 
 @dataclass
@@ -85,7 +91,8 @@ class MeasurementSet:
             measurements=[Measurement(
                 collective=m["collective"], backend=m["backend"],
                 p=int(m["p"]), nbytes=int(m["nbytes"]),
-                time_s=float(m["time_s"]), reps=int(m.get("reps", 0)))
+                time_s=float(m["time_s"]), reps=int(m.get("reps", 0)),
+                wire_dtype=m.get("wire_dtype", "float32"))
                 for m in d["measurements"]],
         )
 

@@ -11,9 +11,12 @@ through the wire, and exact residual bookkeeping.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.collectives.compression import (compress_bf16, decompress_bf16,
-                                           dequantize_int8, ef_compress,
-                                           quantize_int8)
+from repro.collectives.compression import (WIRE_CHUNK, compress_bf16,
+                                           decompress_bf16, dequantize_int8,
+                                           dequantize_wire, ef_compress,
+                                           pow2_scale, quantize_int8,
+                                           quantize_wire, wire_chunk,
+                                           wire_factor)
 
 
 def _chunk_scales(x32: np.ndarray, chunk: int) -> np.ndarray:
@@ -84,16 +87,87 @@ def test_dequantize_dtype_contract():
     assert dequantize_int8(q, s, 64, dtype=jnp.bfloat16).dtype == jnp.bfloat16
 
 
-def test_ef_preserves_dtype_bf16_params():
-    """ef_compress on bf16 grads keeps wire value AND residual in bf16
-    (the caller's param dtype — no silent f32 promotion downstream)."""
+def test_ef_dtype_contract_bf16_params():
+    """ef_compress on bf16 grads keeps the wire value in bf16 (the
+    caller's param dtype) but the residual in FLOAT32: a bf16-stored
+    residual rounds away exactly the sub-quantization error it exists to
+    carry — the bug this pins was the residual accumulating in grad
+    dtype, silently degrading bf16-grad EF to plain quantization."""
     rng = np.random.RandomState(3)
     g = jnp.asarray(rng.randn(512).astype(np.float32)).astype(jnp.bfloat16)
-    r = jnp.zeros_like(g)
-    for codec in ("none", "bf16", "int8"):
+    r = jnp.zeros(512, jnp.float32)
+    for codec in ("none", "bf16", "int8", "wire_int8"):
         sent, r2 = ef_compress(g, r, codec=codec, chunk=64)
         assert sent.dtype == g.dtype, codec
-        assert r2.dtype == g.dtype, codec
+        assert r2.dtype == jnp.float32, codec
+
+
+def test_ef_bf16_grads_error_within_int8_bound_100_steps():
+    """Regression for the f32-residual fix: with bf16 gradients, 100
+    iterated EF steps must track the true gradient sum within the int8
+    quantization bound — scale/2 per element per step, NOT the ~1.5x
+    blowup the grad-dtype residual accumulation produced."""
+    rng = np.random.RandomState(13)
+    chunk = 64
+    residual = jnp.zeros(256, jnp.float32)
+    true_sum = np.zeros(256, np.float64)
+    applied = np.zeros(256, np.float64)
+    max_scale = 0.0
+    for _ in range(100):
+        g32 = (rng.randn(256) * 0.1).astype(np.float32)
+        g = jnp.asarray(g32).astype(jnp.bfloat16)
+        corrected = np.asarray(g, np.float64) + np.asarray(residual,
+                                                           np.float64)
+        max_scale = max(max_scale,
+                        float(_chunk_scales(
+                            corrected.astype(np.float32), chunk).max()))
+        sent, residual = ef_compress(g, residual, codec="int8", chunk=chunk)
+        # bf16 grads: the EF "truth" is the bf16 value the step consumed
+        true_sum += np.asarray(g, np.float64)
+        applied += np.asarray(sent, np.float64)
+    # EF telescopes: |applied + residual - true_sum| is just f32 rounding,
+    # and the residual itself is within one step's quantization error
+    np.testing.assert_allclose(applied + np.asarray(residual), true_sum,
+                               rtol=1e-4, atol=1e-4)
+    assert float(np.abs(np.asarray(residual)).max()) <= 0.5 * max_scale * 1.01
+
+
+def test_wire_codec_roundtrip_and_pow2_scales():
+    """quantize_wire/dequantize_wire: pow2 scales, error <= scale/2, and
+    the decode multiply is exact (q * 2^e reconstructs bit-exactly)."""
+    rng = np.random.RandomState(7)
+    v = jnp.asarray((rng.randn(1024) * 3).astype(np.float32))
+    q, s = quantize_wire(v)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert s.shape[0] == 1024 // WIRE_CHUNK
+    # scales are exact powers of two
+    sn = np.asarray(s)
+    m, e = np.frexp(sn)
+    assert np.all(m == 0.5), sn[m != 0.5]
+    out = dequantize_wire(q, s)
+    err = np.abs(np.asarray(out) - np.asarray(v))
+    bound = np.repeat(sn, WIRE_CHUNK) / 2.0
+    assert np.all(err <= bound * 1.0000001)
+    # lossless re-encode: a decoded wire value re-quantizes to itself
+    q2, s2 = quantize_wire(out)
+    np.testing.assert_array_equal(np.asarray(dequantize_wire(q2, s2)),
+                                  np.asarray(out))
+
+
+def test_wire_chunk_rule_and_factor():
+    assert wire_chunk(1024) == 256
+    assert wire_chunk(384) == 128   # largest pow2 divisor, capped
+    assert wire_chunk(7) == 1
+    assert wire_factor("float32") == 1.0
+    assert wire_factor("bfloat16") == 0.5
+    assert abs(wire_factor("int8") - (1.0 + 4.0 / 256) / 4.0) < 1e-12
+
+
+def test_pow2_scale_values():
+    t = jnp.asarray([0.0, 0.24, 0.25, 0.26, 1.0, 3.0], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(pow2_scale(t)),
+        np.asarray([1.0, 0.25, 0.25, 0.5, 1.0, 4.0], np.float32))
 
 
 def test_ef_residual_identity_and_accumulation():

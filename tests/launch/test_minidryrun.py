@@ -45,6 +45,20 @@ assert roof.flops_per_chip > 0
 assert roof.coll_bytes_per_chip > 0
 assert "collective-permute" in roof.coll_op_counts  # OUR bine schedules
 
+# int8 wire cell: _opt_shapes grows the global EF rows and the step
+# lowers + compiles against them
+tcfg8 = TrainConfig(backend="bine", dp_axes=("pod", "data"),
+                    wire_dtype="int8", bucket_bytes=-1)
+step8, sh8, _ = make_train_step(cfg, tcfg8, mesh, shapes)
+state8 = jax.eval_shape(lambda p: _opt_shapes(cfg, tcfg8, p, 4), shapes)
+assert "ef" in state8 and all(v.dtype == jnp.float32
+                              for v in state8["ef"].values())
+state8_sds = jax.tree.map(lambda l, s: sds(l.shape, l.dtype, s),
+                          state8, sh8["state"])
+with set_mesh(mesh):
+    compiled8 = step8.lower(params_sds, state8_sds, batch_sds).compile()
+assert compiled8.memory_analysis() is not None
+
 # serve: decode cell lowers too
 scfg = ServeConfig(dp_axes=("pod", "data"))
 prefill_fn, decode_fn, sh2 = make_serve_fns(cfg, scfg, mesh, B, 128)

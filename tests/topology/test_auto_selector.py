@@ -62,10 +62,10 @@ def test_serialization_roundtrip(tmp_path, tables):
     assert back == tab
     with open(path) as f:
         d = json.load(f)
-    # fresh saves carry the provenance-aware format; packaged analytic
-    # tables stay format 1 on disk and must keep parsing (see
-    # tests/tuner/test_refresh.py::test_format1_tables_parse)
-    assert d["format"] == 2 and d["topology"] == "tpu_multipod"
+    # fresh saves carry the wire-aware format; packaged format-1/2 tables
+    # must keep parsing (see tests/tuner/test_refresh.py)
+    assert d["format"] == 3 and d["topology"] == "tpu_multipod"
+    assert "wire_entries" in d
 
 
 def test_packaged_tables_load_without_rebuild():
@@ -201,3 +201,115 @@ def test_train_backend_for_auto():
 
     for coll in ("allreduce", "reduce_scatter", "allgather"):
         assert sb(coll, 4, 1 << 20, "tpu_multipod") in CANDIDATES[coll]
+
+
+# ---------------------------------------------------------------------------
+# Wire-dtype axis (format 3): joint (backend, wire) decisions
+# ---------------------------------------------------------------------------
+
+def test_wire_rows_match_bruteforce_argmin(tables):
+    """Every wire cell equals the argmin of predict_time over the joint
+    (backend, wire) candidate set, ties breaking toward the earlier
+    (f32-first) pair order."""
+    from repro.topology import (SMALL_CUTOFF_BYTES, WIRE_CODEC_COLLECTIVES,
+                                wire_candidates)
+
+    for name, tab in tables.items():
+        assert set(tab.wire_entries) == set(WIRE_CODEC_COLLECTIVES), name
+        for coll, per_p in tab.wire_entries.items():
+            pairs = wire_candidates(coll, name)
+            for p, row in per_p.items():
+                topo = get_topology(name, p)
+                for edge, cell in zip(TEST_SIZES, row):
+                    times = {bw: predict_time(
+                        coll, bw[0], p, edge, topo, SMALL_CUTOFF_BYTES,
+                        wire_dtype=bw[1]) for bw in pairs}
+                    assert times[cell] == min(times.values()), (
+                        name, coll, p, edge, cell)
+                    first = next(bw for bw in pairs
+                                 if times[bw] == times[cell])
+                    assert cell == first, (name, coll, p, edge, cell, first)
+
+
+def test_wire_candidates_structure():
+    """f32 pairs for every backend candidate come first (ties resolve to
+    uncompressed); codec pairs only for the codec-capable backends, and
+    only on reduce_scatter/allgather."""
+    from repro.topology import (WIRE_CODEC_BACKENDS, candidates_for,
+                                wire_candidates)
+
+    for name in PRESETS:
+        for coll in ("reduce_scatter", "allgather"):
+            pairs = wire_candidates(coll, name)
+            cands = candidates_for(coll, name)
+            assert tuple(pairs[:len(cands)]) == tuple(
+                (b, "float32") for b in cands)
+            for b, w in pairs[len(cands):]:
+                assert w in ("bfloat16", "int8") and b in WIRE_CODEC_BACKENDS
+        assert all(w == "float32"
+                   for _, w in wire_candidates("allreduce", name))
+
+
+def test_select_wire_large_payload_compresses():
+    """On the DCN-bound presets, a large reduce-scatter resolves to an
+    int8 wire while a tiny one stays uncompressed float32."""
+    from repro.topology import select_wire
+
+    for name in ("lumi", "leonardo"):
+        b, w = select_wire("reduce_scatter", 8, 64 << 20, name)
+        assert w == "int8", (name, b, w)
+        assert b in ("bine", "recdoub", "pallas_fused")
+        _, w_small = select_wire("reduce_scatter", 8, 1 << 10, name)
+        assert w_small == "float32", name
+
+
+def test_lookup_wire_fallback_without_wire_rows():
+    """A table with no wire rows (an old format-2 file) answers
+    lookup_wire with its backend entry pinned to float32."""
+    tab = build_table("lumi", ps=TEST_PS, size_buckets=TEST_SIZES)
+    stripped = DecisionTable(
+        topology=tab.topology, ps=tab.ps, size_buckets=tab.size_buckets,
+        entries=tab.entries, provenance=tab.provenance,
+        bucket_bytes=tab.bucket_bytes,
+        small_cutoff_bytes=tab.small_cutoff_bytes)
+    b, w = stripped.lookup_wire("reduce_scatter", 8, 64 << 20)
+    assert w == "float32" and b == stripped.lookup("reduce_scatter", 8,
+                                                   64 << 20)
+
+
+def test_predict_time_wire_dtype_validation():
+    """Codec'd predictions only exist for codec (collective, backend)
+    pairs; float32 is bit-identical to the pre-codec model."""
+    from repro.topology import SMALL_CUTOFF_BYTES
+
+    topo = get_topology("lumi", 8)
+    base = predict_time("reduce_scatter", "bine", 8, 1 << 20, topo)
+    same = predict_time("reduce_scatter", "bine", 8, 1 << 20, topo,
+                        SMALL_CUTOFF_BYTES, wire_dtype="float32")
+    assert base == same
+    t8 = predict_time("reduce_scatter", "bine", 8, 1 << 26, topo,
+                      SMALL_CUTOFF_BYTES, wire_dtype="int8")
+    assert 0 < t8 < base or t8 < predict_time(
+        "reduce_scatter", "bine", 8, 1 << 26, topo)
+    with pytest.raises(ValueError):
+        predict_time("allreduce", "bine", 8, 1 << 20, topo,
+                     SMALL_CUTOFF_BYTES, wire_dtype="int8")
+    with pytest.raises(ValueError):
+        predict_time("reduce_scatter", "ring", 8, 1 << 20, topo,
+                     SMALL_CUTOFF_BYTES, wire_dtype="int8")
+    with pytest.raises(ValueError):
+        predict_time("reduce_scatter", "bine", 8, 1 << 20, topo,
+                     SMALL_CUTOFF_BYTES, wire_dtype="int4")
+
+
+def test_packaged_tables_carry_wire_rows():
+    from repro.topology import WIRE_CODEC_COLLECTIVES
+
+    for name in PRESETS:
+        tab = load_table(name, build_if_missing=False)
+        assert set(tab.wire_entries) == set(WIRE_CODEC_COLLECTIVES), name
+        flat = [cell for per_p in tab.wire_entries.values()
+                for row in per_p.values() for cell in row]
+        # big payloads must actually compress somewhere in every preset
+        assert any(w == "int8" for _, w in flat), name
+        assert any(w == "float32" for _, w in flat), name

@@ -94,7 +94,7 @@ def test_refresh_overrides_and_falls_back(base, tmp_path):
     table.save(path)
     back = tbl.DecisionTable.load(path)
     assert back == table
-    assert json.load(open(path))["format"] == 2
+    assert json.load(open(path))["format"] == 3
 
 
 def test_partial_coverage_stays_analytic(base):
@@ -221,22 +221,41 @@ def test_missing_measured_table_warns_once_and_falls_back(tmp_path,
 # Backward compat + stale-table warning dedup (satellites)
 # ---------------------------------------------------------------------------
 
-def test_format1_tables_parse():
-    """Every packaged analytic table predates the provenance field and
-    must keep parsing as all-analytic under the format-2 loader."""
+def test_old_format_tables_parse(base):
+    """Format-1 (pre-provenance) and format-2 (pre-wire) serializations
+    must keep parsing: provenance defaults to all-analytic, wire rows to
+    empty (lookup_wire then answers float32-pinned)."""
+    d = base.to_json_dict()
+    d2 = dict(d)
+    d2["format"] = 2
+    d2.pop("wire_entries", None)
+    d2.pop("wire_provenance", None)
+    d1 = dict(d2)
+    d1["format"] = 1
+    d1.pop("provenance", None)
+    for old in (d1, d2):
+        t = tbl.DecisionTable.from_json_dict(json.loads(json.dumps(old)))
+        assert not t.provenance
+        assert not t.wire_entries
+        assert t.provenance_of("allreduce", 8, 1 << 20) == "analytic"
+        assert t.measured_cell_count() == 0
+        b, w = t.lookup_wire("reduce_scatter", 8, 1 << 20)
+        assert w == "float32"
+        assert b == t.lookup("reduce_scatter", 8, 1 << 20)
+
+
+def test_packaged_tables_are_current_format():
     packaged = glob.glob(os.path.join(tbl._PACKAGED_DIR, "*.json"))
     assert packaged
     for path in packaged:
-        assert json.load(open(path))["format"] == 1
+        assert json.load(open(path))["format"] == 3
         t = tbl.DecisionTable.load(path)
-        assert not t.provenance
-        assert t.provenance_of("allreduce", 8, 1 << 20) == "analytic"
-        assert t.measured_cell_count() == 0
+        assert not t.provenance and t.wire_entries
 
 
 def test_unknown_format_rejected():
     with pytest.raises(ValueError):
-        tbl.DecisionTable.from_json_dict({"format": 3})
+        tbl.DecisionTable.from_json_dict({"format": 4})
 
 
 def test_stale_bucket_bytes_warning_deduplicated(monkeypatch):
@@ -262,3 +281,83 @@ def test_stale_bucket_bytes_warning_deduplicated(monkeypatch):
     stale_msgs = [str(x.message) for x in w if "bucket_bytes" in
                   str(x.message)]
     assert len(stale_msgs) == 2     # one per (topology, p), not 80
+
+
+# ---------------------------------------------------------------------------
+# Wire cells (format 3): joint (backend, wire) refresh
+# ---------------------------------------------------------------------------
+
+def _full_wire_cell(coll, p, nbytes, fastest, slow=1e-3, fast=1e-4):
+    """Measurements covering every (backend, wire) joint candidate."""
+    from repro.topology import wire_candidates
+    return [Measurement(coll, b, p, nbytes,
+                        fast if (b, w) == fastest else slow, reps=5,
+                        wire_dtype=w)
+            for b, w in wire_candidates(coll, "tpu_multipod")]
+
+
+def test_wire_refresh_overrides_and_falls_back(base, tmp_path):
+    target = ("reduce_scatter", 4, 1 << 20)
+    want = ("ring", "float32")
+    ms = _full_wire_cell(*target, fastest=want)
+    table = refresh_table("tpu_multipod", ms, base=base)
+    assert table.lookup_wire(*target) == want
+    assert table.wire_provenance_of(*target) == "measured"
+    # unmeasured wire cells stay analytic
+    assert table.wire_provenance_of("allgather", 4, 1 << 20) == "analytic"
+    assert table.lookup_wire("reduce_scatter", 8, 1 << 20) == \
+        base.lookup_wire("reduce_scatter", 8, 1 << 20)
+    # round trip
+    path = os.path.join(str(tmp_path), "w.json")
+    table.save(path)
+    assert tbl.DecisionTable.load(path) == table
+
+
+def test_wire_refresh_can_pick_codec_pair(base):
+    target = ("allgather", 8, 1 << 24)
+    want = ("pallas_fused", "int8")
+    table = refresh_table("tpu_multipod",
+                          _full_wire_cell(*target, fastest=want), base=base)
+    assert table.lookup_wire(*target) == want
+
+
+def test_wire_partial_coverage_stays_analytic(base):
+    """Probing only the codec pairs (or only the plain ones) must not
+    flip the joint cell — same rule as the backend rows."""
+    from repro.tuner.refresh import measured_wire_cells
+
+    target = ("reduce_scatter", 4, 1 << 20)
+    ms = _full_wire_cell(*target, fastest=("bine", "int8"))[:-1]  # one short
+    assert measured_wire_cells(base, ms) == {}
+    table = refresh_table("tpu_multipod", ms, base=base)
+    assert table.wire_provenance_of(*target) == "analytic"
+
+
+def test_codec_measurements_do_not_touch_backend_rows(base):
+    """Backend rows are float32-pinned: an int8 measurement sweep alone
+    never changes lookup(), only lookup_wire()."""
+    target = ("reduce_scatter", 4, 1 << 20)
+    ms = [Measurement("reduce_scatter", b, 4, 1 << 20, 1e-9, 5,
+                      wire_dtype="int8")
+          for b in ("bine", "recdoub", "pallas_fused")]
+    assert measured_cells(base, ms) == {}
+    table = refresh_table("tpu_multipod", ms, base=base)
+    assert table.lookup(*target) == base.lookup(*target)
+    assert table.measured_cell_count() == 0
+
+
+def test_measurement_wire_dtype_roundtrip(tmp_path):
+    ms = MeasurementSet(
+        device_kind="cpu", topology="tpu_multipod", p=4,
+        provenance={"grid": "tiny"},
+        measurements=[Measurement("reduce_scatter", "bine", 4, 1 << 20,
+                                  1e-4, 3, wire_dtype="int8")])
+    path = save_measurements(ms, str(tmp_path))
+    back = load_measurements(path)
+    assert back.measurements[0].wire_dtype == "int8"
+    # pre-wire stores (no field) default to float32
+    d = json.load(open(path))
+    del d["measurements"][0]["wire_dtype"]
+    with open(path, "w") as f:
+        json.dump(d, f)
+    assert load_measurements(path).measurements[0].wire_dtype == "float32"

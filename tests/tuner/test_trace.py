@@ -155,3 +155,28 @@ def test_hier_depth3_cuts_and_nests(preset):
         h_shallow, _ = trace.hier_global_cut(coll, p, VEC, topo,
                                              tiers=(2, 2, 4))
         assert h_shallow > h3, (preset, coll, h_shallow, h3)
+
+
+@pytest.mark.parametrize("preset", GROUPED)
+@pytest.mark.parametrize("p", (8, 16))
+def test_int8_wire_cuts_global_bytes_4x(preset, p):
+    """The tentpole's traffic claim: at a FIXED schedule, an int8 wire
+    (1 + 4/256 bytes per f32 element, scale metadata included) moves
+    >= 3.5x fewer global-link bytes than the f32 wire — the schedule is
+    wire-dtype-invariant, so the replay only rescales the payload."""
+    from repro.collectives.compression import WIRE_BYTES_PER_ELEM
+
+    topo = get_topology(preset, p)
+    place = _spread(p, topo)
+    nelems = VEC // 4
+    for coll in ("reduce_scatter", "allgather"):
+        sched = get_schedule(coll, "bine", p)
+        by_wire = {}
+        for wire, bpe in WIRE_BYTES_PER_ELEM.items():
+            r = trace.trace_schedule(sched, p, nelems * bpe, topo, place)
+            by_wire[wire] = r.global_bytes
+        ratio = by_wire["float32"] / by_wire["int8"]
+        assert ratio >= 3.5, (preset, p, coll, ratio)
+        # exact: the byte cut is the wire-width ratio itself
+        assert abs(ratio - 4.0 / WIRE_BYTES_PER_ELEM["int8"]) < 1e-6
+        assert abs(by_wire["float32"] / by_wire["bfloat16"] - 2.0) < 1e-6

@@ -33,7 +33,9 @@ from repro.tuner import load_all_measurements
 sets = load_all_measurements(topology="tpu_multipod")
 assert len(sets) == 1 and sets[0].provenance["grid"] == "tiny"
 assert sets[0].provenance["timestamp"] == "e2e"
-assert len(sets[0].measurements) == 45   # 3 colls x 5 candidates x 3 sizes
+# 3 colls x 5 candidates x 3 sizes = 45 float32 cells, plus the codec
+# pairs on RS/AG: 2 colls x (3 codec backends x 2 wires) x 3 sizes = 36
+assert len(sets[0].measurements) == 81   # 45 float32 + 36 codec
 assert all(m.time_s > 0 for m in sets[0].measurements)
 
 # ---- 2. a measured-tuning train step dispatches from that table ----
