@@ -11,6 +11,10 @@ both serving collective plans; reported per backend:
     decode, evict, and the two sampler shapes), proving requests churning
     through the pool never triggered a recompile.
 
+Run standalone (below) or through ``benchmarks.run --with-jax``, where
+``run(recorder=...)`` re-invokes this file in the 8-host-device
+subprocess and lands every metric in ``BENCH_serve_fleet.json``.
+
 Usage:
   PYTHONPATH=src:benchmarks python benchmarks/bench_serve_throughput.py \\
       [--arch gemma3-4b] [--slots 4] [--requests 12] [--csv]
@@ -19,7 +23,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import subprocess
 import sys
 import time
 
@@ -28,7 +34,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from common import emit  # noqa: E402  (benchmarks/ is the cwd convention)
+try:  # package import (benchmarks.run) or cwd convention (standalone)
+    from benchmarks.common import emit  # noqa: E402
+except ImportError:
+    from common import emit  # noqa: E402
 
 from repro.compat import set_mesh  # noqa: E402
 from repro.configs import base as cfgbase  # noqa: E402
@@ -79,6 +88,7 @@ def run_backend(backend: str, args, mesh, cfg, S: int):
         "decode_steps": stats["decode_steps"],
         "occ_mean": stats["mean_occupancy"],
         "occ_peak": stats["peak_occupancy"],
+        "latency": stats["latency"],
         "traces": dict(fns.trace_counts),
         "retraces_after_warmup": retraces,
         "plan": fns.shardings["plan"],
@@ -97,6 +107,9 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--bench-json", action="store_true",
+                    help="emit a machine-readable BENCH_JSON line (the "
+                         "run(recorder) subprocess protocol)")
     args = ap.parse_args(argv)
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -106,9 +119,25 @@ def main(argv=None):
     results = [run_backend(b, args, mesh, cfg, S) for b in ("xla", "auto")]
 
     # greedy outputs must not depend on the collective plan
-    if results[0]["outputs"] != results[1]["outputs"]:
+    outputs_equal = results[0]["outputs"] == results[1]["outputs"]
+    if not outputs_equal:
         print("WARNING: xla and auto backends generated different tokens",
               file=sys.stderr)
+
+    if args.bench_json:
+        rows = [
+            {"backend": r["backend"], "tok_s": r["tok_s"],
+             "tokens": int(r["tokens"]),
+             "decode_steps": int(r["decode_steps"]),
+             "occ_mean": float(r["occ_mean"]),
+             "occ_peak": int(r["occ_peak"]),
+             "decode_traces": int(r["traces"]["decode_slots"]),
+             "outputs_equal": outputs_equal,
+             "latency": r["latency"]}
+            for r in results
+        ]
+        print("BENCH_JSON " + json.dumps(rows))
+        return
 
     if args.csv:
         emit([(r["backend"], f"{r['tok_s']:.1f}", r["tokens"],
@@ -130,9 +159,54 @@ def main(argv=None):
               f"{r['tok_s']:.1f} tok/s (post-warmup)")
         print(f"  occupancy mean {r['occ_mean']:.2f} peak {r['occ_peak']} "
               f"of {args.slots}")
+        lat = r["latency"]
+        print(f"  latency (ticks): ttft p50 {lat['ttft_p50']:.1f} / "
+              f"p99 {lat['ttft_p99']:.1f}, e2e p50 {lat['e2e_p50']:.1f} / "
+              f"p99 {lat['e2e_p99']:.1f}")
         print(f"  traces {r['traces']} "
               f"(after warmup: {r['retraces_after_warmup'] or 'none'})")
     print("\nno-recompile check passed: pool fns traced once per shape")
+
+
+def run(recorder=None) -> None:
+    """The ``benchmarks.run`` entry point: re-invoke this file in the
+    8-host-device subprocess (``bench_bucketed_grads`` convention) and
+    land every serve metric as machine-readable records."""
+    env = dict(os.environ)
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.abspath(os.path.join(here, "..", "src"))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here, env.get("PYTHONPATH", "")])
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(here, "bench_serve_throughput.py"),
+         "--bench-json"],
+        capture_output=True, text=True, env=env, timeout=3000)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"serve-throughput bench failed\n{proc.stdout[-2000:]}\n"
+            f"{proc.stderr[-2000:]}")
+    rows = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("BENCH_JSON "):
+            rows = json.loads(line[len("BENCH_JSON "):])
+    assert rows, proc.stdout[-2000:]
+
+    hdr = ("backend", "tok_s", "tokens", "decode_steps", "occ_mean",
+           "occ_peak", "decode_traces")
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(f"{r[h]:.4g}" if isinstance(r[h], float) else str(r[h])
+                       for h in hdr))
+        assert r["outputs_equal"], "xla/auto backends disagree on tokens"
+        if recorder is not None:
+            c = {"backend": r["backend"]}
+            for m in ("tok_s", "tokens", "decode_steps", "occ_mean",
+                      "occ_peak", "decode_traces"):
+                recorder.add("serve_throughput", c, m, r[m])
+            for m, v in r["latency"].items():
+                recorder.add("serve_throughput", c, f"latency_{m}", v)
+    print("# backend-equivalence check passed: xla == auto token streams")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,9 @@ that is what makes the perf trajectory real: CI uploads every
 ``BENCH_*.json`` as an artifact, so numbers persist across commits
 instead of scrolling away in the log.  ``BENCH_autotune.json`` carries
 the empirical-tuner records (bench name ``autotune``);
-``BENCH_collectives.json`` carries everything else.  Records are
+``BENCH_serve_fleet.json`` the serving records (``serve_throughput``,
+``serve_fleet``); ``BENCH_collectives.json`` everything else.  Records
+are
 ``{bench, config, metric, value}`` plus per-bench wall time, stamped
 with the ``--timestamp`` string the CALLER passes in (benchmarks never
 invent their own clock, so reruns are diffable).  Benches whose ``run``
@@ -33,6 +35,9 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 #: benches whose records split into BENCH_autotune.json
 AUTOTUNE_BENCHES = ("autotune",)
 
+#: benches whose records split into BENCH_serve_fleet.json
+SERVE_BENCHES = ("serve_fleet", "serve_throughput")
+
 BENCHES = [
     ("fig1_broadcast_traffic", "Fig. 1: bcast global-link bytes"),
     ("eq2_distance_ratio", "Eq. 2: distance ratio -> 2/3"),
@@ -51,6 +56,10 @@ JAX_BENCHES = [
      "Pallas fused-step vs shmap: emission plans + HLO + microbench"),
     ("bucketed_grads",
      "bucketed vs per-leaf gradient collectives: ppermutes + wire bytes"),
+    ("serve_throughput",
+     "continuous-batching throughput + latency: xla vs auto backends"),
+    ("serve_fleet",
+     "multi-replica fleet: placement traffic + fleet-vs-single serving"),
 ]
 
 
@@ -67,6 +76,10 @@ def main() -> None:
     ap.add_argument("--json-autotune",
                     default=os.path.join(ROOT, "BENCH_autotune.json"),
                     help="output path for the empirical-tuner records "
+                         "(default: repo root)")
+    ap.add_argument("--json-serve",
+                    default=os.path.join(ROOT, "BENCH_serve_fleet.json"),
+                    help="output path for the serve/fleet records "
                          "(default: repo root)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing the JSON records")
@@ -99,12 +112,17 @@ def main() -> None:
 
     if not args.no_json:
         is_autotune = lambda r: r["bench"] in AUTOTUNE_BENCHES  # noqa: E731
+        is_serve = lambda r: r["bench"] in SERVE_BENCHES  # noqa: E731
         n_coll = recorder.write_subset(
-            args.json, args.timestamp, lambda r: not is_autotune(r))
+            args.json, args.timestamp,
+            lambda r: not is_autotune(r) and not is_serve(r))
         n_auto = recorder.write_subset(
             args.json_autotune, args.timestamp, is_autotune)
+        n_serve = recorder.write_subset(
+            args.json_serve, args.timestamp, is_serve)
         print(f"\nwrote {n_coll} records to {args.json}")
         print(f"wrote {n_auto} records to {args.json_autotune}")
+        print(f"wrote {n_serve} records to {args.json_serve}")
     print("\nall benchmarks completed")
 
 

@@ -1,0 +1,217 @@
+"""Multi-replica serve fleet driver: placement, routing, elasticity.
+
+  # placement plans only (no devices): score contiguous vs round-robin
+  # on every packaged topology preset
+  python -m repro.launch.fleet --dryrun --ranks 8 --replicas 2 --tp 4
+
+  # serve a Poisson trace over 3 replicas of one compiled engine, with a
+  # mid-trace drain + respawn, persisting measured tick latency
+  python -m repro.launch.fleet --arch gemma3-4b --reduced --mesh 4,2 \\
+      --replicas 3 --slots 4 --requests 24 --rate 1.0 --max-new 16 \\
+      --drain 6:1 --respawn 12:1 --device-kind cpu --save-feedback
+
+``--dryrun`` prints the :mod:`repro.fleet.placement` plan — the modeled
+allocation, both placement strategies scored by predicted per-decode-step
+global-link bytes, and the argmin — for one preset or all of them
+(grouped presets via ``tier_split_or_none``, the torus via its
+dimension-contiguous fallback).  CI smokes this over every packaged
+preset.
+
+The serve path wraps N ``ContinuousBatchingScheduler`` replicas behind
+one compiled engine (compile once, N KV pools), routes the trace through
+the session/prefix-affinity router, fires ``--drain``/``--respawn``
+events mid-trace, and reports fleet stats including per-request latency
+percentiles in virtual ticks.  ``--save-feedback`` persists the measured
+per-replica EWMA tick latency to the ``(device_kind, topology, p)``
+feedback store that warm-starts the next run's routing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+from repro.fleet.placement import decode_payloads, format_plan, plan_placement
+from repro.topology.presets import PRESETS
+
+
+def _events(args) -> List["FleetEvent"]:  # noqa: F821 — imported lazily
+    from repro.fleet import FleetEvent
+    evs = []
+    for action, specs in (("drain", args.drain), ("respawn", args.respawn)):
+        for spec in specs:
+            tick, _, rep = spec.partition(":")
+            evs.append(FleetEvent(int(tick), action, int(rep)))
+    return sorted(evs, key=lambda e: (e.tick, e.action, e.replica))
+
+
+def run_dryrun(args) -> None:
+    """Print the scored placement plan per preset — pure cost model, no
+    devices, no jax computation."""
+    from repro.configs import base as cfgbase
+
+    cfg = cfgbase.get_config(args.arch)
+    if args.reduced:
+        cfg = cfgbase.reduced(cfg)
+    payloads = decode_payloads(args.slots, cfg.n_heads, cfg.head_dim,
+                               cfg.vocab_size)
+    presets = PRESETS if args.topology == "all" else (args.topology,)
+    for preset in presets:
+        plan = plan_placement(preset, args.ranks, args.replicas, args.tp,
+                              payloads)
+        print(format_plan(plan))
+
+
+def run_serve(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro.compat import set_mesh
+    from repro.configs import base as cfgbase
+    from repro.fleet import Fleet, FleetConfig
+    from repro.models import transformer as T
+    from repro.serve.engine import ServeConfig, make_serve_fns, page_len
+    from repro.serve.scheduler import poisson_trace
+
+    cfg = cfgbase.get_config(args.arch)
+    if args.reduced:
+        cfg = cfgbase.reduced(cfg)
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+    else:
+        shape = (n_dev, 1)
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    tp = int(mesh.shape["model"])
+
+    # the placement report for this fleet shape on the requested topology
+    payloads = decode_payloads(args.slots, cfg.n_heads, cfg.head_dim,
+                               cfg.vocab_size)
+    plan = plan_placement(args.topology, args.replicas * tp, args.replicas,
+                          tp, payloads)
+    print(format_plan(plan))
+
+    S = page_len(cfg, args.prompt_len_max, args.max_new)
+    scfg = ServeConfig(dp_axes=("data",), backend=args.backend,
+                      topology=args.topology)
+    fns = make_serve_fns(cfg, scfg, mesh, args.slots, S)
+    if fns.insert is None:
+        raise SystemExit(
+            f"[fleet] {args.arch}: pool unsupported (see engine."
+            f"pool_supported) — the fleet needs the paged-KV scheduler")
+    params = jax.jit(lambda k: T.init_params(k, cfg))(
+        jax.random.key(args.seed))
+
+    trace = poisson_trace(
+        args.requests, args.rate, (args.prompt_len_min, args.prompt_len_max),
+        args.max_new, cfg.vocab_size, seed=args.seed,
+        temperature=args.temperature, n_sessions=args.sessions)
+    events = _events(args)
+
+    fcfg = FleetConfig(n_replicas=args.replicas, n_slots=args.slots,
+                       topology=args.topology, seed=args.seed,
+                       top_k=args.top_k, top_p=args.top_p,
+                       device_kind=args.device_kind,
+                       warm_start=not args.cold_start)
+    with set_mesh(mesh):
+        fleet = Fleet(cfg, fns, params, fcfg, S)
+        fleet.submit_trace(trace)
+        t0 = time.time()
+        stats = fleet.run(events=events)
+        dt = time.time() - t0
+
+    print(f"[fleet] {args.replicas} replicas x {args.slots} pages x {S} "
+          f"tokens, {args.requests} requests @ rate {args.rate}, "
+          f"backend={args.backend}")
+    if events:
+        print(f"[fleet] events: " + ", ".join(
+            f"{e.action}@{e.tick}->r{e.replica}" for e in events))
+    print(f"[fleet] {stats['tokens_out']} tokens in {dt*1e3:.0f}ms "
+          f"({stats['tokens_out'] / max(dt, 1e-9):.1f} tok/s), "
+          f"{stats['ticks']} fleet ticks, "
+          f"{stats['decode_steps']} decode steps")
+    lat = stats["latency"]
+    print(f"[fleet] latency (virtual ticks): "
+          f"ttft p50 {lat['ttft_p50']:.1f} / p99 {lat['ttft_p99']:.1f}, "
+          f"e2e p50 {lat['e2e_p50']:.1f} / p99 {lat['e2e_p99']:.1f}")
+    rt = stats["routing"]
+    print(f"[fleet] routing: {rt['n_routed']} routed "
+          f"({rt['n_spilled']} spilled), per replica {rt['per_replica']}")
+    for rid, rs in stats["replicas"].items():
+        print(f"[fleet]   replica {rid}: {rs['state']}, "
+              f"{rs['tokens_out']} tokens / {rs['decode_steps']} steps, "
+              f"{rs['respawns']} respawns, "
+              f"ewma tick {rs['ewma_tick_s']*1e3:.2f}ms")
+    print(f"[fleet] traces: {fns.trace_counts}")
+    done = sum(r.finished for r in trace)
+    print(f"[fleet] finished {done}/{len(trace)}; sample request 0 ids:",
+          trace[0].generated[:16])
+
+    if args.save_feedback:
+        path = fleet.save_feedback(timestamp=args.timestamp)
+        print(f"[fleet] feedback saved: {path}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true",
+                    help="print scored placement plans only (no devices)")
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--topology", default="all",
+                    help=f"preset or 'all' (dryrun only): {PRESETS}")
+    # placement shape (dryrun; serve derives ranks/tp from the mesh)
+    ap.add_argument("--ranks", type=int, default=8,
+                    help="rank slots in the modeled allocation (dryrun)")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--tp", type=int, default=4,
+                    help="tensor-parallel degree per replica (dryrun)")
+    # serve shape
+    ap.add_argument("--mesh", default="",
+                    help="data,model mesh shape (serve mode)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV pages per replica")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.5)
+    ap.add_argument("--prompt-len-min", type=int, default=8)
+    ap.add_argument("--prompt-len-max", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--sessions", type=int, default=None,
+                    help="tag requests with this many session ids "
+                         "(the router's affinity signal)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0)
+    ap.add_argument("--backend", default="auto", choices=("auto", "xla"))
+    ap.add_argument("--seed", type=int, default=0)
+    # elasticity events
+    ap.add_argument("--drain", action="append", default=[],
+                    metavar="TICK:REPLICA",
+                    help="drain a replica at a fleet tick (repeatable)")
+    ap.add_argument("--respawn", action="append", default=[],
+                    metavar="TICK:REPLICA",
+                    help="respawn a drained replica (repeatable)")
+    # measured-latency feedback store
+    ap.add_argument("--device-kind", default=None,
+                    help="feedback-store key part; enables warm start")
+    ap.add_argument("--save-feedback", action="store_true")
+    ap.add_argument("--cold-start", action="store_true",
+                    help="skip warm-starting routing from persisted "
+                         "feedback")
+    ap.add_argument("--timestamp", default=None,
+                    help="recorded verbatim in saved feedback (never "
+                         "auto-generated)")
+    args = ap.parse_args(argv)
+
+    if args.dryrun:
+        run_dryrun(args)
+        return
+    if args.topology == "all":
+        args.topology = "tpu_multipod"
+    run_serve(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -60,7 +60,12 @@ class Request:
     finished: bool = False
     finish_reason: Optional[str] = None   # "eos" | "length"
     admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    #: routing affinity: requests sharing a session hash to the same
+    #: replica in a fleet (KV/prefix reuse); None falls back to a hash of
+    #: the prompt's leading tokens (repro.fleet.router.affinity_key)
+    session: Optional[str] = None
 
 
 class ContinuousBatchingScheduler:
@@ -91,6 +96,9 @@ class ContinuousBatchingScheduler:
         self.tokens_out = 0
         self._waiting: list = []            # heap of (arrival, rid, Request)
         self._running: Dict[int, Request] = {}   # slot -> Request
+        #: per-retired-request latency record (virtual ticks), the input
+        #: to stats()["latency"] and the fleet router's feedback loop
+        self._latency_log: List[Dict[str, float]] = []
         # pooled per-slot sampling inputs (host mirrors)
         self._next_tok = np.zeros((n_slots, 1), np.int32)
         self._temps = np.zeros((n_slots,), np.float32)
@@ -134,6 +142,13 @@ class ContinuousBatchingScheduler:
         req.finished = True
         req.finish_reason = reason
         req.finished_at = self.clock
+        self._latency_log.append({
+            "rid": req.rid,
+            "admission_wait": req.admitted_at - req.arrival,
+            "ttft": req.first_token_at - req.arrival,
+            "e2e": self.clock - req.arrival,
+            "tokens": float(len(req.generated)),
+        })
         self.pool = self.fns.evict(self.pool, np.int32(slot))
         self.alloc.release(slot)
         self._active[slot] = 0
@@ -142,6 +157,8 @@ class ContinuousBatchingScheduler:
     def _record(self, slot: int, req: Request, tok: int) -> None:
         """Account one sampled token; retire or queue it as the next input."""
         req.generated.append(tok)
+        if req.first_token_at is None:
+            req.first_token_at = self.clock
         self.tokens_out += 1
         if req.eos_id is not None and tok == req.eos_id:
             self._retire(slot, req, "eos")
@@ -198,6 +215,30 @@ class ContinuousBatchingScheduler:
             pass
         return self.stats()
 
+    # -- fleet hooks --------------------------------------------------------
+
+    @property
+    def n_running(self) -> int:
+        return len(self._running)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    def eject_waiting(self) -> List[Request]:
+        """Remove and return every not-yet-admitted request (arrival
+        order).  In-flight requests are untouched — this is the admit-side
+        half of a fleet drain: the ejected requests re-route to another
+        replica while this one finishes what it already holds."""
+        out = [req for _, _, req in sorted(self._waiting)]
+        self._waiting.clear()
+        return out
+
+    def request_latencies(self) -> List[Dict[str, float]]:
+        """Per-retired-request latency records (virtual ticks):
+        ``{rid, admission_wait, ttft, e2e, tokens}``."""
+        return list(self._latency_log)
+
     def stats(self) -> dict:
         return {
             "decode_steps": self.alloc.decode_steps,
@@ -206,23 +247,53 @@ class ContinuousBatchingScheduler:
             "mean_occupancy": self.alloc.mean_occupancy,
             "peak_occupancy": self.alloc.peak_occupancy,
             "clock": self.clock,
+            "latency": latency_summary(self._latency_log),
         }
+
+
+def _pct(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (deterministic, no interpolation)."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    k = max(0, min(len(xs) - 1, int(np.ceil(q / 100.0 * len(xs))) - 1))
+    return float(xs[k])
+
+
+def latency_summary(log: List[Dict[str, float]]) -> Dict[str, float]:
+    """p50/p99 (virtual ticks) over per-request latency records:
+    admission wait (arrival -> admitted), time-to-first-token (the first
+    token samples during the admission tick, so ttft == admission wait
+    today — tracked separately so chunked prefill can change that), and
+    end-to-end (arrival -> retirement)."""
+    out: Dict[str, float] = {"n": float(len(log))}
+    for metric in ("admission_wait", "ttft", "e2e"):
+        vals = [r[metric] for r in log]
+        out[f"{metric}_p50"] = _pct(vals, 50.0)
+        out[f"{metric}_p99"] = _pct(vals, 99.0)
+    return out
 
 
 def poisson_trace(n_requests: int, rate: float, prompt_lens,
                   max_new_tokens: int, vocab_size: int, seed: int = 0,
                   temperature: float = 0.0,
-                  eos_id: Optional[int] = None) -> List[Request]:
+                  eos_id: Optional[int] = None,
+                  n_sessions: Optional[int] = None) -> List[Request]:
     """Poisson arrival trace: exponential inter-arrival gaps at ``rate``
     requests per scheduler step, prompt lengths uniform over
-    ``prompt_lens`` (an inclusive ``(lo, hi)`` pair or explicit list)."""
+    ``prompt_lens`` (an inclusive ``(lo, hi)`` pair or explicit list).
+
+    ``n_sessions`` tags requests with session ids ``"s0".."s{n-1}"``
+    (uniform; drawn after the prompts, so traces with and without
+    sessions carry identical token content) — the affinity signal the
+    fleet router co-locates for KV/prefix reuse."""
     rng = np.random.RandomState(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
     if isinstance(prompt_lens, tuple) and len(prompt_lens) == 2:
         lens = rng.randint(prompt_lens[0], prompt_lens[1] + 1, n_requests)
     else:
         lens = rng.choice(np.asarray(list(prompt_lens)), n_requests)
-    return [
+    reqs = [
         Request(
             rid=i,
             prompt=rng.randint(0, vocab_size, size=int(lens[i])).astype(np.int32),
@@ -233,3 +304,7 @@ def poisson_trace(n_requests: int, rate: float, prompt_lens,
         )
         for i in range(n_requests)
     ]
+    if n_sessions is not None:
+        for req, s in zip(reqs, rng.randint(0, n_sessions, n_requests)):
+            req.session = f"s{int(s)}"
+    return reqs

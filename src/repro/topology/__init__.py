@@ -18,7 +18,8 @@ from .cost import (BUCKET_SIZE_CANDIDATES, CANDIDATES, SMALL_CUTOFF_BYTES,
                    WIRE_CODEC_BACKENDS, WIRE_CODEC_COLLECTIVES,
                    candidates_for, optimal_bucket_bytes, predict_bucket_time,
                    predict_time, schedule_algo, wire_candidates)
-from .presets import PRESETS, get_topology, tier_split, torus_dims
+from .presets import (PRESETS, get_topology, tier_split, tier_split_or_none,
+                      torus_dims)
 from .table import (ANALYTIC, MEASURED, P_GRID, SIZE_BUCKETS, TUNINGS,
                     DecisionTable, build_table, decision_provenance,
                     load_table, measured_dir, measured_table_path,
@@ -31,7 +32,8 @@ __all__ = [
     "WIRE_CODEC_BACKENDS", "WIRE_CODEC_COLLECTIVES",
     "candidates_for", "optimal_bucket_bytes", "predict_bucket_time",
     "predict_time", "schedule_algo", "wire_candidates",
-    "PRESETS", "get_topology", "tier_split", "torus_dims",
+    "PRESETS", "get_topology", "tier_split", "tier_split_or_none",
+    "torus_dims",
     "ANALYTIC", "MEASURED", "P_GRID", "SIZE_BUCKETS", "TUNINGS",
     "DecisionTable", "build_table", "decision_provenance", "load_table",
     "measured_dir", "measured_table_path", "merge_measured",

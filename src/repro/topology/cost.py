@@ -168,9 +168,16 @@ CANDIDATES: Dict[str, Tuple[str, ...]] = {
 def candidates_for(collective: str, topology: str) -> Tuple[str, ...]:
     """``CANDIDATES`` restricted to what ``collectives.api`` can execute
     on this preset: ``bine_hier`` derives its tier stack from a grouped
-    preset's hierarchy, so it is not a candidate on the torus."""
+    preset's hierarchy, so it is not a candidate where none exists.
+
+    The capability is probed through ``presets.tier_split_or_none`` (the
+    probe is p-independent, so any rank count works) instead of
+    string-matching preset names — a new hierarchy-free preset drops
+    ``bine_hier`` automatically; unknown presets raise ``KeyError``."""
+    from .presets import tier_split_or_none
+
     cands = CANDIDATES[collective]
-    if topology == "torus":
+    if tier_split_or_none(topology, 2) is None:
         cands = tuple(b for b in cands if b != "bine_hier")
     return cands
 

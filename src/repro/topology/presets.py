@@ -8,7 +8,7 @@ distances depend on the torus dimensions.
 
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import Optional, Tuple, Union
 
 from repro.core.traffic import (LEONARDO, LUMI, MARENOSTRUM5, TPU_MULTIPOD,
                                 GroupedTopo, TorusTopo)
@@ -89,3 +89,21 @@ def tier_split(name: str, p: int) -> Tuple[int, ...]:
     if rem > 1:
         tiers.append(rem)
     return tuple(tiers) or (p,)
+
+
+def tier_split_or_none(name: str, p: int) -> Optional[Tuple[int, ...]]:
+    """Probe variant of :func:`tier_split`: the tier stack, or ``None``
+    where the preset has no grouped hierarchy to derive one from (the
+    torus — its locality structure is dimension-contiguity, not nested
+    fully-connected groups).
+
+    Callers that merely need to know *whether* a hierarchy exists (e.g.
+    ``topology.cost.candidates_for`` dropping ``bine_hier``, or the fleet
+    placement picking its torus fallback) should branch on this instead
+    of string-matching preset names; whether a preset supports a split
+    does not depend on ``p``, so any valid rank count probes it.
+    Unknown presets still raise ``KeyError`` naming the known set.
+    """
+    if name == "torus":
+        return None
+    return tier_split(name, p)

@@ -3,7 +3,9 @@
 One JSON file per (device_kind, topology, p) — the key under which
 ``refresh`` rebuilds decision-table cells — with provenance metadata
 (library versions, grid name, caller-supplied timestamp) so a measured
-table can always be traced back to the run that produced it.
+table can always be traced back to the run that produced it.  The same
+layout/provenance pattern backs the serve fleet's measured-latency
+routing feedback (``repro.fleet.feedback``), keyed identically.
 
 Layout (``REPRO_MEASURE_DIR`` overrides, default
 ``~/.cache/repro-bine/measurements``)::

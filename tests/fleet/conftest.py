@@ -1,0 +1,76 @@
+"""Shared fleet-test helpers: the deterministic fake engine (the
+``tests/serve`` one-hot convention) and a fleet factory with injectable
+timers, so routing, elasticity, and feedback are all exercised without
+any devices."""
+
+import numpy as np
+import pytest
+
+V = 32
+
+
+class FakeFns:
+    """Stand-in engine: logits are a one-hot of pos % V, so a request
+    admitted with prompt length L greedily generates L, L, L+1, ...
+    (mod V) regardless of batch composition or replica assignment."""
+
+    def __init__(self, n_slots):
+        self.n_slots = n_slots
+        self.shardings = {"plan": {}}
+        self.trace_counts = {}
+        self.insert = self._insert
+        self.decode_slots = self._decode
+        self.evict = self._evict
+
+    def init_pool(self):
+        return {"pos": np.zeros(self.n_slots, np.int64)}
+
+    @staticmethod
+    def _onehot(idx):
+        out = np.zeros((len(idx), V), np.float32)
+        out[np.arange(len(idx)), np.asarray(idx) % V] = 1.0
+        return out
+
+    def _insert(self, params, pool, tokens, length, slot):
+        pool["pos"][slot] = int(length)
+        return self._onehot([int(length)]), pool
+
+    def _decode(self, params, pool, tokens, active):
+        logits = self._onehot(pool["pos"])
+        pool["pos"] += np.asarray(active, np.int64)
+        return logits, pool
+
+    def _evict(self, pool, slot):
+        pool["pos"][slot] = 0
+        return pool
+
+
+class FakeTimer:
+    """Deterministic perf_counter stand-in: each call advances by
+    ``step_s`` so every scheduler step 'measures' a fixed latency."""
+
+    def __init__(self, step_s=1e-3):
+        self.step_s = step_s
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += self.step_s
+        return self.t
+
+
+@pytest.fixture
+def model_cfg():
+    import repro.configs.gemma3_4b  # noqa: F401  (registers the arch)
+    from repro.configs import base
+    return base.reduced(base.get_config("gemma3-4b"))
+
+
+@pytest.fixture
+def make_fleet(model_cfg):
+    from repro.fleet import Fleet, FleetConfig
+
+    def _make(n_replicas, n_slots=2, timer_step=1e-3, **cfg_kw):
+        fcfg = FleetConfig(n_replicas=n_replicas, n_slots=n_slots, **cfg_kw)
+        return Fleet(model_cfg, FakeFns(n_slots), None, fcfg,
+                     max_seq_len=64, timer=FakeTimer(timer_step))
+    return _make

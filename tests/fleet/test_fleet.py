@@ -1,0 +1,188 @@
+"""The fleet loop on the fake engine: stream preservation across
+drain/respawn, arrival holding, stats/latency accounting, and the
+measured-latency feedback round-trip."""
+
+import numpy as np
+import pytest
+
+from repro.fleet import (FleetEvent, load_feedback, save_feedback)
+from repro.fleet.replica import ACTIVE, DRAINING, STOPPED
+from repro.serve.scheduler import Request, poisson_trace
+
+_V = 32
+
+
+def expected(L, n):
+    """The fake engine's greedy stream for prompt length L."""
+    return [L % _V] + [(L + i) % _V for i in range(n - 1)]
+
+
+def _trace(n=12, seed=3, temperature=0.0):
+    return poisson_trace(n, rate=1.1, prompt_lens=(2, 8), max_new_tokens=5,
+                         vocab_size=32, seed=seed, temperature=temperature,
+                         n_sessions=4)
+
+
+def test_streams_preserved_across_fleet_shapes(make_fleet):
+    """1-replica vs 3-replica fleet with a mid-trace drain + respawn:
+    byte-identical per-request streams (the fleet-level extension of
+    continuous-batching equivalence)."""
+    def run(n_replicas, events=(), temperature=0.0):
+        fl = make_fleet(n_replicas, n_slots=3)
+        trace = _trace(temperature=temperature)
+        fl.submit_trace(trace)
+        fl.run(events=list(events))
+        assert all(r.finished for r in trace)
+        return {r.rid: list(r.generated) for r in trace}
+
+    events = [FleetEvent(3, "drain", 0), FleetEvent(8, "respawn", 0),
+              FleetEvent(6, "drain", 2)]
+    assert run(1) == run(3, events)
+    # greedy streams also match the fake engine's closed form
+    for rid, toks in run(1).items():
+        L = len(_trace()[rid].prompt)
+        assert toks == expected(L, 5)
+
+
+def test_drain_displaces_and_blocks_admission(make_fleet):
+    fl = make_fleet(2, n_slots=1, spill_slack=10)
+    reqs = [Request(rid=i, prompt=np.zeros(3, np.int32), max_new_tokens=8,
+                    arrival=0.0, session="one-key") for i in range(4)]
+    fl.submit_trace(reqs)
+    fl.step()  # all land on the same replica (one session key)
+    loaded = max(fl.replicas, key=lambda r: r.load)
+    other = fl.replicas[1 - loaded.rid]
+    assert loaded.load == 4 and other.load == 0
+    displaced = loaded.drain()
+    assert loaded.state == DRAINING  # one admitted request still in flight
+    assert len(displaced) == 3      # n_slots=1: the rest were waiting
+    with pytest.raises(ValueError, match="only ACTIVE"):
+        loaded.submit(reqs[1])
+    # the fleet re-routes displaced work onto the healthy replica
+    for req in displaced:
+        fl._route_one(req)
+    assert other.load == 3
+    fl.run()
+    assert loaded.state == STOPPED
+    for r in reqs:
+        assert r.generated == expected(3, 8)
+
+
+def test_respawn_lifecycle_and_history(make_fleet):
+    fl = make_fleet(1, n_slots=2)
+    rep = fl.replicas[0]
+    with pytest.raises(ValueError, match="drain to STOPPED"):
+        rep.respawn()
+    fl.submit(Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=3))
+    fl.run()
+    tokens_before = rep.tokens_out
+    assert tokens_before == 3
+    rep.drain()
+    assert rep.state == STOPPED  # idle drain releases immediately
+    rep.respawn()
+    assert rep.state == ACTIVE and rep.n_respawns == 1
+    # history survives the scheduler swap
+    assert rep.tokens_out == tokens_before
+    assert len(rep.request_latencies()) == 1
+
+
+def test_whole_fleet_drained_holds_arrivals(make_fleet):
+    fl = make_fleet(2, n_slots=2)
+    fl.submit(Request(rid=0, prompt=np.zeros(3, np.int32), max_new_tokens=3,
+                      arrival=2.0))
+    stats = fl.run(events=[FleetEvent(0, "drain", 0), FleetEvent(0, "drain", 1),
+                           FleetEvent(4, "respawn", 0)])
+    assert stats["held_arrival_ticks"] > 0
+    assert stats["tokens_out"] == 3
+    assert stats["replicas"][0]["respawns"] == 1
+
+
+def test_never_drains_raises_not_spins(make_fleet):
+    fl = make_fleet(1, n_slots=2)
+    fl.submit(Request(rid=0, prompt=np.zeros(3, np.int32), max_new_tokens=3,
+                      arrival=1.0))
+    with pytest.raises(RuntimeError, match="failed to drain"):
+        fl.run(events=[FleetEvent(0, "drain", 0)])
+
+
+def test_bad_event_action_rejected():
+    with pytest.raises(ValueError, match="unknown fleet event"):
+        FleetEvent(0, "reboot", 0)
+
+
+def test_stats_and_latency_accounting(make_fleet):
+    fl = make_fleet(2, n_slots=2, timer_step=2e-3)
+    trace = _trace(8)
+    fl.submit_trace(trace)
+    stats = fl.run()
+    assert stats["tokens_out"] == sum(len(r.generated) for r in trace)
+    lat = stats["latency"]
+    assert lat["n"] == 8
+    for k in ("admission_wait_p50", "admission_wait_p99", "ttft_p50",
+              "ttft_p99", "e2e_p50", "e2e_p99"):
+        assert lat[k] >= 0.0
+    assert lat["e2e_p50"] <= lat["e2e_p99"]
+    rt = stats["routing"]
+    assert rt["n_routed"] == 8
+    assert sum(rt["per_replica"].values()) == 8
+    # the injected timer makes every measured tick exactly 2ms
+    for rid, ewma in rt["ewma_tick_s"].items():
+        assert ewma == pytest.approx(2e-3)
+    # per-request records are sorted and complete
+    recs = fl.request_latencies()
+    assert [r["rid"] for r in recs] == sorted(r.rid for r in trace)
+
+
+def test_feedback_roundtrip_and_warm_start(make_fleet, tmp_path):
+    d = str(tmp_path)
+    fl = make_fleet(2, n_slots=2, timer_step=1e-3, device_kind="cpu",
+                    topology="lumi", feedback_dir=d)
+    fl.submit_trace(_trace(8))
+    fl.run()
+    path = fl.save_feedback(timestamp="2026-08-08T00:00:00Z")
+    assert path.endswith("cpu__lumi__p2.json")
+
+    prior = load_feedback("cpu", "lumi", 2, dir=d)
+    assert prior is not None
+    assert prior.provenance["timestamp"] == "2026-08-08T00:00:00Z"
+    assert prior.provenance["source"] == "repro.fleet"
+    warm = prior.warm_start()
+    assert warm and all(v == pytest.approx(1e-3) for v in warm.values())
+
+    # a new fleet at the same key warm-starts its router from the file
+    fl2 = make_fleet(2, n_slots=2, device_kind="cpu", topology="lumi",
+                     feedback_dir=d)
+    for rid in warm:
+        assert fl2.router.latency[rid].count == 1
+        assert fl2.router.latency[rid].value == pytest.approx(1e-3)
+    # warm_start=False stays cold
+    fl3 = make_fleet(2, n_slots=2, device_kind="cpu", topology="lumi",
+                     feedback_dir=d, warm_start=False)
+    assert all(e.count == 0 for e in fl3.router.latency.values())
+
+
+def test_feedback_corrupt_file_never_poisons(tmp_path):
+    p = tmp_path / "cpu__lumi__p2.json"
+    p.write_text("{not json")
+    assert load_feedback("cpu", "lumi", 2, dir=str(tmp_path)) is None
+    p.write_text('{"format": 99}')
+    assert load_feedback("cpu", "lumi", 2, dir=str(tmp_path)) is None
+
+
+def test_save_feedback_needs_device_kind(make_fleet):
+    fl = make_fleet(1, n_slots=2)
+    with pytest.raises(ValueError, match="device_kind"):
+        fl.save_feedback()
+
+
+def test_feedback_atomic_write(tmp_path):
+    from repro.fleet.feedback import FleetFeedback, ReplicaStats
+    fb = FleetFeedback(device_kind="cpu", topology="torus", p=3,
+                       provenance={"timestamp": None},
+                       replicas={"0": ReplicaStats(ticks=4,
+                                                   ewma_tick_s=1e-3)})
+    path = save_feedback(fb, dir=str(tmp_path))
+    again = load_feedback("cpu", "torus", 3, dir=str(tmp_path))
+    assert again is not None and again.replicas["0"].ticks == 4
+    assert not path.endswith(".tmp")
+    assert list(tmp_path.iterdir()) == [tmp_path / "cpu__torus__p3.json"]

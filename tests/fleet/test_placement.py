@@ -1,0 +1,118 @@
+"""Topology-aware fleet placement: allocation shapes, strategy builders,
+and cost-model scoring — the paper's locality principle one level up.
+
+Load-bearing claims pinned here:
+
+  * on every grouped preset, the aware (chosen) placement's predicted
+    per-decode-step global-link bytes are *strictly below* naive
+    round-robin striping at the 8-rank acceptance shape — contiguous
+    packing keeps each TP group inside one fully-connected group;
+  * the torus takes the dimension-contiguous fallback (``tiers=None``)
+    instead of the historical ``tier_split`` raise, and its scores use
+    hop-weighted bytes.
+"""
+
+import pytest
+
+from repro.fleet.placement import (PlacementPlan, contiguous_placement,
+                                   decode_payloads, fleet_allocation,
+                                   format_plan, plan_placement,
+                                   round_robin_placement, score_placement)
+from repro.topology.presets import GROUPED_PRESETS, PRESETS
+
+PAYLOADS = decode_payloads(n_slots=4, n_heads=4, head_dim=32,
+                           vocab_size=1024)
+SHAPE = dict(n_ranks=8, n_replicas=2, tp=4)
+
+
+def test_decode_payloads_mirror_collective_plan():
+    (ar_coll, ar_b), (ag_coll, ag_b) = decode_payloads(4, 8, 64, 32000)
+    assert (ar_coll, ag_coll) == ("allreduce", "allgather")
+    assert ar_b == 4 * 8 * 64 * 2        # bf16 attention combine
+    assert ag_b == 4 * 32000 * 4         # f32 logits allgather
+
+
+def test_fleet_allocation_grouped_blocks():
+    # lumi: group_size=124, node_size=8; per_group=4 puts 4 consecutive
+    # rank slots in each group's first node
+    alloc = fleet_allocation("lumi", 8, per_group=4)
+    assert alloc == (0, 0, 0, 0, 124, 124, 124, 124)
+    # node boundaries inside a group: per_group wider than one node
+    alloc = fleet_allocation("leonardo", 8, per_group=8)  # node_size=4
+    assert alloc == (0, 0, 0, 0, 1, 1, 1, 1)
+
+
+def test_fleet_allocation_torus_identity():
+    assert fleet_allocation("torus", 8) == tuple(range(8))
+
+
+def test_fleet_allocation_per_group_bounds():
+    with pytest.raises(ValueError, match="per_group"):
+        fleet_allocation("lumi", 8, per_group=0)
+    cap = GROUPED_PRESETS["lumi"].group_size * GROUPED_PRESETS["lumi"].node_size
+    with pytest.raises(ValueError, match="per_group"):
+        fleet_allocation("lumi", 8, per_group=cap + 1)
+
+
+def test_strategy_builders():
+    assert contiguous_placement(8, 2, 4) == ((0, 1, 2, 3), (4, 5, 6, 7))
+    assert round_robin_placement(8, 2, 4) == ((0, 2, 4, 6), (1, 3, 5, 7))
+    with pytest.raises(ValueError, match="exceed"):
+        contiguous_placement(8, 3, 4)
+    with pytest.raises(ValueError, match="n_replicas"):
+        round_robin_placement(8, 0, 4)
+
+
+@pytest.mark.parametrize("preset", sorted(GROUPED_PRESETS))
+def test_aware_strictly_beats_round_robin_on_grouped(preset):
+    plan = plan_placement(preset, payloads=PAYLOADS, **SHAPE)
+    aware = plan.scores[plan.chosen]
+    rr = plan.scores["round_robin"]
+    assert aware.global_bytes == 0.0, "TP groups must stay inside groups"
+    assert aware.global_bytes < rr.global_bytes
+    # bytes move inside groups instead of disappearing
+    assert aware.local_bytes > 0.0
+
+
+def test_torus_fallback_plans_without_raise():
+    plan = plan_placement("torus", payloads=PAYLOADS, **SHAPE)
+    assert plan.tiers is None and plan.dims == (2, 2, 2)
+    assert plan.per_group is None
+    assert set(plan.scores) == {"contiguous", "round_robin"}
+    # hop-weighted accounting: everything is "global" on the torus
+    for sc in plan.scores.values():
+        assert sc.local_bytes == 0.0 and sc.global_bytes > 0.0
+    # chosen is the argmin over (global_bytes, tick_time_s)
+    best = min(plan.scores.values(),
+               key=lambda s: (s.global_bytes, s.tick_time_s))
+    assert plan.scores[plan.chosen].global_bytes == best.global_bytes
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_plan_every_packaged_preset(preset):
+    plan = plan_placement(preset, payloads=PAYLOADS, **SHAPE)
+    assert isinstance(plan, PlacementPlan)
+    assert len(plan.allocation) == 8
+    assert len(plan.replica_nodes) == 2
+    assert all(len(nodes) == 4 for nodes in plan.replica_nodes)
+    txt = format_plan(plan)
+    assert "<== chosen" in txt and preset in txt
+
+
+def test_single_replica_defaults_to_one_group():
+    plan = plan_placement("lumi", n_ranks=8, n_replicas=1, tp=8,
+                          payloads=PAYLOADS)
+    assert plan.per_group == 8
+    assert plan.scores["contiguous"].global_bytes == 0.0
+
+
+def test_tp1_scores_zero_traffic():
+    sc = score_placement("lumi", fleet_allocation("lumi", 4, per_group=4),
+                         [(0,), (1,), (2,), (3,)], tp=1, payloads=PAYLOADS)
+    assert sc.global_bytes == 0.0 and sc.tick_time_s == 0.0
+
+
+def test_score_rejects_wrong_tp():
+    with pytest.raises(ValueError, match="tp="):
+        score_placement("lumi", fleet_allocation("lumi", 8, per_group=4),
+                        [(0, 1, 2)], tp=4, payloads=PAYLOADS)

@@ -1,0 +1,123 @@
+"""Affinity routing: rendezvous stability, latency-weighted spill, and
+byte-for-byte determinism of routing decisions."""
+
+import numpy as np
+import pytest
+
+from repro.fleet.router import AffinityRouter, affinity_key
+from repro.serve.scheduler import Request
+
+
+def _req(rid, session=None, prompt=None):
+    p = prompt if prompt is not None else np.arange(4, dtype=np.int32)
+    return Request(rid=rid, prompt=p, max_new_tokens=4, session=session)
+
+
+def _router(n=3, **kw):
+    return AffinityRouter(replica_ids=range(n), **kw)
+
+
+def test_affinity_key_session_vs_prefix():
+    assert affinity_key(_req(0, session="s1")) == "session:s1"
+    a = affinity_key(_req(0, prompt=np.arange(20, dtype=np.int32)))
+    b = affinity_key(_req(1, prompt=np.arange(20, dtype=np.int32)))
+    assert a == b and a.startswith("prefix:")
+    # divergence past PREFIX_TOKENS does not split the key
+    c = np.arange(20, dtype=np.int32)
+    c[-1] = 0
+    assert affinity_key(_req(2, prompt=c)) == a
+    # divergence inside the prefix does
+    d = np.arange(20, dtype=np.int32)
+    d[0] = 9
+    assert affinity_key(_req(3, prompt=d)) != a
+
+
+def test_same_key_same_replica():
+    r = _router()
+    healthy, loads = [0, 1, 2], {0: 0, 1: 0, 2: 0}
+    targets = {r.route(_req(i, session="alpha"), healthy, loads).replica
+               for i in range(8)}
+    assert len(targets) == 1
+
+
+def test_rendezvous_minimal_disruption():
+    """Removing one replica only remaps keys it owned; everyone else's
+    preferred replica is unchanged — the property that keeps KV/prefix
+    affinity alive across drains."""
+    r = _router(3)
+    keys = [f"s{i}" for i in range(40)]
+    loads = {0: 0, 1: 0, 2: 0}
+    before = {k: r.route(_req(0, session=k), [0, 1, 2], loads).replica
+              for k in keys}
+    after = {k: r.route(_req(0, session=k), [0, 2], loads).replica
+             for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    assert all(before[k] == 1 for k in moved)
+    assert any(before[k] == 1 for k in keys)  # the property was exercised
+
+
+def test_spill_past_slack_to_least_loaded():
+    r = _router(2, spill_slack=2)
+    sess = "sticky"
+    pref = r.route(_req(0, session=sess), [0, 1], {0: 0, 1: 0}).preferred
+    other = 1 - pref
+    # within slack: affinity holds even when the other replica is idle
+    d = r.route(_req(1, session=sess), [0, 1], {pref: 2, other: 0})
+    assert d.replica == pref and not d.spilled
+    # past slack: spill to the least-loaded replica
+    d = r.route(_req(2, session=sess), [0, 1], {pref: 3, other: 0})
+    assert d.replica == other and d.spilled
+    assert r.n_spilled == 1 and r.n_routed == 3
+
+
+def test_latency_weight_scales_effective_load():
+    """A replica ticking 3x slower counts each queued request triple, so
+    it spills earlier than raw counts alone would."""
+    r = _router(2, spill_slack=2)
+    sess = "w"
+    pref = r.route(_req(0, session=sess), [0, 1], {0: 0, 1: 0}).preferred
+    other = 1 - pref
+    for _ in range(4):
+        r.observe(pref, 3e-3)
+        r.observe(other, 1e-3)
+    # raw load 2 is within slack, but effective load 2*3.0 = 6 > 0 + 2
+    d = r.route(_req(1, session=sess), [0, 1], {pref: 2, other: 0})
+    assert d.replica == other and d.spilled
+
+
+def test_unmeasured_replicas_weigh_one():
+    r = _router(2)
+    assert r._latency_weight(0, [0, 1]) == 1.0
+    r.observe(1, 5e-3)
+    # replica 0 still unmeasured: stays neutral rather than inf/0
+    assert r._latency_weight(0, [0, 1]) == 1.0
+    assert r._latency_weight(1, [0, 1]) == 1.0  # fastest measured
+
+
+def test_warm_start_seeds_ewmas():
+    r = _router(2)
+    r.warm_start({0: 2e-3, 7: 9e-3})  # unknown id ignored
+    assert r.latency[0].count == 1 and r.latency[0].value == 2e-3
+    assert r.latency[1].count == 0
+    # live observation updates from the prior, not from scratch
+    r.observe(0, 4e-3)
+    assert 2e-3 < r.latency[0].value < 4e-3
+
+
+def test_routing_is_deterministic():
+    reqs = [_req(i, session=f"s{i % 5}") for i in range(30)]
+    def run():
+        r = _router(3, spill_slack=1)
+        loads = {0: 0, 1: 0, 2: 0}
+        out = []
+        for q in reqs:
+            d = r.route(q, [0, 1, 2], loads)
+            loads[d.replica] += 1
+            out.append((d.replica, d.preferred, d.spilled))
+        return out
+    assert run() == run()
+
+
+def test_no_healthy_raises():
+    with pytest.raises(ValueError, match="no healthy"):
+        _router(2).route(_req(0), [], {})

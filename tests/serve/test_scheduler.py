@@ -172,6 +172,57 @@ def test_poisson_trace_shape():
     assert len({r.rid for r in trace}) == 10
 
 
+def test_poisson_trace_sessions_leave_tokens_unchanged():
+    """Session ids are drawn after the prompts: the tagged trace carries
+    byte-identical token content to the untagged one."""
+    plain = poisson_trace(10, rate=0.5, prompt_lens=(4, 12),
+                          max_new_tokens=8, vocab_size=100, seed=3)
+    tagged = poisson_trace(10, rate=0.5, prompt_lens=(4, 12),
+                           max_new_tokens=8, vocab_size=100, seed=3,
+                           n_sessions=3)
+    assert all(r.session is None for r in plain)
+    assert all(r.session in {"s0", "s1", "s2"} for r in tagged)
+    for a, b in zip(plain, tagged):
+        assert (a.prompt == b.prompt).all() and a.arrival == b.arrival
+
+
+def test_per_request_latency_stats():
+    """Per-request admission wait / TTFT / e2e in virtual ticks, plus the
+    nearest-rank percentile summary in stats()."""
+    from repro.serve.scheduler import _pct, latency_summary
+
+    sched = _fake_sched(n_slots=1)
+    # n_slots=1 serializes: rid 1 waits for rid 0 to retire
+    r0 = Request(rid=0, prompt=np.zeros(3, np.int32), max_new_tokens=4,
+                 arrival=0.0)
+    r1 = Request(rid=1, prompt=np.zeros(5, np.int32), max_new_tokens=4,
+                 arrival=0.0)
+    sched.submit(r0)
+    sched.submit(r1)
+    stats = sched.run()
+
+    recs = {r["rid"]: r for r in sched.request_latencies()}
+    assert set(recs) == {0, 1}
+    assert recs[0]["admission_wait"] == 0.0
+    assert recs[1]["admission_wait"] > 0.0     # blocked on the busy page
+    for r in recs.values():
+        # insert emits the first token at admission: TTFT == wait here
+        assert r["ttft"] == r["admission_wait"]
+        assert r["e2e"] >= r["ttft"] and r["tokens"] == 4
+
+    lat = stats["latency"]
+    assert lat["n"] == 2
+    assert lat["admission_wait_p50"] == 0.0
+    assert lat["admission_wait_p99"] == recs[1]["admission_wait"]
+    assert lat["e2e_p50"] <= lat["e2e_p99"]
+
+    # nearest-rank percentiles: deterministic, no interpolation
+    assert _pct([], 50.0) == 0.0
+    assert _pct([3.0, 1.0, 2.0], 50.0) == 2.0
+    assert _pct([3.0, 1.0, 2.0], 99.0) == 3.0
+    assert latency_summary([])["n"] == 0.0
+
+
 # ---------------------------------------------------------------------------
 # The real engine on the 8-device mesh: continuous-batching equivalence
 # ---------------------------------------------------------------------------

@@ -112,6 +112,28 @@ def test_fixed_backend_resolution_is_identity():
     assert api.resolve_backend("allreduce", 8, 1 << 20, cfg) == "ring"
 
 
+def test_tier_split_or_none_probe():
+    """The non-raising hierarchy probe: grouped presets agree with
+    tier_split, the torus reports None (callers take the
+    dimension-contiguous fallback), unknown presets still raise."""
+    from repro.topology import tier_split_or_none
+    from repro.topology.presets import tier_split
+
+    for name in PRESETS:
+        for p in (2, 8, 64):
+            got = tier_split_or_none(name, p)
+            if name == "torus":
+                assert got is None
+            else:
+                assert got == tier_split(name, p)
+    with pytest.raises(KeyError, match="unknown topology"):
+        tier_split_or_none("dragonfly", 8)
+    # candidates_for routes through the probe: hierarchical backends are
+    # filtered exactly where the hierarchy is absent
+    for coll in CANDIDATES:
+        assert "bine_hier" not in candidates_for(coll, "torus")
+
+
 def test_allreduce_cutoff_boundary_inclusive():
     cfg = api.CollectiveConfig(small_cutoff_bytes=16384)
     assert api.allreduce_uses_small(16384, cfg)          # == cutoff: small
