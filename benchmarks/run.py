@@ -10,7 +10,8 @@ that is what makes the perf trajectory real: CI uploads every
 instead of scrolling away in the log.  ``BENCH_autotune.json`` carries
 the empirical-tuner records (bench name ``autotune``);
 ``BENCH_serve_fleet.json`` the serving records (``serve_throughput``,
-``serve_fleet``); ``BENCH_collectives.json`` everything else.  Records
+``serve_fleet``); ``BENCH_fleet_chaos.json`` the chaos-drill records
+(``fleet_chaos``); ``BENCH_collectives.json`` everything else.  Records
 are
 ``{bench, config, metric, value}`` plus per-bench wall time, stamped
 with the ``--timestamp`` string the CALLER passes in (benchmarks never
@@ -38,6 +39,9 @@ AUTOTUNE_BENCHES = ("autotune",)
 #: benches whose records split into BENCH_serve_fleet.json
 SERVE_BENCHES = ("serve_fleet", "serve_throughput")
 
+#: benches whose records split into BENCH_fleet_chaos.json
+CHAOS_BENCHES = ("fleet_chaos",)
+
 BENCHES = [
     ("fig1_broadcast_traffic", "Fig. 1: bcast global-link bytes"),
     ("eq2_distance_ratio", "Eq. 2: distance ratio -> 2/3"),
@@ -47,6 +51,8 @@ BENCHES = [
     ("fugaku_torus", "Sec. 5.4: torus + multi-dimensional Bine"),
     ("hier_allreduce", "Sec. 6.2: hierarchical allreduce"),
     ("autotune", "Empirical tuner: replayed link traffic + refresh"),
+    ("fleet_chaos",
+     "chaos drill: MTTR + stream-equality gates on the supervised fleet"),
 ]
 
 #: benches that spin up the 8-host-device jax subprocess
@@ -81,6 +87,10 @@ def main() -> None:
                     default=os.path.join(ROOT, "BENCH_serve_fleet.json"),
                     help="output path for the serve/fleet records "
                          "(default: repo root)")
+    ap.add_argument("--json-chaos",
+                    default=os.path.join(ROOT, "BENCH_fleet_chaos.json"),
+                    help="output path for the chaos-drill records "
+                         "(default: repo root)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing the JSON records")
     ap.add_argument("--timestamp", default=None,
@@ -113,16 +123,20 @@ def main() -> None:
     if not args.no_json:
         is_autotune = lambda r: r["bench"] in AUTOTUNE_BENCHES  # noqa: E731
         is_serve = lambda r: r["bench"] in SERVE_BENCHES  # noqa: E731
+        is_chaos = lambda r: r["bench"] in CHAOS_BENCHES  # noqa: E731
         n_coll = recorder.write_subset(
             args.json, args.timestamp,
-            lambda r: not is_autotune(r) and not is_serve(r))
+            lambda r: not (is_autotune(r) or is_serve(r) or is_chaos(r)))
         n_auto = recorder.write_subset(
             args.json_autotune, args.timestamp, is_autotune)
         n_serve = recorder.write_subset(
             args.json_serve, args.timestamp, is_serve)
+        n_chaos = recorder.write_subset(
+            args.json_chaos, args.timestamp, is_chaos)
         print(f"\nwrote {n_coll} records to {args.json}")
         print(f"wrote {n_auto} records to {args.json_autotune}")
         print(f"wrote {n_serve} records to {args.json_serve}")
+        print(f"wrote {n_chaos} records to {args.json_chaos}")
     print("\nall benchmarks completed")
 
 

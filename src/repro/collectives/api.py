@@ -119,6 +119,26 @@ def resolve_backend(collective: str, p: int, nbytes: int,
                           tuning=cfg.tuning)
 
 
+def executable_at(backend: str, p: int) -> bool:
+    """Whether ``backend`` can *execute* collectives on an axis of size
+    ``p`` (vs merely plan/price them).
+
+    ``ring`` and ``xla`` run at any rank count.  The butterfly family
+    (bine, recdoub, bine_hier, pallas_fused) needs a power of two: the
+    non-pow2 adapter schedules (fold / 3-2 elimination) exist at the
+    IR/oracle/traffic level for planning and pricing, but
+    ``shmap.run_schedule`` executes full-permutation ppermute steps only.
+    ``auto`` counts as pow2-only too — its table may resolve to a
+    butterfly backend at any call site.  This is the dispatch predicate
+    elastic rescheduling keys on (``resilience.elastic.elastic_backend``).
+    """
+    if p < 1:
+        raise ValueError(f"axis size must be >= 1, got {p}")
+    if backend in ("ring", "xla"):
+        return True
+    return p & (p - 1) == 0
+
+
 def _resolve(cfg: CollectiveConfig, collective: str, x, axis: Axis,
              gathered: bool = False) -> CollectiveConfig:
     """Resolve backend="auto" / wire_dtype="auto" for this call site.

@@ -35,10 +35,35 @@ from __future__ import annotations
 import json
 import os
 import re
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 _FORMAT = 1
+
+#: suffix a quarantined (unparseable) feedback file is renamed to — the
+#: ``tuner.store`` convention, duplicated rather than imported (the fleet
+#: does not depend on the tuner package)
+CORRUPT_SUFFIX = ".corrupt"
+
+#: paths already warned about this process
+_WARNED_PATHS: set = set()
+
+
+def _quarantine_once(path: str, err: BaseException) -> None:
+    """Move an unparseable feedback file aside and warn once per path:
+    the next fleet run starts cold instead of re-tripping on it."""
+    if path not in _WARNED_PATHS:
+        _WARNED_PATHS.add(path)
+        warnings.warn(
+            f"fleet feedback file {path} is unreadable ({err!r}); "
+            f"quarantined to {path + CORRUPT_SUFFIX} — routing starts "
+            f"cold and the next save rewrites it",
+            stacklevel=3)
+    try:
+        os.replace(path, path + CORRUPT_SUFFIX)
+    except OSError:
+        pass  # read-only dir: the load already skipped the file
 
 #: default EWMA smoothing: ~last 10 ticks dominate
 EWMA_ALPHA = 0.2
@@ -162,11 +187,17 @@ def save_feedback(fb: FleetFeedback, dir: Optional[str] = None) -> str:
 def load_feedback(device_kind: str, topology: str, p: int,
                   dir: Optional[str] = None) -> Optional[FleetFeedback]:
     """The persisted set for one key, or None (missing/corrupt files
-    never poison a run — routing just starts cold)."""
+    never poison a run — routing just starts cold).  A corrupt file is
+    additionally quarantined (renamed ``.corrupt``) with one warning per
+    path per process, matching ``tuner.store``."""
     fb = FleetFeedback(device_kind=device_kind, topology=topology, p=p)
     path = feedback_path(fb, dir)
     try:
         with open(path) as f:
             return FleetFeedback.from_json_dict(json.load(f))
-    except (OSError, ValueError, KeyError, json.JSONDecodeError):
+    except FileNotFoundError:
+        return None
+    except (OSError, ValueError, KeyError, TypeError,
+            json.JSONDecodeError) as e:
+        _quarantine_once(path, e)
         return None

@@ -93,6 +93,11 @@ class Fleet:
             r.rid: [] for r in self.replicas}
         self.clock = 0
         self._held = 0      # ticks arrivals waited because nothing was ACTIVE
+        #: crash policy: ``None`` re-raises a replica-tick exception (the
+        #: pre-supervisor behavior — the loop dies); a supervisor installs
+        #: ``handler(replica, exc)`` to convert it into crash -> respawn
+        #: (see ``repro.resilience.supervisor.FleetSupervisor``)
+        self.fault_handler = None
         if fcfg.device_kind is not None and fcfg.warm_start:
             prior = FB.load_feedback(fcfg.device_kind, fcfg.topology,
                                      fcfg.n_replicas, dir=fcfg.feedback_dir)
@@ -146,23 +151,42 @@ class Fleet:
                 rep.respawn()
         self._deliver_arrivals()
         for rep in self.replicas:
-            report = rep.tick(self.clock)
+            try:
+                report = rep.tick(self.clock)
+            except Exception as e:
+                # an unplanned replica exception: without a supervisor it
+                # kills the loop (re-raised, launch/fleet.py reports it);
+                # with one it becomes crash -> replay -> respawn
+                if self.fault_handler is None:
+                    raise
+                self.fault_handler(rep, e)
+                continue
             if report.worked:
                 self._tick_log[rep.rid].append(report.latency_s)
                 self.router.observe(rep.rid, report.latency_s)
         self.clock += 1
         return bool(self._pending or any(r.has_work for r in self.replicas))
 
-    def run(self, events: Sequence[FleetEvent] = ()) -> dict:
+    def run(self, events: Sequence[FleetEvent] = (),
+            max_ticks: Optional[int] = None) -> dict:
         """Drain every submitted request; returns :meth:`stats`.
 
         ``events`` fire at their scheduled tick.  A fleet whose every
         replica is draining holds arrivals until a respawn; a trace that
         can never drain (no ACTIVE replica and no future respawn) raises
-        instead of spinning.
+        instead of spinning.  ``max_ticks`` is the guard against stall
+        scenarios the heuristic cannot see (a livelocked engine, an event
+        schedule that starves a request forever): exceeding it raises
+        instead of looping silently.
         """
         events = tuple(events)
         while self.step(events):
+            if max_ticks is not None and self.clock > max_ticks:
+                raise RuntimeError(
+                    f"fleet exceeded max_ticks={max_ticks} with "
+                    f"{len(self._pending)} pending and "
+                    f"{sum(r.has_work for r in self.replicas)} replicas "
+                    f"still holding work — livelock or undersized budget")
             if self._stalled(events):
                 raise RuntimeError(
                     f"fleet failed to drain at tick {self.clock} "

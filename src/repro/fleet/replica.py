@@ -12,6 +12,9 @@ Lifecycle::
     ACTIVE ── drain() ──▶ DRAINING ── in-flight retires ──▶ STOPPED
       ▲        (ejects un-admitted requests for re-routing;              │
       │         admitted ones keep decoding to completion)               │
+      ├── crash() ── unplanned stop: ejects waiting AND in-flight ───────┤
+      │   (in-flight prepared for byte-identical replay — see            │
+      │    ``ContinuousBatchingScheduler.eject_all``)                    │
       └─────────────────────── respawn() ◀───────────────────────────────┘
                         (fresh scheduler + pool, same engine)
 
@@ -27,7 +30,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 from repro.serve.scheduler import ContinuousBatchingScheduler, Request
 
@@ -63,6 +66,12 @@ class Replica:
         self.timer = timer
         self.state = ACTIVE
         self.n_respawns = 0
+        self.n_crashes = 0
+        #: armed fault (chaos injection): raised by the NEXT tick, mid-tick
+        self._fault: Optional[BaseException] = None
+        #: one-tick measured-latency multiplier (chaos straggler); the
+        #: supervisor arms it and it disarms itself after one worked tick
+        self.latency_scale = 1.0
         #: latency records + token counts retired by *previous*
         #: incarnations (a respawn replaces the scheduler, not history)
         self._done_latencies: List[Dict[str, float]] = []
@@ -105,14 +114,18 @@ class Replica:
             if self.state == DRAINING and not self.has_work:
                 self.state = STOPPED
             return TickReport(self.rid, False, 0.0, 0)
+        if self._fault is not None:
+            fault, self._fault = self._fault, None
+            raise fault
         self.sched.clock = float(now)
         before = self.sched.tokens_out
         t0 = self.timer()
         self.sched.step()
         dt = self.timer() - t0
+        scale, self.latency_scale = self.latency_scale, 1.0
         if self.state == DRAINING and not self.has_work:
             self.state = STOPPED
-        return TickReport(self.rid, True, max(dt, 0.0),
+        return TickReport(self.rid, True, max(dt, 0.0) * scale,
                           self.sched.tokens_out - before)
 
     # -- elasticity ----------------------------------------------------------
@@ -127,6 +140,29 @@ class Replica:
         displaced = self.sched.eject_waiting()
         if not self.has_work:
             self.state = STOPPED
+        return displaced
+
+    def inject_fault(self, exc: BaseException) -> None:
+        """Arm ``exc`` to be raised by the next tick that would have
+        stepped the scheduler — the chaos crash-mid-tick injection point.
+        The exception surfaces through ``Fleet.step``'s tick loop exactly
+        like an engine/XLA error would, so the supervisor's recovery path
+        is exercised for real, not simulated."""
+        self._fault = exc
+
+    def crash(self) -> List[Request]:
+        """Unplanned stop: eject the waiting queue AND the in-flight
+        requests (prepared for byte-identical replay — see
+        ``ContinuousBatchingScheduler.eject_all``), retire this
+        incarnation's accounting, and go STOPPED without draining.
+        ``respawn`` brings the replica back with a fresh scheduler."""
+        if self.state == STOPPED:
+            return []
+        displaced = self.sched.eject_all()
+        # accounting stays on the dead scheduler until ``respawn``
+        # harvests it — tokens_out/request_latencies keep reading through
+        self.state = STOPPED
+        self.n_crashes += 1
         return displaced
 
     def respawn(self) -> None:

@@ -94,6 +94,13 @@ class AffinityRouter:
         """Feed one measured tick latency into the replica's EWMA."""
         self.latency[replica].update(tick_latency_s)
 
+    def reset(self, replica: int) -> None:
+        """Forget a replica's measured latency (a respawned incarnation
+        is a new host as far as the EWMA is concerned — the supervisor
+        calls this so a straggler-poisoned estimate does not outlive the
+        crash that evicted it)."""
+        self.latency[replica] = Ewma(alpha=self.ewma_alpha)
+
     def _latency_weight(self, replica: int, healthy: Sequence[int]) -> float:
         """EWMA latency relative to the fastest healthy replica (1.0 when
         nothing is measured yet): a replica ticking 2x slower counts each

@@ -29,7 +29,9 @@ feedback store that warm-starts the next run's routing.
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+import traceback
 from typing import List
 
 from repro.fleet.placement import decode_payloads, format_plan, plan_placement
@@ -44,6 +46,23 @@ def _events(args) -> List["FleetEvent"]:  # noqa: F821 — imported lazily
             tick, _, rep = spec.partition(":")
             evs.append(FleetEvent(int(tick), action, int(rep)))
     return sorted(evs, key=lambda e: (e.tick, e.action, e.replica))
+
+
+def _chaos_schedule(args):
+    """The run's fault schedule: explicit ``--chaos-events`` specs win;
+    ``--chaos-seed`` alone generates crash/straggler events over the
+    trace.  Returns None when neither flag is given (plain fleet loop,
+    no supervisor)."""
+    from repro.resilience import ChaosSchedule, generate_events, parse_event
+    evs = [parse_event(s) for s in args.chaos_events]
+    if not evs and args.chaos_seed is not None:
+        evs = list(generate_events(args.chaos_seed,
+                                   n_ticks=max(4, args.requests),
+                                   n_replicas=args.replicas,
+                                   n_events=args.chaos_n_events))
+    if not evs:
+        return None
+    return ChaosSchedule(evs)
 
 
 def run_dryrun(args) -> None:
@@ -115,11 +134,19 @@ def run_serve(args) -> None:
                        top_k=args.top_k, top_p=args.top_p,
                        device_kind=args.device_kind,
                        warm_start=not args.cold_start)
+    chaos = _chaos_schedule(args)
     with set_mesh(mesh):
         fleet = Fleet(cfg, fns, params, fcfg, S)
         fleet.submit_trace(trace)
         t0 = time.time()
-        stats = fleet.run(events=events)
+        if chaos is not None:
+            from repro.resilience import FleetSupervisor, SupervisorConfig
+            sup = FleetSupervisor(fleet, chaos, SupervisorConfig(
+                max_ticks=args.max_ticks, seed=args.seed))
+            print(f"[fleet] chaos: {chaos.signature()}")
+            stats = sup.run(events=events)
+        else:
+            stats = fleet.run(events=events, max_ticks=args.max_ticks)
         dt = time.time() - t0
 
     print(f"[fleet] {args.replicas} replicas x {args.slots} pages x {S} "
@@ -144,6 +171,16 @@ def run_serve(args) -> None:
               f"{rs['tokens_out']} tokens / {rs['decode_steps']} steps, "
               f"{rs['respawns']} respawns, "
               f"ewma tick {rs['ewma_tick_s']*1e3:.2f}ms")
+    res = stats.get("resilience")
+    if res is not None:
+        mttr = res["mttr_ticks"]
+        print(f"[fleet] resilience: {len(res['crashes'])} crashes, "
+              f"mttr {'n/a' if mttr is None else f'{mttr:.1f} ticks'}, "
+              f"{len(res['shed'])} shed / {res['requeued']} requeued")
+        for c in res["crashes"]:
+            print(f"[fleet]   crash r{c['replica']}@{c['crash_tick']}: "
+                  f"{c['displaced']} displaced, respawned @"
+                  f"{c['respawn_tick']} (ttr {c['ttr']})")
     print(f"[fleet] traces: {fns.trace_counts}")
     done = sum(r.finished for r in trace)
     print(f"[fleet] finished {done}/{len(trace)}; sample request 0 ids:",
@@ -193,6 +230,20 @@ def main(argv=None):
     ap.add_argument("--respawn", action="append", default=[],
                     metavar="TICK:REPLICA",
                     help="respawn a drained replica (repeatable)")
+    # chaos / resilience (repro.resilience)
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="generate a seed-driven crash/straggler schedule "
+                         "and run under the self-healing supervisor")
+    ap.add_argument("--chaos-events", action="append", default=[],
+                    metavar="TICK:KIND:TARGET[:MAG]",
+                    help="explicit fault events (repeatable; kinds: crash, "
+                         "straggler); overrides --chaos-seed generation")
+    ap.add_argument("--chaos-n-events", type=int, default=2,
+                    help="events drawn when --chaos-seed generates the "
+                         "schedule")
+    ap.add_argument("--max-ticks", type=int, default=None,
+                    help="hard fleet-tick budget; exceeding it exits "
+                         "non-zero instead of looping (livelock guard)")
     # measured-latency feedback store
     ap.add_argument("--device-kind", default=None,
                     help="feedback-store key part; enables warm start")
@@ -210,7 +261,20 @@ def main(argv=None):
         return
     if args.topology == "all":
         args.topology = "tpu_multipod"
-    run_serve(args)
+    try:
+        run_serve(args)
+    except SystemExit:
+        raise
+    except Exception as e:
+        # an unhandled serve-loop death (engine error without a chaos
+        # supervisor, livelocked trace past --max-ticks, ...) must exit
+        # non-zero with a summary, not return 0 with a buried traceback
+        frame = traceback.extract_tb(e.__traceback__)[-1]
+        summary = "".join(
+            traceback.format_exception_only(type(e), e)).strip()
+        print(f"[fleet] FATAL: serve loop died at {frame.filename}:"
+              f"{frame.lineno} in {frame.name}: {summary}", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -64,6 +64,16 @@ def main(argv=None) -> int:
     ap.add_argument("--merge-store", action="store_true",
                     help="refresh from all cached measurements for this "
                          "(topology, device kind), not just this run's")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="per-cell wall-clock budget in seconds (compile + "
+                         "warmup + reps); a cell past it is retried then "
+                         "skipped, the rest of the grid still measured")
+    ap.add_argument("--retries", type=int, default=None,
+                    help="extra attempts per timed-out/failed cell before "
+                         "skipping it (default: the grid's own setting)")
+    ap.add_argument("--backoff-s", type=float, default=None,
+                    help="sleep between a cell's attempts, seconds "
+                         "(linear: attempt * backoff)")
     ap.add_argument("--dry", action="store_true",
                     help="list the grid cells and exit without timing")
     args = ap.parse_args(argv)
@@ -78,6 +88,13 @@ def main(argv=None) -> int:
     if args.topology not in PRESETS:
         ap.error(f"unknown topology {args.topology!r}; known: {PRESETS}")
     spec = GRIDS[args.grid]
+    import dataclasses as _dc
+    overrides = {k: v for k, v in (("budget_s", args.budget_s),
+                                   ("retries", args.retries),
+                                   ("backoff_s", args.backoff_s))
+                 if v is not None}
+    if overrides:
+        spec = _dc.replace(spec, **overrides)
 
     if args.dry:
         for p in spec.ps:

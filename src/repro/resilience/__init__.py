@@ -1,0 +1,44 @@
+"""Elastic fault-tolerant runtime: deterministic fault injection,
+survivor-set rescheduling, and a self-healing serve fleet.
+
+Three layers, one fault model (see README "Fault tolerance"):
+
+  * :mod:`repro.resilience.chaos` — every fault is a scheduled
+    :class:`~repro.resilience.chaos.FaultEvent` (replica crash mid-tick,
+    straggler tick, global-link slowdown, train-rank loss, store-file
+    corruption), either written out explicitly or generated from a seed,
+    so every chaos run is exactly reproducible.
+  * :mod:`repro.resilience.elastic` — on rank loss, rebuild the
+    collective schedules at p' = p - k through the schedule IR's
+    non-pow2 adapters, re-derive the tier stack over the degraded group
+    occupancy, repartition the ZeRO bucket rows over the survivors, and
+    resume from the last checkpoint bit-identically to a fresh p'-rank
+    run.
+  * :mod:`repro.resilience.supervisor` — a self-healing layer over the
+    serve fleet: per-tick heartbeats, crash detection that converts an
+    unplanned replica exception into stop -> respawn with in-flight
+    requests replayed from prompt + generated prefix (token streams stay
+    byte-identical to the fault-free run), and deadline-based admission
+    backpressure (shed, or re-queue with deterministic jittered backoff).
+"""
+
+from repro.resilience.chaos import (CHAOS_KINDS, ChaosSchedule, FaultEvent,
+                                    corrupt_file, degraded_topology,
+                                    generate_events, parse_event,
+                                    rank_loss_schedule)
+from repro.resilience.elastic import (SurvivorPlan, elastic_backend,
+                                      elastic_restore, elastic_train_config,
+                                      plan_survivors, replan_buckets,
+                                      survivor_set)
+from repro.resilience.supervisor import (FleetSupervisor, ReplicaCrash,
+                                         SupervisorConfig)
+
+__all__ = [
+    "CHAOS_KINDS", "ChaosSchedule", "FaultEvent", "corrupt_file",
+    "degraded_topology", "generate_events", "parse_event",
+    "rank_loss_schedule",
+    "SurvivorPlan", "elastic_backend", "elastic_restore",
+    "elastic_train_config", "plan_survivors", "replan_buckets",
+    "survivor_set",
+    "FleetSupervisor", "ReplicaCrash", "SupervisorConfig",
+]

@@ -109,7 +109,13 @@ class ContinuousBatchingScheduler:
     # -- submission ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        if len(req.prompt) + req.max_new_tokens > self.max_seq_len:
+        # final page occupancy = prompt + tokens still to generate; a
+        # crash-replayed request arrives with its generated prefix folded
+        # into the prompt (eject_all), so the budget counts the REMAINING
+        # tokens — for a fresh request (generated empty) this is the
+        # original prompt + budget check unchanged
+        if (len(req.prompt) + req.max_new_tokens - len(req.generated)
+                > self.max_seq_len):
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + budget "
                 f"({req.max_new_tokens}) exceeds page size {self.max_seq_len}")
@@ -233,6 +239,32 @@ class ContinuousBatchingScheduler:
         out = [req for _, _, req in sorted(self._waiting)]
         self._waiting.clear()
         return out
+
+    def eject_all(self) -> List[Request]:
+        """Crash-path eject: the waiting queue AND every in-flight
+        request, the latter prepared for byte-identical replay by folding
+        the generated prefix into the prompt.
+
+        Sampling is keyed per (rid, token-index) and the pool is
+        re-prefilled from the extended prompt on re-admission, so the
+        request's next sampled token — index ``len(generated)`` — is the
+        token the fault-free run would have produced; ``generated`` is
+        left intact so retirement (``max_new_tokens``) and ttft stats
+        survive the crash.  The pool state itself is abandoned (the
+        crashed replica's scheduler is discarded on respawn).
+        """
+        out = self.eject_waiting()
+        for slot in sorted(self._running):
+            req = self._running[slot]
+            if req.generated:
+                req.prompt = np.concatenate(
+                    [req.prompt,
+                     np.asarray(req.generated, np.int32)]).astype(np.int32)
+            self.alloc.release(slot)
+            self._active[slot] = 0
+            out.append(req)
+        self._running.clear()
+        return sorted(out, key=lambda r: (r.arrival, r.rid))
 
     def request_latencies(self) -> List[Dict[str, float]]:
         """Per-retired-request latency records (virtual ticks):

@@ -22,10 +22,10 @@ from .presets import (PRESETS, get_topology, tier_split, tier_split_or_none,
                       torus_dims)
 from .table import (ANALYTIC, MEASURED, P_GRID, SIZE_BUCKETS, TUNINGS,
                     DecisionTable, build_table, decision_provenance,
-                    load_table, measured_dir, measured_table_path,
-                    merge_measured, select_backend, select_bucket_bytes,
-                    select_wire, table_path, wire_decision_provenance,
-                    with_measured_cells)
+                    invalidate_tables, load_table, measured_dir,
+                    measured_table_path, merge_measured, select_backend,
+                    select_bucket_bytes, select_wire, table_path,
+                    wire_decision_provenance, with_measured_cells)
 
 __all__ = [
     "BUCKET_SIZE_CANDIDATES", "CANDIDATES", "SMALL_CUTOFF_BYTES",
@@ -35,7 +35,8 @@ __all__ = [
     "PRESETS", "get_topology", "tier_split", "tier_split_or_none",
     "torus_dims",
     "ANALYTIC", "MEASURED", "P_GRID", "SIZE_BUCKETS", "TUNINGS",
-    "DecisionTable", "build_table", "decision_provenance", "load_table",
+    "DecisionTable", "build_table", "decision_provenance",
+    "invalidate_tables", "load_table",
     "measured_dir", "measured_table_path", "merge_measured",
     "select_backend", "select_bucket_bytes", "select_wire", "table_path",
     "wire_decision_provenance", "with_measured_cells",

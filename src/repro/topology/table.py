@@ -452,14 +452,19 @@ def table_path(topology: str, cache_dir: Optional[str] = None) -> str:
 
 def load_table(topology: str, cache_dir: Optional[str] = None,
                build_if_missing: bool = True,
-               tuning: str = ANALYTIC) -> DecisionTable:
+               tuning: str = ANALYTIC,
+               p: Optional[int] = None) -> DecisionTable:
     """Load a preset's table from disk, building + caching it if absent.
 
     ``tuning="measured"`` additionally merges the topology's measured
     table (``measured_table_path``) over the analytic base; a missing or
-    grid-stale measured table warns once per topology and falls back to
-    the analytic decisions — auto-dispatch must never fail because a
-    machine was not tuned yet.
+    grid-stale measured table warns once per ``(topology, p, tuning)``
+    and falls back to the analytic decisions — auto-dispatch must never
+    fail because a machine was not tuned yet.  ``p`` only scopes that
+    warning dedup (the ``select_*`` entry points pass the rank count
+    through): after ``invalidate_tables`` an elastic reschedule at a new
+    survivor count re-surfaces the fallback once for p', instead of the
+    old blanket once-per-topology key swallowing it.
     """
     if tuning not in TUNINGS:
         raise ValueError(f"unknown tuning {tuning!r}; expected one of "
@@ -482,7 +487,7 @@ def load_table(topology: str, cache_dir: Optional[str] = None,
         return base
     mpath = measured_table_path(topology)
     if not os.path.exists(mpath):
-        _warn_once(("no-measured-table", topology),
+        _warn_once(("no-measured-table", topology, p, tuning),
                    f"tuning='measured' for topology {topology!r} but no "
                    f"measured table at {mpath}; falling back to analytic "
                    f"decisions (run `python -m repro.launch.tune` to "
@@ -494,18 +499,35 @@ def load_table(topology: str, cache_dir: Optional[str] = None,
             json.JSONDecodeError) as e:
         # any unusable measured file (grid-stale, truncated, hand-edited)
         # falls back — auto-dispatch must never fail for a bad tune run
-        _warn_once(("stale-measured-table", topology),
+        _warn_once(("stale-measured-table", topology, p, tuning),
                    f"measured table {mpath} unusable ({e!r}); falling "
                    f"back to analytic decisions")
         return base
 
 
-def _table_for(topology: str, tuning: str) -> DecisionTable:
+def _table_for(topology: str, tuning: str,
+               p: Optional[int] = None) -> DecisionTable:
     key = (topology, tuning)
     table = _LOADED.get(key)
     if table is None:
-        table = _LOADED[key] = load_table(topology, tuning=tuning)
+        table = _LOADED[key] = load_table(topology, tuning=tuning, p=p)
     return table
+
+
+def invalidate_tables(topology: Optional[str] = None) -> None:
+    """Drop the per-process table cache (all presets, or one).
+
+    The elastic reschedule hook: after a rank loss, the next
+    ``select_*`` lookup re-loads (and re-merges the measured cells of)
+    the table instead of serving decisions cached for the pre-loss run —
+    and any measured-table fallback warns again for the new rank count
+    (the ``_warn_once`` keys carry ``(topology, p, tuning)``).
+    """
+    if topology is None:
+        _LOADED.clear()
+        return
+    for key in [k for k in _LOADED if k[0] == topology]:
+        del _LOADED[key]
 
 
 def select_backend(collective: str, p: int, nbytes: float,
@@ -516,14 +538,15 @@ def select_backend(collective: str, p: int, nbytes: float,
     Called at trace time (shapes are static under jit/shard_map), so the
     lookup has zero runtime cost in the compiled program.
     """
-    return _table_for(topology, tuning).lookup(collective, p, nbytes)
+    return _table_for(topology, tuning, p).lookup(collective, p, nbytes)
 
 
 def decision_provenance(collective: str, p: int, nbytes: float,
                         topology: str = "tpu_multipod",
                         tuning: str = ANALYTIC) -> str:
     """"measured" | "analytic" for the cell ``select_backend`` would use."""
-    return _table_for(topology, tuning).provenance_of(collective, p, nbytes)
+    return _table_for(topology, tuning, p).provenance_of(collective, p,
+                                                   nbytes)
 
 
 def select_wire(collective: str, p: int, nbytes: float,
@@ -536,14 +559,14 @@ def select_wire(collective: str, p: int, nbytes: float,
     built pricing each wire dtype's compressed bytes against that, so the
     caller does NOT pre-scale.
     """
-    return _table_for(topology, tuning).lookup_wire(collective, p, nbytes)
+    return _table_for(topology, tuning, p).lookup_wire(collective, p, nbytes)
 
 
 def wire_decision_provenance(collective: str, p: int, nbytes: float,
                              topology: str = "tpu_multipod",
                              tuning: str = ANALYTIC) -> str:
     """"measured" | "analytic" for the cell ``select_wire`` would use."""
-    return _table_for(topology, tuning).wire_provenance_of(
+    return _table_for(topology, tuning, p).wire_provenance_of(
         collective, p, nbytes)
 
 
@@ -558,7 +581,7 @@ def select_bucket_bytes(p: int, topology: str = "tpu_multipod",
     once per (topology, p) — not once per lookup, which would log dozens
     of times per bucketed train step.
     """
-    table = _table_for(topology, tuning)
+    table = _table_for(topology, tuning, p)
     q = p if p in table.bucket_bytes else table.nearest_p(p)
     if q in table.bucket_bytes:
         return table.bucket_bytes[q]

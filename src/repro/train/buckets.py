@@ -117,6 +117,23 @@ class BucketPlan:
         }
 
 
+def plan_delta(old: "BucketPlan", new: "BucketPlan") -> dict:
+    """What an elastic replan changed between two plans over the SAME
+    param tree (``resilience.elastic.replan_buckets``): a leaf whose
+    ZeRO dim divided the old ``n_dp`` but not the survivor count falls
+    back to the replicated group, and the packing reshuffles around it.
+    The summary the chaos benchmark and the rank-loss logs report."""
+    old_sharded = {s.index for b in old.buckets for s in b.slots}
+    new_sharded = {s.index for b in new.buckets for s in b.slots}
+    return {
+        "n_dp": [old.n_dp, new.n_dp],
+        "n_buckets": [len(old.buckets), len(new.buckets)],
+        "n_replicated_leaves": [len(old.replicated), len(new.replicated)],
+        "newly_replicated": sorted(old_sharded - new_sharded),
+        "newly_sharded": sorted(new_sharded - old_sharded),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Planning (static shapes only — runs at trace time, zero runtime cost)
 # ---------------------------------------------------------------------------

@@ -92,6 +92,20 @@ def latest_step(path: str) -> Optional[int]:
     return s[-1] if s else None
 
 
+def load_leaf(data, i: int, manifest: Dict) -> np.ndarray:
+    """One leaf out of ``arrays.npz``, with its manifest dtype restored.
+
+    npz round-trips extension dtypes (bfloat16 & friends from ml_dtypes)
+    as raw void bytes — ``V2`` instead of ``bfloat16`` — so the recorded
+    dtype string is the source of truth: void loads are re-viewed as the
+    dtype the save actually held."""
+    arr = data[f"a{i}"]
+    dtypes = manifest.get("dtypes") or []
+    if arr.dtype.kind == "V" and i < len(dtypes):
+        arr = arr.view(np.dtype(dtypes[i]))
+    return arr
+
+
 def restore(path: str, step: int, like: Any) -> Any:
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  Shapes must match the logical (global) shapes."""
@@ -105,7 +119,7 @@ def restore(path: str, step: int, like: Any) -> Any:
     paths = manifest.get("paths") or _leaf_paths(like)
     flat = []
     for i, lk in enumerate(flat_like):
-        arr = data[f"a{i}"]
+        arr = load_leaf(data, i, manifest)
         label = paths[i] if i < len(paths) else f"leaf {i}"
         assert tuple(arr.shape) == tuple(np.shape(lk)), (
             f"{label}: ckpt {arr.shape} vs expected {np.shape(lk)}")

@@ -334,6 +334,10 @@ def _small_allreduce(tcfg: TrainConfig, x):
     b = _backend_for(tcfg, "allreduce", x)
     if b == "xla":
         return lax.psum(x, tcfg.dp_axes)
+    if b == "ring":
+        # the butterfly trees are pow2-only; ring pads to any p — the
+        # path a non-pow2 survivor set (resilience.elastic) trains on
+        return shmap.allreduce_ring(x, tcfg.dp_axes)
     algo = "recdoub" if b == "recdoub" else "bine"
     return shmap.allreduce_small(x, tcfg.dp_axes, algo)
 
@@ -551,6 +555,18 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
     step(params, state, batch) -> (params, state, metrics)
     """
     n_dp = int(np.prod([mesh.shape[a] for a in tcfg.dp_axes]))
+    if n_dp > 1:
+        from repro.collectives.api import executable_at
+        if not executable_at(tcfg.backend, n_dp):
+            # fail at build time with the fix, not mid-trace inside a
+            # ppermute: the butterfly schedules need a pow2 DP axis
+            raise ValueError(
+                f"backend={tcfg.backend!r} cannot execute at non-power-of-"
+                f"two n_dp={n_dp} (butterfly schedules need pow2 axes; "
+                f"the non-pow2 adapters are plan/price-level only).  Use "
+                f"backend='ring' or 'xla', or derive the config via "
+                f"repro.resilience.elastic.elastic_train_config, which "
+                f"picks the executable fallback for a survivor set.")
     from repro.models import sharding as _sh
     _sh.set_model_parallel(mesh.shape.get(tcfg.model_axis, 1))
     layout = zero.zero_layout(model_cfg, params_shapes, n_dp)

@@ -18,9 +18,10 @@ produces are for wiring tests, not performance claims (see README).
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -28,6 +29,46 @@ from repro.tuner.store import Measurement, MeasurementSet
 
 #: collectives the probe can drive end-to-end through collectives.api
 PROBE_COLLECTIVES = ("allreduce", "reduce_scatter", "allgather")
+
+
+class ProbeTimeout(RuntimeError):
+    """One probe cell exceeded its wall-clock budget (a hung compile or a
+    wedged collective); the grid sweep retries or skips the cell instead
+    of hanging the whole tune run."""
+
+
+def call_with_budget(fn: Callable[[], object],
+                     budget_s: Optional[float]) -> object:
+    """Run ``fn()`` with a wall-clock budget; ``None`` = unbudgeted.
+
+    The call runs on a worker thread and the caller joins with a timeout:
+    a wedged jax compile/execute cannot be interrupted from Python, so on
+    timeout the worker is *abandoned* (a daemon thread that dies with the
+    process) and :class:`ProbeTimeout` raises — the price of not hanging
+    the sweep.  Exceptions from ``fn`` re-raise in the caller.
+    """
+    if budget_s is None:
+        return fn()
+    if budget_s <= 0:
+        raise ValueError(f"budget_s must be > 0, got {budget_s}")
+    box: Dict[str, object] = {}
+
+    def worker():
+        try:
+            box["result"] = fn()
+        except BaseException as e:   # re-raised in the caller below
+            box["error"] = e
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    t.join(budget_s)
+    if t.is_alive():
+        raise ProbeTimeout(
+            f"probe cell exceeded its {budget_s:g}s wall-clock budget "
+            f"(worker abandoned)")
+    if "error" in box:
+        raise box["error"]  # type: ignore[misc]
+    return box.get("result")
 
 
 @dataclass(frozen=True)
@@ -39,6 +80,13 @@ class GridSpec:
     ps: Tuple[int, ...]
     warmup: int = 2
     reps: int = 10
+    #: per-cell wall-clock budget (compile + warmup + reps), seconds;
+    #: None = unbudgeted (the pre-resilience behavior)
+    budget_s: Optional[float] = None
+    #: extra attempts after a timed-out/failed cell before skipping it
+    retries: int = 0
+    #: sleep between attempts, seconds (linear: attempt * backoff_s)
+    backoff_s: float = 0.0
 
 
 #: named grids for launch/tune.py.  Sizes sit exactly on decision-table
@@ -138,13 +186,16 @@ def time_collective(collective: str, backend: str, p: int, nbytes: int,
                     mesh=None, axis: str = "x", warmup: int = 2,
                     reps: int = 10,
                     topology: Optional[str] = None,
-                    wire_dtype: str = "float32") -> Measurement:
+                    wire_dtype: str = "float32",
+                    budget_s: Optional[float] = None) -> Measurement:
     """Compile + warm up + time one cell; returns its ``Measurement``.
 
     ``allgather`` is fed its block input (``nbytes/p`` per rank) so the
     FULL-vector payload — the decision-table key — is ``nbytes`` for
     every collective alike (and stays the float32 payload whatever
-    ``wire_dtype`` the timed program compresses to).
+    ``wire_dtype`` the timed program compresses to).  ``budget_s`` caps
+    the cell's whole compile+warmup+reps wall clock
+    (:func:`call_with_budget`; raises :class:`ProbeTimeout` past it).
     """
     import jax
 
@@ -153,15 +204,21 @@ def time_collective(collective: str, backend: str, p: int, nbytes: int,
     rows = _payload_cached(nbytes, p)
     if collective == "allgather":
         rows = rows[:, :rows.shape[1] // p]
-    fn = _build_fn(collective, backend, p, mesh, axis, topology, wire_dtype)
-    x = jax.device_put(rows)
-    for _ in range(max(1, warmup)):
-        jax.block_until_ready(fn(x))
-    times = []
-    for _ in range(max(1, reps)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(x))
-        times.append(time.perf_counter() - t0)
+
+    def cell() -> List[float]:
+        fn = _build_fn(collective, backend, p, mesh, axis, topology,
+                       wire_dtype)
+        x = jax.device_put(rows)
+        for _ in range(max(1, warmup)):
+            jax.block_until_ready(fn(x))
+        ts = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            ts.append(time.perf_counter() - t0)
+        return ts
+
+    times = call_with_budget(cell, budget_s)
     return Measurement(collective=collective, backend=backend, p=p,
                        nbytes=int(nbytes), time_s=trimmed_median(times),
                        reps=len(times), wire_dtype=wire_dtype)
@@ -201,14 +258,52 @@ def probe_wire_pairs(collective: str,
                  if bw[1] != "float32")
 
 
+def _probe_cell_with_retry(spec: GridSpec, collective: str, backend: str,
+                           p: int, nbytes: int, mesh, topology: str,
+                           wire: str,
+                           sleep: Callable[[float], None] = time.sleep
+                           ) -> Optional[Measurement]:
+    """One cell under the spec's budget/retry policy; ``None`` = gave up.
+
+    Retries cover timeouts AND in-cell runtime errors (a flaky device can
+    throw once and succeed on the retry); config errors (ValueError /
+    TypeError from a bad backend/wire combo) propagate — retrying a
+    deterministic rejection only wastes the budget.
+    """
+    attempts = 1 + max(0, spec.retries)
+    last: Optional[BaseException] = None
+    for attempt in range(attempts):
+        if attempt and spec.backoff_s > 0:
+            sleep(attempt * spec.backoff_s)
+        try:
+            return time_collective(collective, backend, p, nbytes,
+                                   mesh=mesh, warmup=spec.warmup,
+                                   reps=spec.reps, topology=topology,
+                                   wire_dtype=wire, budget_s=spec.budget_s)
+        except (ValueError, TypeError):
+            raise
+        except Exception as e:
+            last = e
+    assert last is not None
+    return None
+
+
 def probe_grid(spec: GridSpec, topology: str,
                timestamp: Optional[str] = None,
-               progress: bool = False) -> List[MeasurementSet]:
+               progress: bool = False,
+               sleep: Callable[[float], None] = time.sleep
+               ) -> List[MeasurementSet]:
     """Run every cell of ``spec``; one ``MeasurementSet`` per rank count.
 
     Rank counts the host cannot provide devices for are skipped loudly
     (recorded in the set's provenance as ``skipped_ps``) rather than
-    silently shrinking the grid.
+    silently shrinking the grid.  Cells that exhaust the spec's
+    budget/retry policy (``budget_s``/``retries``/``backoff_s``) are
+    dropped the same way — recorded in ``failed_cells`` provenance, the
+    rest of the grid still measured and the partial store still valid
+    (``tuner.refresh`` only flips table cells with full candidate
+    coverage, so a failed cell can never skew a decision).  ``sleep`` is
+    injectable for tests.
     """
     import jax
 
@@ -220,6 +315,7 @@ def probe_grid(spec: GridSpec, topology: str,
             skipped.append(p)
             continue
         mesh = _mesh_for(p, "x")
+        failed: List[str] = []
         ms = MeasurementSet(
             device_kind=device_kind, topology=topology, p=p,
             provenance={
@@ -237,15 +333,24 @@ def probe_grid(spec: GridSpec, topology: str,
                          for b in probe_backends(collective, topology)]
                 cells += list(probe_wire_pairs(collective, topology))
                 for backend, wire in cells:
-                    m = time_collective(collective, backend, p, nbytes,
-                                        mesh=mesh, warmup=spec.warmup,
-                                        reps=spec.reps, topology=topology,
-                                        wire_dtype=wire)
+                    m = _probe_cell_with_retry(spec, collective, backend, p,
+                                               nbytes, mesh, topology, wire,
+                                               sleep=sleep)
+                    if m is None:
+                        failed.append(
+                            f"{collective}:{backend}:{wire}:{nbytes}")
+                        if progress:
+                            print(f"[probe] p={p} {collective:>14} "
+                                  f"{backend:>12} {wire:>8} {nbytes:>10}B "
+                                  f"   FAILED (budget/retries exhausted)")
+                        continue
                     ms.measurements.append(m)
                     if progress:
                         print(f"[probe] p={p} {collective:>14} "
                               f"{backend:>12} {wire:>8} {nbytes:>10}B "
                               f"{m.time_s * 1e6:10.1f}us")
+        if failed:
+            ms.provenance["failed_cells"] = ",".join(failed)
         out.append(ms)
     if skipped:
         for ms in out:

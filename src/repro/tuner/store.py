@@ -35,10 +35,43 @@ from __future__ import annotations
 import json
 import os
 import re
+import warnings
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional
 
 _FORMAT = 1
+
+#: suffix a quarantined (unparseable) store file is renamed to
+CORRUPT_SUFFIX = ".corrupt"
+
+#: paths already warned about this process (see ``_warn_corrupt_once``)
+_WARNED_PATHS: set = set()
+
+
+def _warn_corrupt_once(path: str, err: BaseException) -> None:
+    """One warning per corrupt file per process — a tune run that loads
+    the store dozens of times must not repeat itself."""
+    if path in _WARNED_PATHS:
+        return
+    _WARNED_PATHS.add(path)
+    warnings.warn(
+        f"measurement store file {path} is unreadable ({err!r}); "
+        f"quarantined to {path + CORRUPT_SUFFIX} — the remaining store "
+        f"files stay valid, re-run the probe to replace it",
+        stacklevel=3)
+
+
+def quarantine(path: str) -> Optional[str]:
+    """Move an unparseable store file aside (``<path>.corrupt``) so the
+    next run does not trip over it again; returns the new path, or None
+    when the rename itself failed (read-only dir — the load still just
+    skips the file)."""
+    target = path + CORRUPT_SUFFIX
+    try:
+        os.replace(path, target)
+    except OSError:
+        return None
+    return target
 
 
 @dataclass(frozen=True)
@@ -82,9 +115,15 @@ class MeasurementSet:
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "MeasurementSet":
+        if not isinstance(d, dict):
+            raise ValueError(
+                f"measurement file holds a {type(d).__name__}, not an "
+                f"object")
         if d.get("format") != _FORMAT:
             raise ValueError(
                 f"unsupported measurement format {d.get('format')!r}")
+        if not isinstance(d.get("measurements"), list):
+            raise ValueError("'measurements' must be a list")
         return cls(
             device_kind=d["device_kind"],
             topology=d["topology"],
@@ -127,9 +166,27 @@ def save_measurements(ms: MeasurementSet, dir: Optional[str] = None) -> str:
     return path
 
 
-def load_measurements(path: str) -> MeasurementSet:
-    with open(path) as f:
-        return MeasurementSet.from_json_dict(json.load(f))
+def load_measurements(path: str) -> Optional[MeasurementSet]:
+    """One store file, or ``None`` — never raises for a bad file.
+
+    A missing file is simply ``None`` (the ``fleet.feedback`` contract:
+    cold caches never poison a run).  An *unparseable* file — torn write,
+    chaos ``corrupt_store`` injection, hand-edit — is quarantined
+    (renamed ``<path>.corrupt``) with one warning per path per process,
+    so the next run does not re-trip on it and the rest of the store
+    stays usable.
+    """
+    try:
+        with open(path) as f:
+            d = json.load(f)
+        return MeasurementSet.from_json_dict(d)
+    except FileNotFoundError:
+        return None
+    except (OSError, ValueError, KeyError, TypeError,
+            json.JSONDecodeError) as e:
+        _warn_corrupt_once(path, e)
+        quarantine(path)
+        return None
 
 
 def load_all_measurements(topology: Optional[str] = None,
@@ -138,7 +195,8 @@ def load_all_measurements(topology: Optional[str] = None,
                           ) -> List[MeasurementSet]:
     """Every cached set (optionally filtered), sorted by file name so the
     refresh input order — and therefore the rebuilt table — is
-    deterministic."""
+    deterministic.  Corrupt files are quarantined by
+    :func:`load_measurements` and skipped — they never poison a refresh."""
     d = dir or store_dir()
     if not os.path.isdir(d):
         return []
@@ -146,10 +204,9 @@ def load_all_measurements(topology: Optional[str] = None,
     for fname in sorted(os.listdir(d)):
         if not fname.endswith(".json"):
             continue
-        try:
-            ms = load_measurements(os.path.join(d, fname))
-        except (ValueError, KeyError, json.JSONDecodeError):
-            continue  # foreign/corrupt file: never poison a refresh
+        ms = load_measurements(os.path.join(d, fname))
+        if ms is None:
+            continue
         if topology is not None and ms.topology != topology:
             continue
         if device_kind is not None and ms.device_kind != device_kind:

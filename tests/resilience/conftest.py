@@ -1,0 +1,25 @@
+"""Shared resilience-test fixtures over the replay-consistent fake
+engine (see ``repro.resilience.fakes`` for why ``tests/fleet``'s FakeFns
+is not reusable under crash replay)."""
+
+import pytest
+
+from repro.resilience.fakes import FakeTimer, ReplayFakeFns
+
+
+@pytest.fixture
+def model_cfg():
+    import repro.configs.gemma3_4b  # noqa: F401  (registers the arch)
+    from repro.configs import base
+    return base.reduced(base.get_config("gemma3-4b"))
+
+
+@pytest.fixture
+def make_fleet(model_cfg):
+    from repro.fleet import Fleet, FleetConfig
+
+    def _make(n_replicas, n_slots=2, timer_step=1e-3, **cfg_kw):
+        fcfg = FleetConfig(n_replicas=n_replicas, n_slots=n_slots, **cfg_kw)
+        return Fleet(model_cfg, ReplayFakeFns(n_slots), None, fcfg,
+                     max_seq_len=64, timer=FakeTimer(timer_step))
+    return _make

@@ -1,0 +1,133 @@
+"""The fault-injection layer itself: event validation and round-trip,
+seeded generation determinism, schedule indexing, and the appliers
+(topology degradation, store corruption, rank-loss bridging)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.resilience import chaos
+
+
+def test_fault_event_validates():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        chaos.FaultEvent(0, "meteor")
+    with pytest.raises(ValueError, match="tick must be >= 0"):
+        chaos.FaultEvent(-1, "crash")
+    with pytest.raises(ValueError, match="magnitude must be > 0"):
+        chaos.FaultEvent(0, "straggler", magnitude=0.0)
+
+
+def test_spec_roundtrip():
+    for ev in (chaos.FaultEvent(3, "crash", 1),
+               chaos.FaultEvent(5, "straggler", 0, 4.0),
+               chaos.FaultEvent(7, "link_slow", 0, 2.5)):
+        assert chaos.parse_event(ev.spec()) == ev
+    # 3-part spec defaults magnitude to 1
+    assert chaos.parse_event("4:crash:2") == chaos.FaultEvent(4, "crash", 2)
+    with pytest.raises(ValueError, match="not TICK:KIND"):
+        chaos.parse_event("4:crash")
+
+
+def test_generate_events_deterministic_and_sorted():
+    a = chaos.generate_events(7, n_ticks=20, n_replicas=3, n_events=6)
+    b = chaos.generate_events(7, n_ticks=20, n_replicas=3, n_events=6)
+    assert a == b
+    assert a != chaos.generate_events(8, n_ticks=20, n_replicas=3,
+                                      n_events=6)
+    assert list(a) == sorted(a, key=lambda e: (e.tick, e.kind, e.target))
+    for ev in a:
+        assert ev.kind in chaos.FLEET_KINDS
+        assert 1 <= ev.tick < 20
+        assert 0 <= ev.target < 3
+        assert ev.magnitude == (4.0 if ev.kind == "straggler" else 1.0)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        chaos.generate_events(0, 10, 2, kinds=("crash", "meteor"))
+
+
+def test_schedule_indexing_and_signature():
+    evs = [chaos.FaultEvent(5, "straggler", 1, 4.0),
+           chaos.FaultEvent(2, "crash", 0),
+           chaos.FaultEvent(5, "crash", 2)]
+    sched = chaos.ChaosSchedule(evs)
+    assert sched.at(2) == (chaos.FaultEvent(2, "crash", 0),)
+    assert sched.at(3) == ()
+    assert [e.kind for e in sched.at(5)] == ["crash", "straggler"]
+    assert sched.of_kind("crash") == (evs[1], evs[2])
+    assert sched.last_tick == 5
+    assert sched.signature() == "2:crash:0:1 5:crash:2:1 5:straggler:1:4"
+    assert chaos.ChaosSchedule().signature() == "(none)"
+    assert chaos.ChaosSchedule().last_tick == -1
+
+
+def test_degraded_topology_grouped_scales_global_only():
+    from repro.core.traffic import LUMI
+    slow = chaos.degraded_topology(LUMI, beta_scale=3.0, alpha_scale=2.0)
+    assert slow.beta_global == LUMI.beta_global * 3.0
+    assert slow.alpha_global == LUMI.alpha_global * 2.0
+    # the in-group (fast) tier is untouched: link_slow models the sparse
+    # global links congesting, not the whole machine slowing down
+    assert slow.beta_local == LUMI.beta_local
+    assert slow.alpha_local == LUMI.alpha_local
+    assert dataclasses.replace(slow, beta_global=LUMI.beta_global,
+                               alpha_global=LUMI.alpha_global) == LUMI
+
+
+def test_degraded_topology_torus_scales_all_links():
+    from repro.core.traffic import TorusTopo
+    topo = TorusTopo(name="t", dims=(4, 4))
+    slow = chaos.degraded_topology(topo, beta_scale=2.0)
+    assert slow.beta == topo.beta * 2.0
+    assert slow.alpha == topo.alpha
+
+
+def test_degraded_topology_rejects_speedup():
+    from repro.core.traffic import LUMI
+    with pytest.raises(ValueError, match="cannot get faster"):
+        chaos.degraded_topology(LUMI, beta_scale=0.5)
+    with pytest.raises(ValueError, match="cannot get faster"):
+        chaos.degraded_topology(LUMI, beta_scale=2.0, alpha_scale=0.1)
+
+
+def test_degraded_topology_prices_slower():
+    from repro.core.schedules import get_schedule
+    from repro.core.traffic import LUMI, sched_time
+    from repro.tuner.trace import spread_placement
+    sched = get_schedule("allreduce", "ring", 8)
+    # spread ranks across groups so the schedule actually crosses the
+    # (degraded) global links — all-in-one-group traffic prices the same
+    place = spread_placement(8, LUMI, per_group=2)
+    base = sched_time(sched, 8, 1 << 20, LUMI, placement=place)
+    slow = sched_time(sched, 8, 1 << 20,
+                      chaos.degraded_topology(LUMI, beta_scale=4.0),
+                      placement=place)
+    assert slow > base
+
+
+def test_corrupt_file_deterministic(tmp_path):
+    a, b = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    for p in (a, b):
+        with open(p, "w") as f:
+            f.write("{}")
+        chaos.corrupt_file(p, seed=3, nbytes=32)
+    blob_a, blob_b = open(a, "rb").read(), open(b, "rb").read()
+    assert blob_a == blob_b                     # same seed, same garbage
+    assert blob_a.startswith(b"{corrupt")       # never valid JSON
+    chaos.corrupt_file(a, seed=4)
+    assert open(a, "rb").read() != blob_b       # different seed differs
+
+
+def test_rank_loss_bridging():
+    evs = [chaos.FaultEvent(10, "rank_loss", 3, 2.0),
+           chaos.FaultEvent(4, "crash", 0)]
+    assert chaos.rank_loss_schedule(evs) == {10: True}
+    assert chaos.lost_ranks(evs, 10) == (3, 4)
+    assert chaos.lost_ranks(evs, 4) == ()
+    # the schedule plugs straight into the train runtime's injector
+    from repro.train.runtime import DeviceFailure, FailureInjector
+    inj = FailureInjector(schedule=chaos.rank_loss_schedule(evs))
+    inj.check(9)
+    with pytest.raises(DeviceFailure) as ei:
+        inj.check(10)
+    assert ei.value.permanent

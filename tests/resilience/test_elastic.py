@@ -1,0 +1,194 @@
+"""Survivor-set rescheduling at the plan level (device-free): survivor
+arithmetic, backend fallback at non-pow2 counts, tier re-derivation,
+ZeRO bucket replanning, TrainConfig adaptation, and the decision-table
+cache invalidation that keeps backend="auto" honest after a loss."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.collectives.api import executable_at
+from repro.resilience import elastic
+
+
+def test_survivor_set_arithmetic_and_validation():
+    assert elastic.survivor_set(8, [3]) == (0, 1, 2, 4, 5, 6, 7)
+    assert elastic.survivor_set(4, []) == (0, 1, 2, 3)
+    with pytest.raises(ValueError, match="outside range"):
+        elastic.survivor_set(4, [4])
+    with pytest.raises(ValueError, match="listed twice"):
+        elastic.survivor_set(4, [1, 1])
+    with pytest.raises(ValueError, match="no survivor"):
+        elastic.survivor_set(2, [0, 1])
+    with pytest.raises(ValueError, match="p >= 1"):
+        elastic.survivor_set(0, [])
+
+
+def test_executable_at_is_the_execution_boundary():
+    for backend in ("ring", "xla"):
+        for p in (1, 3, 7, 8, 12):
+            assert executable_at(backend, p)
+    for backend in ("bine", "recdoub", "bine_hier", "pallas_fused", "auto"):
+        assert executable_at(backend, 8)
+        assert not executable_at(backend, 7)
+        assert not executable_at(backend, 12)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        executable_at("ring", 0)
+
+
+def test_elastic_backend_keeps_or_falls_back():
+    assert elastic.elastic_backend("bine", 4) == "bine"
+    assert elastic.elastic_backend("bine", 7) == "ring"
+    assert elastic.elastic_backend("recdoub", 6) == "ring"
+    assert elastic.elastic_backend("auto", 6) == "ring"
+    assert elastic.elastic_backend("xla", 7) == "xla"
+    assert elastic.elastic_backend("ring", 5) == "ring"
+
+
+def test_plan_survivors_pow2_no_fallback():
+    plan = elastic.plan_survivors(8, [3, 5, 6, 7], backend="bine",
+                                  topology="lumi")
+    assert plan.p_new == 4 and plan.backend == "bine"
+    assert not plan.fell_back and plan.degraded
+    assert plan.survivors == (0, 1, 2, 4)
+
+
+def test_plan_survivors_non_pow2_falls_back_to_ring():
+    plan = elastic.plan_survivors(8, [3], backend="bine", topology="lumi")
+    d = plan.describe()
+    assert d["p_new"] == 7 and d["backend"] == "ring" and d["fell_back"]
+    assert d["requested_backend"] == "bine"
+    # planning-level schedules still exist at p'=7 via the adapters, for
+    # EVERY family — pricing and traffic accounting keep working
+    for algo in ("bine", "recdoub", "ring"):
+        sched = plan.schedule("reduce_scatter", algo=algo)
+        assert sched.p == 7 and len(sched) > 0
+    assert plan.schedule("allgather").p == 7
+
+
+def test_plan_survivors_rederives_tiers():
+    full = elastic.plan_survivors(16, [], topology="lumi")
+    lost = elastic.plan_survivors(16, [7, 11], topology="lumi")
+    assert full.tiers is not None and int(np.prod(full.tiers)) == 16
+    assert lost.tiers is not None and int(np.prod(lost.tiers)) == 14
+    # the torus preset has no grouped hierarchy at any count
+    assert elastic.plan_survivors(8, [1], topology="torus").tiers is None
+
+
+def test_plan_survivors_invalidates_table_cache():
+    from repro.topology import table
+    table._LOADED[("lumi", "analytic")] = "stale"
+    table._LOADED[("torus", "analytic")] = "other"
+    elastic.plan_survivors(8, [3], topology="lumi")
+    assert ("lumi", "analytic") not in table._LOADED
+    assert ("torus", "analytic") in table._LOADED   # other topologies kept
+    table._LOADED.pop(("torus", "analytic"), None)
+
+
+def test_invalidate_tables_all_and_by_topology():
+    from repro.topology import invalidate_tables, table
+    table._LOADED[("lumi", "analytic")] = "a"
+    table._LOADED[("lumi", "measured")] = "b"
+    table._LOADED[("torus", "analytic")] = "c"
+    invalidate_tables("lumi")
+    assert set(table._LOADED) >= {("torus", "analytic")}
+    assert not any(k[0] == "lumi" for k in table._LOADED)
+    invalidate_tables()
+    assert not table._LOADED
+
+
+def _shapes():
+    """A toy param tree with dims divisible by 4 but not by 3."""
+    f32 = np.float32
+    return {
+        "w_embed": jax.ShapeDtypeStruct((16, 8), f32),   # 16 % 3 != 0
+        "w_mlp": jax.ShapeDtypeStruct((12, 8), f32),     # 12 % 3 == 0
+        "scale": jax.ShapeDtypeStruct((8,), f32),
+        "bias": jax.ShapeDtypeStruct((5,), f32),         # divides nothing
+    }
+
+
+def test_replan_buckets_repartitions_rows(model_cfg):
+    shapes = _shapes()
+    layout4, plan4 = elastic.replan_buckets(model_cfg, shapes, 4,
+                                            capacity_bytes=1 << 20)
+    layout3, plan3 = elastic.replan_buckets(model_cfg, shapes, 3,
+                                            capacity_bytes=1 << 20)
+    assert plan4.n_dp == 4 and plan3.n_dp == 3
+    # dims divisible by the old n_dp but not the new one fall back to the
+    # replicated (per-leaf allreduce) group instead of crashing
+    assert plan3.n_bucketed_leaves < plan4.n_bucketed_leaves
+    assert len(plan3.replicated) > len(plan4.replicated)
+    # deterministic: same inputs, identical plan
+    _, again = elastic.replan_buckets(model_cfg, shapes, 3,
+                                      capacity_bytes=1 << 20)
+    assert again == plan3
+    # the buckets.plan_delta summary the rank-loss logs report
+    from repro.train.buckets import plan_delta
+    d = plan_delta(plan4, plan3)
+    assert d["n_dp"] == [4, 3]
+    assert d["newly_replicated"] and not d["newly_sharded"]
+    assert d["n_replicated_leaves"][1] > d["n_replicated_leaves"][0]
+
+
+def test_elastic_train_config_swaps_backend_and_wire():
+    from repro.train.step import TrainConfig
+    tcfg = TrainConfig(backend="bine", wire_dtype="int8")
+    out = elastic.elastic_train_config(tcfg, 7)
+    assert out.backend == "ring" and out.wire_dtype == "float32"
+    # bf16 wire is a plain cast: survives any backend, kept
+    out = elastic.elastic_train_config(
+        TrainConfig(backend="bine", wire_dtype="bfloat16"), 6)
+    assert out.backend == "ring" and out.wire_dtype == "bfloat16"
+    # still-pow2 survivor count: the config comes back unchanged
+    tcfg = TrainConfig(backend="bine", wire_dtype="int8")
+    assert elastic.elastic_train_config(tcfg, 4) is tcfg
+
+
+def test_elastic_restore_crosses_state_layout_changes(tmp_path):
+    """Restore by manifest path: checkpoint-only leaves (the old config's
+    int8 error-feedback buffers) are dropped, new-config-only leaves keep
+    their initialized value, shared leaves restore exactly."""
+    from repro.train import checkpoint as ckpt
+    rng = np.random.RandomState(0)
+    w = rng.randn(4, 3).astype(np.float32)
+    old = {"params": {"w": w}, "state": {"step": np.int64(7),
+                                         "ef": {"0": rng.randn(8)}}}
+    ckpt.save(str(tmp_path), 7, old)
+    like = {"params": {"w": np.zeros((4, 3), np.float32)},
+            "state": {"step": np.int64(0),
+                      "extra": np.full(2, 5.0, np.float32)}}
+    tree, info = elastic.elastic_restore(str(tmp_path), 7, like)
+    np.testing.assert_array_equal(tree["params"]["w"], w)
+    assert int(tree["state"]["step"]) == 7
+    np.testing.assert_array_equal(tree["state"]["extra"], like["state"]["extra"])
+    assert info["dropped"] == ["['state']['ef']['0']"]
+    assert info["kept_init"] == ["['state']['extra']"]
+    # identical layouts: byte-equivalent to the strict restore, no notes
+    same, info2 = elastic.elastic_restore(str(tmp_path), 7, old)
+    assert info2 == {"dropped": [], "kept_init": []}
+    np.testing.assert_array_equal(same["state"]["ef"]["0"],
+                                  old["state"]["ef"]["0"])
+    # a shared leaf whose global shape changed is a hard error, not a drop
+    bad = {"params": {"w": np.zeros((5, 3), np.float32)},
+           "state": {"step": np.int64(0)}}
+    with pytest.raises(AssertionError, match="ckpt"):
+        elastic.elastic_restore(str(tmp_path), 7, bad)
+
+
+def test_make_train_step_rejects_non_pow2_butterfly(model_cfg):
+    """The execution boundary is enforced at build time with a pointer to
+    the elastic path, not discovered as a shape error mid-trace.  The
+    guard fires before any mesh/device work, so a stub mesh shape is
+    enough to exercise it on a single-device host."""
+    from repro.train.step import TrainConfig, make_train_step
+
+    class MeshShapeStub:
+        shape = {"data": 3, "model": 1}
+
+    tcfg = TrainConfig(backend="bine", dp_axes=("data",))
+    with pytest.raises(ValueError, match="elastic_train_config"):
+        make_train_step(model_cfg, tcfg, MeshShapeStub(), _shapes())
+    # the executable fallback builds a config that passes the same guard
+    fixed = elastic.elastic_train_config(tcfg, 3)
+    assert executable_at(fixed.backend, 3)

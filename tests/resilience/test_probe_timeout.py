@@ -1,0 +1,164 @@
+"""Tuner probe robustness: per-cell wall-clock budgets, retry-with-
+backoff, and failed-cell provenance — all injectable, no devices and no
+real sleeping."""
+
+import time
+
+import pytest
+
+from repro.tuner import probe
+from repro.tuner.store import Measurement
+
+
+# -- call_with_budget --------------------------------------------------------
+
+def test_unbudgeted_runs_inline():
+    assert probe.call_with_budget(lambda: 42, None) == 42
+
+
+def test_budget_returns_fast_result():
+    assert probe.call_with_budget(lambda: "ok", budget_s=5.0) == "ok"
+
+
+def test_budget_times_out_slow_call():
+    with pytest.raises(probe.ProbeTimeout, match="wall-clock budget"):
+        probe.call_with_budget(lambda: time.sleep(5.0), budget_s=0.05)
+
+
+def test_budget_reraises_worker_exception():
+    def boom():
+        raise KeyError("inside the cell")
+    with pytest.raises(KeyError, match="inside the cell"):
+        probe.call_with_budget(boom, budget_s=5.0)
+
+
+def test_budget_validates():
+    with pytest.raises(ValueError, match="budget_s must be > 0"):
+        probe.call_with_budget(lambda: 1, budget_s=0.0)
+
+
+# -- _probe_cell_with_retry --------------------------------------------------
+
+def _spec(**kw):
+    base = dict(name="t", collectives=("allreduce",), sizes=(1 << 16,),
+                ps=(4,), warmup=1, reps=2)
+    base.update(kw)
+    return probe.GridSpec(**base)
+
+
+def _cell_args(spec):
+    return (spec, "allreduce", "bine", 4, 1 << 16, "MESH", "lumi", "float32")
+
+
+def test_retry_succeeds_after_flaky_failures(monkeypatch):
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise probe.ProbeTimeout("slow")
+        return Measurement("allreduce", "bine", 4, 1 << 16, 1e-4, reps=2)
+
+    monkeypatch.setattr(probe, "time_collective", flaky)
+    slept = []
+    m = probe._probe_cell_with_retry(*_cell_args(_spec(retries=2,
+                                                       backoff_s=0.5)),
+                                     sleep=slept.append)
+    assert m is not None and calls["n"] == 3
+    assert slept == [0.5, 1.0]          # linear backoff: attempt * backoff_s
+
+
+def test_retries_exhausted_returns_none(monkeypatch):
+    def always_slow(*a, **kw):
+        raise probe.ProbeTimeout("slow")
+
+    monkeypatch.setattr(probe, "time_collective", always_slow)
+    slept = []
+    m = probe._probe_cell_with_retry(*_cell_args(_spec(retries=1)),
+                                     sleep=slept.append)
+    assert m is None
+    assert slept == []                  # backoff_s=0: no sleep calls at all
+
+
+def test_config_errors_propagate_not_retried(monkeypatch):
+    calls = {"n": 0}
+
+    def reject(*a, **kw):
+        calls["n"] += 1
+        raise ValueError("bad backend/wire combo")
+
+    monkeypatch.setattr(probe, "time_collective", reject)
+    with pytest.raises(ValueError, match="bad backend"):
+        probe._probe_cell_with_retry(*_cell_args(_spec(retries=5)),
+                                     sleep=lambda s: None)
+    assert calls["n"] == 1              # a deterministic rejection never loops
+
+
+def test_runtime_errors_also_covered(monkeypatch):
+    def flaky_device(*a, **kw):
+        raise RuntimeError("device wedged")
+
+    monkeypatch.setattr(probe, "time_collective", flaky_device)
+    assert probe._probe_cell_with_retry(*_cell_args(_spec()),
+                                        sleep=lambda s: None) is None
+
+
+# -- probe_grid: failed cells recorded, partial store stays valid ------------
+
+def _fake_devices(monkeypatch, n):
+    """probe_grid gates on the host device count before touching any
+    cell; pretend the single CPU device exists n times."""
+    import jax
+    dev = jax.devices()[0]
+    monkeypatch.setattr(jax, "devices", lambda: [dev] * n)
+
+
+def test_probe_grid_records_failed_cells(monkeypatch, capsys):
+    """One candidate times out for good; the rest of the grid is still
+    measured and the failure lands in ``failed_cells`` provenance."""
+    spec = _spec(budget_s=1.0)
+
+    def selective(collective, backend, p, nbytes, **kw):
+        if backend == "bine":
+            raise probe.ProbeTimeout("wedged cell")
+        return Measurement(collective, backend, p, nbytes, 1e-4, reps=2,
+                           wire_dtype=kw.get("wire_dtype", "float32"))
+
+    monkeypatch.setattr(probe, "time_collective", selective)
+    monkeypatch.setattr(probe, "_mesh_for", lambda p, axis: "MESH")
+    _fake_devices(monkeypatch, 4)
+    sets = probe.probe_grid(spec, "lumi", progress=True,
+                            sleep=lambda s: None)
+    assert len(sets) == 1
+    ms = sets[0]
+    backends = {m.backend for m in ms.measurements}
+    assert "bine" not in backends and len(backends) >= 2
+    failed = ms.provenance["failed_cells"].split(",")
+    assert all(f.startswith("allreduce:bine") for f in failed)
+    assert "FAILED" in capsys.readouterr().out
+    # the partial set still round-trips the store schema
+    from repro.tuner.store import MeasurementSet
+    assert MeasurementSet.from_json_dict(ms.to_json_dict()).provenance[
+        "failed_cells"] == ms.provenance["failed_cells"]
+
+
+def test_probe_grid_no_failures_no_provenance_key(monkeypatch):
+    monkeypatch.setattr(
+        probe, "time_collective",
+        lambda collective, backend, p, nbytes, **kw: Measurement(
+            collective, backend, p, nbytes, 1e-4, reps=2,
+            wire_dtype=kw.get("wire_dtype", "float32")))
+    monkeypatch.setattr(probe, "_mesh_for", lambda p, axis: "MESH")
+    _fake_devices(monkeypatch, 4)
+    sets = probe.probe_grid(_spec(), "lumi", sleep=lambda s: None)
+    assert "failed_cells" not in sets[0].provenance
+    assert sets[0].measurements
+
+
+def test_grid_specs_carry_budget_fields():
+    spec = probe.GRIDS["tiny"]
+    assert spec.budget_s is None and spec.retries == 0
+    import dataclasses
+    tuned = dataclasses.replace(spec, budget_s=30.0, retries=2,
+                                backoff_s=1.0)
+    assert tuned.budget_s == 30.0       # the launch/tune.py override path

@@ -1,0 +1,117 @@
+"""Corrupt-store absorption: an unreadable measurement/feedback file is
+quarantined (renamed ``.corrupt``) with one warning per path, never
+raises, and never poisons the rest of the store — driven by the chaos
+``corrupt_store`` applier, the exact torn-write shape the quarantine
+must survive."""
+
+import os
+import warnings
+
+import pytest
+
+from repro.resilience.chaos import corrupt_file
+from repro.tuner import store
+
+
+def _ms(p=4, topology="lumi"):
+    return store.MeasurementSet(
+        device_kind="cpu", topology=topology, p=p,
+        provenance={"grid": "tiny", "timestamp": None},
+        measurements=[store.Measurement("allreduce", "bine", p, 1 << 16,
+                                        1e-4, reps=5)])
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    """Per-path warning dedup is process-global; isolate each test."""
+    before_s = set(store._WARNED_PATHS)
+    from repro.fleet import feedback
+    before_f = set(feedback._WARNED_PATHS)
+    yield
+    store._WARNED_PATHS.clear()
+    store._WARNED_PATHS.update(before_s)
+    feedback._WARNED_PATHS.clear()
+    feedback._WARNED_PATHS.update(before_f)
+
+
+def test_missing_file_is_silently_none(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert store.load_measurements(str(tmp_path / "nope.json")) is None
+
+
+def test_corrupt_file_quarantined_once(tmp_path):
+    path = store.save_measurements(_ms(), dir=str(tmp_path))
+    corrupt_file(path, seed=1)
+    with pytest.warns(UserWarning, match="quarantined"):
+        assert store.load_measurements(path) is None
+    assert not os.path.exists(path)
+    assert os.path.exists(path + store.CORRUPT_SUFFIX)
+    # second hit on the same path: still None, but no repeat warning
+    corrupt_file(path, seed=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert store.load_measurements(path) is None
+
+
+@pytest.mark.parametrize("blob", [
+    '[1, 2, 3]',                                  # not an object
+    '{"format": 99}',                             # unknown format
+    '{"format": 1, "device_kind": "cpu", "topology": "t", "p": 4, '
+    '"measurements": {"oops": 1}}',               # measurements not a list
+    '{"format": 1}',                              # missing keys
+])
+def test_schema_violations_quarantined(tmp_path, blob):
+    path = str(tmp_path / "cpu__lumi__p4.json")
+    with open(path, "w") as f:
+        f.write(blob)
+    with pytest.warns(UserWarning, match="unreadable"):
+        assert store.load_measurements(path) is None
+    assert os.path.exists(path + store.CORRUPT_SUFFIX)
+
+
+def test_load_all_skips_corrupt_keeps_valid(tmp_path):
+    d = str(tmp_path)
+    store.save_measurements(_ms(p=4), dir=d)
+    bad = store.save_measurements(_ms(p=8), dir=d)
+    corrupt_file(bad, seed=0)
+    with pytest.warns(UserWarning):
+        sets = store.load_all_measurements(dir=d)
+    assert [ms.p for ms in sets] == [4]           # the valid file survives
+    # the quarantined file no longer trips subsequent loads at all
+    assert sorted(f for f in os.listdir(d) if f.endswith(".json")) == \
+        ["cpu__lumi__p4.json"]
+
+
+def test_atomic_save_leaves_no_tmp(tmp_path):
+    path = store.save_measurements(_ms(), dir=str(tmp_path))
+    assert os.path.exists(path) and not os.path.exists(path + ".tmp")
+    again = store.load_measurements(path)
+    assert again is not None and again.measurements == _ms().measurements
+
+
+def test_quarantine_rename_failure_returns_none(tmp_path, monkeypatch):
+    path = store.save_measurements(_ms(), dir=str(tmp_path))
+
+    def refuse(src, dst):
+        raise OSError("read-only filesystem")
+
+    monkeypatch.setattr(store.os, "replace", refuse)
+    assert store.quarantine(path) is None         # rename refused, no raise
+    assert os.path.exists(path)
+
+
+def test_feedback_store_same_contract(tmp_path):
+    from repro.fleet import feedback as FB
+    fb = FB.FleetFeedback(device_kind="cpu", topology="lumi", p=2,
+                          provenance={"timestamp": None},
+                          replicas={"0": FB.ReplicaStats(ticks=3,
+                                                         ewma_tick_s=1e-3)})
+    path = FB.save_feedback(fb, dir=str(tmp_path))
+    corrupt_file(path, seed=7)
+    with pytest.warns(UserWarning, match="quarantined"):
+        assert FB.load_feedback("cpu", "lumi", 2, dir=str(tmp_path)) is None
+    assert os.path.exists(path + FB.CORRUPT_SUFFIX)
+    with warnings.catch_warnings():               # once per path
+        warnings.simplefilter("error")
+        assert FB.load_feedback("cpu", "lumi", 2, dir=str(tmp_path)) is None

@@ -1,0 +1,176 @@
+"""The self-healing supervisor on the replay-consistent fake engine:
+crash/straggler invisibility in token streams, MTTR accounting, router
+EWMA hygiene across respawns, deadline backpressure, and the loop
+guards."""
+
+import numpy as np
+import pytest
+
+from repro.resilience.fakes import V, expected_stream
+from repro.fleet import FleetEvent
+from repro.fleet.replica import ACTIVE, STOPPED
+from repro.resilience import (ChaosSchedule, FaultEvent, FleetSupervisor,
+                              SupervisorConfig)
+from repro.resilience.supervisor import ReplicaCrash
+from repro.serve.scheduler import Request, poisson_trace
+
+
+def _trace(n=12, seed=3, temperature=0.0):
+    return poisson_trace(n, rate=1.1, prompt_lens=(2, 8), max_new_tokens=5,
+                         vocab_size=V, seed=seed, temperature=temperature,
+                         n_sessions=4)
+
+
+def _run(make_fleet, n_replicas, chaos=None, cfg=None, temperature=0.0):
+    fl = make_fleet(n_replicas, n_slots=3)
+    trace = _trace(temperature=temperature)
+    fl.submit_trace(trace)
+    if chaos is None:
+        fl.run()
+        sup = None
+    else:
+        sup = FleetSupervisor(fl, chaos, cfg or SupervisorConfig())
+        sup.run()
+    assert all(r.finished for r in trace)
+    return {r.rid: list(r.generated) for r in trace}, sup
+
+
+CHAOS = ChaosSchedule([FaultEvent(2, "crash", 0),
+                       FaultEvent(4, "straggler", 1, 6.0)])
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_chaos_streams_byte_identical(make_fleet, temperature):
+    """A crash mid-tick and a straggler change NOTHING in any request's
+    token stream — the fleet-equivalence property extended through the
+    supervisor's crash -> replay -> respawn cycle."""
+    baseline, _ = _run(make_fleet, 3, temperature=temperature)
+    chaotic, sup = _run(make_fleet, 3, chaos=CHAOS, temperature=temperature)
+    assert baseline == chaotic
+    assert len(sup.crash_log) == 1 and sup.crash_log[0].replica == 0
+    if temperature == 0.0:
+        # greedy streams also match the fake engine's closed form
+        for req in _trace():
+            assert chaotic[req.rid] == expected_stream(len(req.prompt), 5)
+
+
+def test_crash_recovery_accounting(make_fleet):
+    _, sup = _run(make_fleet, 3, chaos=CHAOS,
+                  cfg=SupervisorConfig(respawn_delay=2))
+    rec = sup.crash_log[0]
+    assert rec.displaced >= 1                 # the crash ejected real work
+    assert rec.crash_tick == 2
+    assert rec.ttr == 2 == sup.mttr()         # recovery == respawn_delay
+    rep = sup.fleet.replicas[0]
+    assert rep.state == ACTIVE and rep.n_crashes == 1 and rep.n_respawns == 1
+    res = sup.report()["resilience"]
+    assert res["mttr_ticks"] == 2.0
+    assert res["crashes"][0]["respawn_tick"] == 4
+    assert res["chaos_signature"] == CHAOS.signature()
+    assert res["final_health"][0] == {"state": ACTIVE, "crashes": 1,
+                                      "respawns": 1}
+
+
+def test_straggler_poisons_ewma_then_respawn_resets(make_fleet):
+    """A straggler tick inflates the target's measured-latency EWMA (the
+    router deprioritizes it); a crash + respawn drops the poisoned
+    estimate so the fresh incarnation is re-learned from scratch."""
+    fl = make_fleet(2, n_slots=3)
+    trace = _trace()
+    fl.submit_trace(trace)
+    sup = FleetSupervisor(
+        fl, ChaosSchedule([FaultEvent(2, "straggler", 0, 1000.0)]))
+    while sup.step():
+        if fl.clock == 4:
+            break
+    # one 1000x tick moved replica 0's EWMA far above replica 1's
+    assert fl.router.latency[0].value > 10 * fl.router.latency[1].value
+    assert fl.replicas[0].latency_scale == 1.0   # disarmed after one tick
+    poisoned = fl.router.latency[0].value
+    # now crash + respawn replica 0: the EWMA must not survive
+    fl.replicas[0].inject_fault(ReplicaCrash("manual"))
+    while sup.step():
+        pass
+    assert all(r.finished for r in trace)
+    assert fl.router.latency[0].value < poisoned / 10
+
+
+def test_backpressure_shed(make_fleet):
+    """With the only replica dead past the deadline, waiting requests are
+    shed (finished unserved, reason 'shed') instead of queueing forever."""
+    fl = make_fleet(1, n_slots=2)
+    reqs = [Request(rid=i, prompt=np.zeros(3, np.int32), max_new_tokens=4,
+                    arrival=0.0) for i in range(3)]
+    fl.submit_trace(reqs)
+    sup = FleetSupervisor(
+        fl, ChaosSchedule([FaultEvent(0, "crash", 0)]),
+        SupervisorConfig(respawn_delay=8, deadline_ticks=2,
+                         backpressure="shed"))
+    report = sup.run()
+    assert all(r.finished and r.finish_reason == "shed" for r in reqs)
+    assert all(not r.generated for r in reqs)
+    assert report["resilience"]["shed"] == [0, 1, 2]
+    # the post-drain heal loop still brought the replica back
+    assert fl.replicas[0].state == ACTIVE
+
+
+def test_backpressure_requeue_still_serves_everything(make_fleet):
+    """Requeue backoff delays but never drops: once the replica
+    respawns, every request completes with its byte-identical stream."""
+    fl = make_fleet(1, n_slots=2)
+    reqs = [Request(rid=i, prompt=np.zeros(3, np.int32), max_new_tokens=4,
+                    arrival=0.0) for i in range(3)]
+    fl.submit_trace(reqs)
+    sup = FleetSupervisor(
+        fl, ChaosSchedule([FaultEvent(0, "crash", 0)]),
+        SupervisorConfig(respawn_delay=4, deadline_ticks=1,
+                         backpressure="requeue", seed=5))
+    report = sup.run()
+    assert sup.n_requeued > 0
+    assert report["resilience"]["shed"] == []
+    for r in reqs:
+        assert r.finished and r.finish_reason != "shed"
+        assert list(r.generated) == expected_stream(3, 4)
+
+
+def test_heartbeats_cover_every_tick(make_fleet):
+    _, sup = _run(make_fleet, 2, chaos=ChaosSchedule())
+    ticks = sup.fleet.clock
+    assert len(sup.heartbeats) == 2 * ticks   # one row per replica per tick
+    assert {h.state for h in sup.heartbeats} == {ACTIVE}
+    assert sup.mttr() is None                 # no crash -> no MTTR
+
+
+def test_stall_raises_not_spins(make_fleet):
+    fl = make_fleet(1, n_slots=2)
+    fl.submit(Request(rid=0, prompt=np.zeros(3, np.int32), max_new_tokens=3,
+                      arrival=1.0))
+    sup = FleetSupervisor(fl)
+    with pytest.raises(RuntimeError, match="stalled"):
+        sup.run(events=[FleetEvent(0, "drain", 0)])
+
+
+def test_max_ticks_raises(make_fleet):
+    fl = make_fleet(1, n_slots=1)
+    fl.submit_trace(_trace(8))
+    sup = FleetSupervisor(fl, cfg=SupervisorConfig(max_ticks=2))
+    with pytest.raises(RuntimeError, match="max_ticks"):
+        sup.run()
+
+
+def test_config_validates():
+    with pytest.raises(ValueError, match="backpressure"):
+        SupervisorConfig(backpressure="explode")
+    with pytest.raises(ValueError, match="respawn_delay"):
+        SupervisorConfig(respawn_delay=0)
+
+
+def test_unhandled_exception_without_supervisor_kills_loop(make_fleet):
+    """The pre-supervisor contract is preserved: no fault_handler means
+    the replica exception propagates out of Fleet.step (launch/fleet.py
+    turns it into a non-zero exit)."""
+    fl = make_fleet(1, n_slots=2)
+    fl.submit(Request(rid=0, prompt=np.zeros(3, np.int32), max_new_tokens=3))
+    fl.replicas[0].inject_fault(ReplicaCrash("nobody is listening"))
+    with pytest.raises(ReplicaCrash, match="nobody"):
+        fl.run()

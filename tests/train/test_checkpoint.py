@@ -28,6 +28,19 @@ def test_save_restore(tmp_path):
     assert out["b"]["d"] == 7
 
 
+def test_bfloat16_round_trips(tmp_path):
+    """npz stores ml_dtypes extension dtypes as raw void bytes; the
+    manifest dtype must bring them back as real bfloat16 leaves."""
+    import ml_dtypes
+    bf16 = np.dtype(ml_dtypes.bfloat16)
+    t = {"w": np.arange(6, dtype=np.float32).astype(bf16)}
+    ckpt.save(str(tmp_path), 3, t)
+    out = ckpt.restore(str(tmp_path), 3, {"w": np.zeros(6, bf16)})
+    assert out["w"].dtype == bf16
+    np.testing.assert_array_equal(out["w"].astype(np.float32),
+                                  np.arange(6, dtype=np.float32))
+
+
 def test_gc_keeps_latest(tmp_path):
     path = str(tmp_path)
     for s in (1, 2, 3, 4, 5):
