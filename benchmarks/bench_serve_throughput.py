@@ -83,6 +83,7 @@ def run_backend(backend: str, args, mesh, cfg, S: int):
     outputs = [r.generated for r in trace]
     return {
         "backend": backend,
+        "wall_s": dt,
         "tok_s": timed_tokens / max(dt, 1e-9),
         "tokens": stats["tokens_out"],
         "decode_steps": stats["decode_steps"],
@@ -94,6 +95,42 @@ def run_backend(backend: str, args, mesh, cfg, S: int):
         "plan": fns.shardings["plan"],
         "outputs": outputs,
     }
+
+
+def measure_obs_overhead(args, mesh, cfg, S: int) -> dict:
+    """The observability instrumentation's own cost on the serve loop:
+    the identical auto-backend run with the ``repro.obs`` registry
+    enabled vs disabled, median of 3 each.
+
+    Gates two acceptance properties: the trace counters are IDENTICAL
+    (instrumentation records only static trace-time facts, so it cannot
+    add a retrace) and the median wall-time overhead stays under 5%
+    (plus a 50 ms grace, so a sub-second run's timer noise cannot fail
+    a real <5% instrumentation).
+    """
+    from repro.obs import metrics as obs_metrics
+
+    def one(enabled: bool) -> dict:
+        prev = obs_metrics.set_enabled(enabled)
+        try:
+            return run_backend("auto", args, mesh, cfg, S)
+        finally:
+            obs_metrics.set_enabled(prev)
+
+    on = [one(True) for _ in range(3)]
+    off = [one(False) for _ in range(3)]
+    assert on[0]["traces"] == off[0]["traces"], (
+        f"obs instrumentation changed trace counts: "
+        f"on={on[0]['traces']} off={off[0]['traces']}")
+    t_on = sorted(r["wall_s"] for r in on)[1]
+    t_off = sorted(r["wall_s"] for r in off)[1]
+    overhead = t_on / max(t_off, 1e-9) - 1.0
+    assert t_on <= t_off * 1.05 + 0.05, (
+        f"obs instrumentation overhead {overhead * 100:.1f}% exceeds the "
+        f"5% budget (obs-on median {t_on:.3f}s vs obs-off {t_off:.3f}s)")
+    return {"wall_s_obs_on": t_on, "wall_s_obs_off": t_off,
+            "overhead_frac": overhead,
+            "traces_equal": on[0]["traces"] == off[0]["traces"]}
 
 
 def main(argv=None):
@@ -110,6 +147,10 @@ def main(argv=None):
     ap.add_argument("--bench-json", action="store_true",
                     help="emit a machine-readable BENCH_JSON line (the "
                          "run(recorder) subprocess protocol)")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="also measure the repro.obs instrumentation's "
+                         "wall-time overhead (median-of-3 on/off) and "
+                         "gate it under 5% with unchanged trace counts")
     args = ap.parse_args(argv)
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -123,6 +164,14 @@ def main(argv=None):
     if not outputs_equal:
         print("WARNING: xla and auto backends generated different tokens",
               file=sys.stderr)
+
+    obs = None
+    if args.obs_overhead:
+        obs = measure_obs_overhead(args, mesh, cfg, S)
+        print(f"OBS_OVERHEAD_JSON {json.dumps(obs)}")
+        print(f"# obs overhead {obs['overhead_frac'] * 100:+.1f}% "
+              f"(on {obs['wall_s_obs_on']:.3f}s / off "
+              f"{obs['wall_s_obs_off']:.3f}s), trace counts unchanged")
 
     if args.bench_json:
         rows = [
@@ -180,17 +229,26 @@ def run(recorder=None) -> None:
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     proc = subprocess.run(
         [sys.executable, os.path.join(here, "bench_serve_throughput.py"),
-         "--bench-json"],
+         "--bench-json", "--obs-overhead"],
         capture_output=True, text=True, env=env, timeout=3000)
     if proc.returncode != 0:
         raise RuntimeError(
             f"serve-throughput bench failed\n{proc.stdout[-2000:]}\n"
             f"{proc.stderr[-2000:]}")
-    rows = None
+    rows = obs = None
     for line in proc.stdout.splitlines():
         if line.startswith("BENCH_JSON "):
             rows = json.loads(line[len("BENCH_JSON "):])
+        elif line.startswith("OBS_OVERHEAD_JSON "):
+            obs = json.loads(line[len("OBS_OVERHEAD_JSON "):])
     assert rows, proc.stdout[-2000:]
+    if obs is not None:
+        print(f"obs overhead: {obs['overhead_frac'] * 100:+.1f}% "
+              f"(<5% gate passed in subprocess)")
+        if recorder is not None:
+            for m in ("wall_s_obs_on", "wall_s_obs_off", "overhead_frac"):
+                recorder.add("serve_throughput", {"check": "obs_overhead"},
+                             m, obs[m])
 
     hdr = ("backend", "tok_s", "tokens", "decode_steps", "occ_mean",
            "occ_peak", "decode_traces")

@@ -20,9 +20,19 @@ class Recorder:
     records: List[Dict] = field(default_factory=list)
 
     def add(self, bench: str, config: Dict, metric: str, value) -> None:
-        self.records.append(
-            {"bench": bench, "config": dict(config), "metric": metric,
-             "value": value})
+        """Append one record, deduplicating on (bench, config, metric):
+        a re-measured cell replaces the earlier value in place instead of
+        producing two rows downstream joins would double-count."""
+        key = (bench, json.dumps(config, sort_keys=True, default=str),
+               metric)
+        row = {"bench": bench, "config": dict(config), "metric": metric,
+               "value": value}
+        for i, r in enumerate(self.records):
+            if (r["bench"], json.dumps(r["config"], sort_keys=True,
+                                       default=str), r["metric"]) == key:
+                self.records[i] = row
+                return
+        self.records.append(row)
 
     def to_json_dict(self, timestamp: Optional[str]) -> Dict:
         return {"format": 1, "timestamp": timestamp,

@@ -91,6 +91,11 @@ def main() -> None:
                     default=os.path.join(ROOT, "BENCH_fleet_chaos.json"),
                     help="output path for the chaos-drill records "
                          "(default: repo root)")
+    ap.add_argument("--json-obs",
+                    default=os.path.join(ROOT, "BENCH_obs.json"),
+                    help="output path for the run's observability event "
+                         "log (metrics registry + timeline, same "
+                         "timestamp as every other BENCH_*.json)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing the JSON records")
     ap.add_argument("--timestamp", default=None,
@@ -137,6 +142,23 @@ def main() -> None:
         print(f"wrote {n_auto} records to {args.json_autotune}")
         print(f"wrote {n_serve} records to {args.json_serve}")
         print(f"wrote {n_chaos} records to {args.json_chaos}")
+
+        # the run's obs event log, stamped with the SAME timestamp so all
+        # of one run's artifacts join on it
+        import json as _json
+
+        from repro.obs import metrics as _om
+        from repro.obs import timeline as _ot
+        tl = _ot.get_timeline()
+        with open(args.json_obs, "w") as f:
+            _json.dump({"format": 1, "timestamp": args.timestamp,
+                        "kind": "benchmarks",
+                        "registry": _om.get_registry().snapshot(),
+                        "timeline": tl.to_json_dict()},
+                       f, indent=1, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"wrote obs event log ({len(tl)} timeline events) to "
+              f"{args.json_obs}")
     print("\nall benchmarks completed")
 
 

@@ -177,6 +177,21 @@ def _resolve(cfg: CollectiveConfig, collective: str, x, axis: Axis,
     return cfg.replace(**kw)
 
 
+def _obs_record(collective: str, x, axis: Axis, cfg: CollectiveConfig,
+                gathered: bool = False, root: int = 0) -> None:
+    """Trace-time telemetry (``repro.obs``): the dispatch's static shape
+    facts — axis size, payload bytes, resolved backend/wire — go into the
+    metrics registry.  Reads no traced values, so it can never add a
+    retrace, and it only runs while the shard_map body is being traced."""
+    from repro.obs import metrics
+    if not metrics.enabled():
+        return
+    from repro.obs import collect
+    p = shmap.axis_size(axis)
+    collect.record_api(cfg, collective, p,
+                       _nbytes(x) * (p if gathered else 1), root=root)
+
+
 def allreduce_uses_small(nbytes: int, cfg: CollectiveConfig) -> bool:
     """The small/large switch, exposed for tests: INCLUSIVE at the cutoff."""
     return nbytes <= cfg.small_cutoff_bytes
@@ -272,6 +287,7 @@ def _check_hier_divisible(n: int, p: int, cfg: CollectiveConfig,
 
 def allreduce(x, axis: Axis, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "allreduce", x, axis)
+    _obs_record("allreduce", x, axis, cfg)
     _check_wire_plain(cfg, "allreduce")
     b = cfg.backend
     if b == "xla":
@@ -316,6 +332,7 @@ def reduce_scatter(x, axis: Axis, cfg: CollectiveConfig = BINE):
     allgather, which gathers outer first.  (The single-axis composed
     path instead matches the flat convention: rank r ends with block r.)"""
     cfg = _resolve(cfg, "reduce_scatter", x, axis)
+    _obs_record("reduce_scatter", x, axis, cfg)
     if cfg.wire_dtype != "float32":
         out = _wire_rs_ag("reduce_scatter", x, axis, cfg)
         if out is not None:
@@ -349,6 +366,7 @@ def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
     """Own block -> full vector in rank order (``bine_hier``: inner-major,
     inverting this module's ``bine_hier`` reduce_scatter)."""
     cfg = _resolve(cfg, "allgather", x, axis, gathered=True)
+    _obs_record("allgather", x, axis, cfg, gathered=True)
     if cfg.wire_dtype != "float32":
         out = _wire_rs_ag("allgather", x, axis, cfg)
         if out is not None:
@@ -376,6 +394,7 @@ def allgather(x, axis: Axis, cfg: CollectiveConfig = BINE):
 def all_to_all(x, axis: Axis, cfg: CollectiveConfig = BINE):
     """[p, ...] row d to rank d  ->  [p, ...] row o from rank o."""
     cfg = _resolve(cfg, "alltoall", x, axis)
+    _obs_record("alltoall", x, axis, cfg)
     _check_wire_plain(cfg, "alltoall")
     b = cfg.backend
     if b == "xla":
@@ -411,6 +430,7 @@ def _psum_exact(dtype) -> bool:
 
 def broadcast(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "broadcast", x, axis)
+    _obs_record("broadcast", x, axis, cfg, root=root)
     _check_wire_plain(cfg, "broadcast")
     if cfg.backend == "xla":
         # XLA has no direct bcast primitive at this level; emulate.
@@ -428,6 +448,7 @@ def broadcast(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
 
 def reduce(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "reduce", x, axis)
+    _obs_record("reduce", x, axis, cfg, root=root)
     _check_wire_plain(cfg, "reduce")
     if cfg.backend == "xla":
         return lax.psum(x, axis)  # all ranks get it; root semantics upstream
@@ -437,6 +458,7 @@ def reduce(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
 
 def gather(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "gather", x, axis, gathered=True)
+    _obs_record("gather", x, axis, cfg, gathered=True, root=root)
     _check_wire_plain(cfg, "gather")
     if cfg.backend == "xla":
         return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=False).reshape(-1)
@@ -446,6 +468,7 @@ def gather(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
 
 def scatter(x, axis: Axis, root: int = 0, cfg: CollectiveConfig = BINE):
     cfg = _resolve(cfg, "scatter", x, axis)
+    _obs_record("scatter", x, axis, cfg, root=root)
     _check_wire_plain(cfg, "scatter")
     if cfg.backend == "xla":
         p = shmap.axis_size(axis)

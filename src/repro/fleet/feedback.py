@@ -102,6 +102,11 @@ class FleetFeedback:
     p: int
     provenance: Dict[str, Optional[str]] = field(default_factory=dict)
     replicas: Dict[str, ReplicaStats] = field(default_factory=dict)
+    #: the run's *request*-level ``serve.scheduler.latency_summary``
+    #: (p50/p99 of ttft/e2e/..., not just the routing EWMA) so the report
+    #: CLI and warm starts see tail latency.  Optional: format-1 files
+    #: written before this field simply load with an empty dict.
+    latency: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     def key(self) -> str:
         return f"{_slug(self.device_kind)}__{_slug(self.topology)}__p{self.p}"
@@ -113,7 +118,7 @@ class FleetFeedback:
                 if s.ticks > 0}
 
     def to_json_dict(self) -> dict:
-        return {
+        out = {
             "format": _FORMAT,
             "device_kind": self.device_kind,
             "topology": self.topology,
@@ -125,6 +130,9 @@ class FleetFeedback:
                 for r, s in self.replicas.items()
             },
         }
+        if self.latency:
+            out["latency"] = {k: dict(v) for k, v in self.latency.items()}
+        return out
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "FleetFeedback":
@@ -144,6 +152,9 @@ class FleetFeedback:
                     p99_tick_s=float(s.get("p99_tick_s", 0.0)))
                 for r, s in d.get("replicas", {}).items()
             },
+            # absent in files written before the latency field existed
+            latency={str(k): {str(m): float(x) for m, x in v.items()}
+                     for k, v in d.get("latency", {}).items()},
         )
 
 
@@ -172,15 +183,27 @@ def feedback_path(fb: FleetFeedback, dir: Optional[str] = None) -> str:
     return os.path.join(dir or feedback_dir(), fb.key() + ".json")
 
 
-def save_feedback(fb: FleetFeedback, dir: Optional[str] = None) -> str:
-    """Write (atomically) one feedback set; returns the path."""
+def save_feedback(fb: FleetFeedback,
+                  dir: Optional[str] = None) -> Optional[str]:
+    """Write (atomically) one feedback set; returns the path, or None
+    with one warning per path when the directory is unwritable — a
+    read-only cache dir must not kill the run that measured the data."""
     path = feedback_path(fb, dir)
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(fb.to_json_dict(), f, indent=1, sort_keys=True)
-        f.write("\n")
-    os.replace(tmp, path)
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(fb.to_json_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    except OSError as e:
+        if path not in _WARNED_PATHS:
+            _WARNED_PATHS.add(path)
+            warnings.warn(
+                f"fleet feedback dir for {path} is unwritable ({e!r}); "
+                f"this run's measured latency is NOT persisted",
+                stacklevel=3)
+        return None
     return path
 
 

@@ -32,6 +32,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.fleet import feedback as FB
 from repro.fleet.replica import ACTIVE, Replica
 from repro.fleet.router import AffinityRouter
+from repro.obs import metrics as obs_metrics
+from repro.obs import timeline as obs_timeline
 from repro.serve.scheduler import Request, latency_summary
 
 
@@ -141,6 +143,12 @@ class Fleet:
             if ev.tick != self.clock:
                 continue
             rep = self.replicas[ev.replica]
+            if obs_metrics.enabled():
+                obs_timeline.get_timeline().instant(
+                    f"replica_{ev.action}", "fleet", float(self.clock),
+                    track=str(ev.replica), replica=ev.replica)
+                obs_metrics.get_registry().inc(
+                    f"fleet_{ev.action}s", 1.0, replica=ev.replica)
             if ev.action == "drain":
                 for req in rep.drain():
                     if self._healthy():
@@ -164,6 +172,15 @@ class Fleet:
             if report.worked:
                 self._tick_log[rep.rid].append(report.latency_s)
                 self.router.observe(rep.rid, report.latency_s)
+                if obs_metrics.enabled():
+                    obs_metrics.get_registry().observe(
+                        "fleet_tick_seconds", report.latency_s,
+                        replica=rep.rid)
+                    # virtual tick clock: 1 tick = 1 µs in the trace
+                    obs_timeline.get_timeline().span(
+                        "fleet_tick", "fleet", float(self.clock), 1.0,
+                        track=str(rep.rid), replica=rep.rid,
+                        latency_s=report.latency_s)
         self.clock += 1
         return bool(self._pending or any(r.has_work for r in self.replicas))
 
@@ -254,6 +271,8 @@ class Fleet:
             ticks = self._tick_log[rep.rid]
             fb.replicas[str(rep.rid)] = FB.replica_stats(
                 ticks, self.router.latency[rep.rid])
+        # request-level tail latency (p50/p99 ticks), not just the EWMA
+        fb.latency["requests"] = latency_summary(self.request_latencies())
         return fb
 
     def save_feedback(self, timestamp: Optional[str] = None,

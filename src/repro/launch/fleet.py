@@ -190,6 +190,30 @@ def run_serve(args) -> None:
         path = fleet.save_feedback(timestamp=args.timestamp)
         print(f"[fleet] feedback saved: {path}")
 
+    if args.obs_out:
+        import json
+
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import timeline as obs_timeline
+        tl = obs_timeline.get_timeline()
+        artifact = {
+            "format": 1,
+            "timestamp": args.timestamp,
+            "kind": "fleet_serve",
+            "config": {"arch": args.arch, "topology": args.topology,
+                       "backend": args.backend, "replicas": args.replicas,
+                       "slots": args.slots, "requests": args.requests},
+            "registry": obs_metrics.get_registry().snapshot(),
+            "timeline": tl.to_json_dict(),
+            "chrome_trace": obs_timeline.to_chrome_trace(tl),
+            "stats": stats,
+        }
+        with open(args.obs_out, "w") as f:
+            json.dump(artifact, f, indent=1, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"[fleet] obs artifact ({len(tl)} timeline events): "
+              f"{args.obs_out}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -254,6 +278,10 @@ def main(argv=None):
     ap.add_argument("--timestamp", default=None,
                     help="recorded verbatim in saved feedback (never "
                          "auto-generated)")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="write the run's observability artifact (metrics "
+                         "registry + Perfetto timeline + stats) as JSON "
+                         "for repro.launch.report")
     args = ap.parse_args(argv)
 
     if args.dryrun:

@@ -76,6 +76,16 @@ def main(argv=None) -> int:
                          "(linear: attempt * backoff)")
     ap.add_argument("--dry", action="store_true",
                     help="list the grid cells and exit without timing")
+    ap.add_argument("--hints", action="store_true",
+                    help="probe only the cells the drift store flags as "
+                         "mis-priced (repro.obs.drift retune hints) "
+                         "instead of the full grid; exits 0 with no work "
+                         "when nothing drifted")
+    ap.add_argument("--drift-dir", default=None,
+                    help="drift store override (REPRO_DRIFT_DIR)")
+    ap.add_argument("--drift-threshold", type=float, default=None,
+                    help="|EWMA log(measured/predicted)| above which a "
+                         "cell counts as drifted (default ln(1.5))")
     args = ap.parse_args(argv)
 
     from repro.topology import PRESETS, load_table, measured_table_path
@@ -96,6 +106,30 @@ def main(argv=None) -> int:
     if overrides:
         spec = _dc.replace(spec, **overrides)
 
+    if args.hints:
+        from repro.obs import drift as _drift
+        thr = (args.drift_threshold if args.drift_threshold is not None
+               else _drift.DEFAULT_THRESHOLD)
+        dsets = _drift.load_all_drift(topology=args.topology,
+                                      dir=args.drift_dir)
+        all_hints = [h for ds in dsets for h in _drift.hints(ds, thr)
+                     if h.collective in spec.collectives]
+        if not all_hints:
+            print("[tune] no drifted cells; decision table is current")
+            return 0
+        for h in all_hints:
+            print(f"[tune] drift hint: {h.collective} p={h.p} "
+                  f"bucket~{h.nbytes}B measured/predicted={h.ratio:.2f} "
+                  f"(n={h.n}, last={h.last_backend})")
+        # restrict the grid to the drifted cells' axes: a stale table
+        # refreshes in seconds instead of re-sweeping everything
+        spec = _dc.replace(
+            spec, name=f"{spec.name}+hints",
+            collectives=tuple(sorted({h.collective for h in all_hints})),
+            sizes=tuple(sorted({_drift.bucket_bytes(h.bucket)
+                                for h in all_hints})),
+            ps=tuple(sorted({h.p for h in all_hints})))
+
     if args.dry:
         for p in spec.ps:
             for coll in spec.collectives:
@@ -114,7 +148,24 @@ def main(argv=None) -> int:
         return 1
     for ms in sets:
         path = save_measurements(ms, args.store_dir)
-        print(f"[tune] wrote {len(ms.measurements)} measurements -> {path}")
+        if path is not None:
+            print(f"[tune] wrote {len(ms.measurements)} measurements "
+                  f"-> {path}")
+
+    # probe measurements double as drift samples: fold them into the
+    # per-(device, topology, p) residual store the --hints mode reads
+    from repro.obs import drift as _drift
+    for ms in sets:
+        if not ms.measurements:
+            continue
+        base_d = _drift.load_drift(ms.device_kind, args.topology, ms.p,
+                                   dir=args.drift_dir)
+        dset = _drift.ingest_measurements(ms, topology=args.topology,
+                                          base=base_d)
+        dpath = _drift.save_drift(dset, dir=args.drift_dir)
+        if dpath is not None:
+            print(f"[tune] drift residuals ({len(dset.cells)} cells) "
+                  f"-> {dpath}")
 
     base = load_table(args.topology)
     if args.merge_store:

@@ -1,0 +1,27 @@
+"""Run-wide observability: metrics registry, link-byte attribution,
+predicted-vs-measured drift, and trace-timeline export.
+
+See README "Observability" for the lifecycle; the pieces are:
+
+  * :mod:`repro.obs.metrics`  — counters/gauges/quantile histograms;
+  * :mod:`repro.obs.collect`  — per-dispatch link-byte attribution;
+  * :mod:`repro.obs.drift`    — EWMA residuals + retune hints;
+  * :mod:`repro.obs.timeline` — Chrome-trace/Perfetto + Prometheus text.
+"""
+
+from repro.obs.metrics import (  # noqa: F401
+    Registry,
+    disabled,
+    dump_registry,
+    enabled,
+    get_registry,
+    scope,
+    set_enabled,
+)
+from repro.obs.timeline import (  # noqa: F401
+    Timeline,
+    dump_chrome_trace,
+    export_prom,
+    get_timeline,
+    to_chrome_trace,
+)

@@ -36,6 +36,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.fleet.fleet import Fleet, FleetEvent
+from repro.obs import metrics as obs_metrics
+from repro.obs import timeline as obs_timeline
 from repro.resilience.chaos import ChaosSchedule
 
 
@@ -132,6 +134,12 @@ class FleetSupervisor:
         displaced = rep.crash()
         self.crash_log.append(CrashRecord(
             replica=rep.rid, crash_tick=now, displaced=len(displaced)))
+        if obs_metrics.enabled():
+            obs_metrics.get_registry().inc(
+                "fleet_crashes", 1.0, replica=rep.rid)
+            obs_timeline.get_timeline().instant(
+                "replica_crash", "fleet", float(now), track=str(rep.rid),
+                replica=rep.rid, displaced=len(displaced))
         for req in displaced:
             # in-flight prefixes were folded into the prompt by eject_all;
             # re-routing is plain resubmission (arrival is in the past, so
@@ -145,6 +153,11 @@ class FleetSupervisor:
         for rid in sorted(due):
             rep = self.fleet.replicas[rid]
             rep.respawn()
+            if obs_metrics.enabled():
+                obs_metrics.get_registry().inc("fleet_respawns", 1.0,
+                                               replica=rid)
+                obs_timeline.get_timeline().instant(
+                    "replica_respawn", "fleet", float(now), track=str(rid))
             # a fresh incarnation's latency is not the dead one's: drop
             # the EWMA so the router re-learns instead of trusting a
             # possibly straggler-poisoned estimate
@@ -159,6 +172,13 @@ class FleetSupervisor:
 
     def _arm_chaos(self) -> None:
         for ev in self.chaos.at(self.fleet.clock):
+            if obs_metrics.enabled():
+                obs_metrics.get_registry().inc(
+                    "chaos_events", 1.0, kind=ev.kind, target=ev.target)
+                obs_timeline.get_timeline().instant(
+                    f"chaos_{ev.kind}", "chaos", float(ev.tick),
+                    track=str(ev.target), kind=ev.kind, target=ev.target,
+                    magnitude=ev.magnitude)
             if ev.kind == "crash":
                 self.fleet.replicas[ev.target].inject_fault(ReplicaCrash(
                     f"chaos: injected crash of replica {ev.target} at "
@@ -184,11 +204,15 @@ class FleetSupervisor:
                 req.finish_reason = "shed"
                 req.finished_at = float(now)
                 self.shed_rids.append(req.rid)
+                if obs_metrics.enabled():
+                    obs_metrics.get_registry().inc("fleet_shed")
             else:
                 jitter = int(self._rng.randint(self.cfg.backoff_jitter + 1))
                 req.arrival = float(now + self.cfg.backoff_base + jitter)
                 keep.append((req.arrival, rid, req))
                 self.n_requeued += 1
+                if obs_metrics.enabled():
+                    obs_metrics.get_registry().inc("fleet_requeued")
         keep.sort()
         self.fleet._pending[:] = keep
 
@@ -250,6 +274,11 @@ class FleetSupervisor:
 
     def report(self) -> dict:
         stats = self.fleet.stats()
+        if obs_metrics.enabled():
+            mttr = self.mttr()
+            if mttr is not None:
+                obs_metrics.get_registry().set_gauge("fleet_mttr_ticks",
+                                                     mttr)
         stats["resilience"] = {
             "chaos_signature": self.chaos.signature(),
             "crashes": [

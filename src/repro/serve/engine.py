@@ -112,17 +112,22 @@ def collective_plan(model_cfg, scfg: ServeConfig, mesh, B: int) -> Dict[str, str
     n_dp = int(np.prod([mesh.shape[a] for a in scfg.dp_axes]))
     itemsize = jnp.dtype(model_cfg.dtype).itemsize
     plan: Dict[str, str] = {}
+    priced = []  # (collective, backend, p, nbytes) for obs attribution
     if n_tp > 1:
         # flash-decoding partial-softmax combine over the model axis
         attn_bytes = B * model_cfg.n_heads * model_cfg.head_dim * itemsize
         plan["decode_attn_allreduce"] = select_backend(
             "allreduce", n_tp, attn_bytes, scfg.topology,
             tuning=scfg.tuning)
+        priced.append(("allreduce", plan["decode_attn_allreduce"],
+                       n_tp, attn_bytes))
         # vocab-sharded logits re-assembly for sampling
         logit_bytes = B * model_cfg.vocab_size * 4
         plan["logits_allgather"] = select_backend(
             "allgather", n_tp, logit_bytes, scfg.topology,
             tuning=scfg.tuning)
+        priced.append(("allgather", plan["logits_allgather"],
+                       n_tp, logit_bytes))
     if n_dp > 1:
         # batched token scatter/gather between the frontend and the mesh
         tok_bytes = B * 4
@@ -130,6 +135,11 @@ def collective_plan(model_cfg, scfg: ServeConfig, mesh, B: int) -> Dict[str, str
             "scatter", n_dp, tok_bytes, scfg.topology, tuning=scfg.tuning)
         plan["token_gather"] = select_backend(
             "gather", n_dp, tok_bytes, scfg.topology, tuning=scfg.tuning)
+        priced.append(("scatter", plan["token_scatter"], n_dp, tok_bytes))
+        priced.append(("gather", plan["token_gather"], n_dp, tok_bytes))
+    if priced:
+        from repro.obs import collect as obs_collect
+        obs_collect.record_serve_plan(priced, scfg.topology)
     return plan
 
 

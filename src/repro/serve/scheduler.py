@@ -42,6 +42,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.serve import sampling as S
 from repro.serve.kvcache import SlotAllocator
 
@@ -155,6 +156,12 @@ class ContinuousBatchingScheduler:
             "e2e": self.clock - req.arrival,
             "tokens": float(len(req.generated)),
         })
+        if obs_metrics.enabled():
+            reg = obs_metrics.get_registry()
+            reg.inc("serve_requests_retired", 1.0, reason=reason)
+            reg.observe("serve_request_ttft_ticks",
+                        req.first_token_at - req.arrival)
+            reg.observe("serve_request_e2e_ticks", self.clock - req.arrival)
         self.pool = self.fns.evict(self.pool, np.int32(slot))
         self.alloc.release(slot)
         self._active[slot] = 0

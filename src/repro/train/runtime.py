@@ -24,6 +24,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import timeline as obs_timeline
 from repro.train import checkpoint as ckpt
 
 
@@ -122,6 +124,12 @@ class TrainLoop:
                 self.history.append({"step": s, "loss": loss, "dt": dt,
                                      "restarts": self.restarts,
                                      "shrink": self.shrink})
+                if obs_metrics.enabled():
+                    obs_metrics.get_registry().observe(
+                        "train_step_seconds", dt, shrink=self.shrink)
+                    obs_timeline.get_timeline().span(
+                        "train_step", "train", t0 * 1e6, dt * 1e6,
+                        step=s, loss=loss, restarts=self.restarts)
                 s += 1
                 if s % self.cfg.ckpt_every == 0 or s == self.cfg.total_steps:
                     cpr.save(s, {"params": params, "state": state},

@@ -582,6 +582,10 @@ def make_train_step(model_cfg, tcfg: TrainConfig, mesh, params_shapes):
                 "wire_dtype='int8' needs the bucketed path; this model has "
                 "no bucketable (ZeRO-sharded) leaves")
     decisions = None if plan is None else bucket_decisions(tcfg, plan)
+    if decisions is not None:
+        # telemetry: the step's static per-bucket dispatches, once per build
+        from repro.obs import collect as _obs_collect
+        _obs_collect.record_bucket_plan(tcfg, plan, decisions, n_dp)
     ef_bids = [] if plan is None else [
         str(b.bid) for b, d in zip(plan.buckets, decisions)
         if d[1] == "int8"]

@@ -154,15 +154,30 @@ def measurement_path(ms: MeasurementSet, dir: Optional[str] = None) -> str:
     return os.path.join(dir or store_dir(), ms.key() + ".json")
 
 
-def save_measurements(ms: MeasurementSet, dir: Optional[str] = None) -> str:
-    """Write (atomically) one measurement set; returns the path."""
+def save_measurements(ms: MeasurementSet,
+                      dir: Optional[str] = None) -> Optional[str]:
+    """Write (atomically) one measurement set; returns the path.
+
+    An unwritable directory (read-only cache, squashed home) returns
+    ``None`` with one warning per path naming it — the probe run that
+    produced the measurements must not die on the persistence step, and
+    silence would hide that the tuner is re-measuring every run."""
     path = measurement_path(ms, dir)
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(ms.to_json_dict(), f, indent=1, sort_keys=True)
-        f.write("\n")
-    os.replace(tmp, path)
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(ms.to_json_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    except OSError as e:
+        if path not in _WARNED_PATHS:
+            _WARNED_PATHS.add(path)
+            warnings.warn(
+                f"measurement store dir for {path} is unwritable ({e!r}); "
+                f"this run's probe measurements are NOT persisted",
+                stacklevel=3)
+        return None
     return path
 
 

@@ -1,0 +1,108 @@
+"""The report CLI end-to-end on a synthetic obs artifact: greppable
+decision-table lines, drift rendering with the RETUNE marker, and the
+prom/trace side outputs — plus ``tune --hints`` consuming the same
+drift store."""
+
+import json
+import os
+
+from repro.launch import report as R
+from repro.obs import drift as D
+from repro.obs import metrics
+
+
+def _artifact(tmp_path):
+    reg = metrics.Registry()
+    reg.inc("collective_calls", 1.0, collective="allreduce",
+            backend="bine", algo="bine", wire_dtype="float32",
+            topology="lumi", p="8", source="api")
+    reg.counters[("link_global_bytes",
+                  (("backend", "bine"), ("topology", "lumi")))] = 1024.0
+    reg.counters[("link_local_bytes",
+                  (("backend", "bine"), ("topology", "lumi")))] = 3072.0
+    for x in (1.0, 2.0, 3.0):
+        reg.observe("fleet_tick_seconds", x, replica="0")
+    path = str(tmp_path / "run.json")
+    with open(path, "w") as f:
+        json.dump({"format": 1, "timestamp": "t0", "kind": "fleet_serve",
+                   "config": {"topology": "lumi"},
+                   "registry": reg.snapshot(),
+                   "timeline": [{"name": "fleet_tick", "lane": "fleet",
+                                 "ts_us": 1.0, "dur_us": 1.0,
+                                 "track": "0", "args": {}}]}, f)
+    return path
+
+
+def _drift_store(tmp_path):
+    """One healthy cell + one 5x-mispriced cell."""
+    ds = D.DriftSet(device_kind="cpu-test", topology="lumi", p=8,
+                    provenance={"timestamp": "t0", "source": "test"})
+    pred = D.predicted_time("allreduce", "bine", 8, 1 << 12, "lumi")
+    D.observe(ds, "allreduce", "bine", 1 << 12, pred)
+    pred = D.predicted_time("allreduce", "bine", 8, 1 << 20, "lumi")
+    for _ in range(5):
+        D.observe(ds, "allreduce", "bine", 1 << 20, pred * 5.0)
+    d = str(tmp_path / "drift")
+    assert D.save_drift(ds, dir=d) is not None
+    return d
+
+
+def test_report_cli_end_to_end(tmp_path, capsys):
+    art = _artifact(tmp_path)
+    ddir = _drift_store(tmp_path)
+    prom = str(tmp_path / "m.prom")
+    trace = str(tmp_path / "trace.json")
+    rc = R.main(["--artifact", art, "--drift-dir", ddir,
+                 "--prom", prom, "--trace-out", trace])
+    assert rc == 0
+    out = capsys.readouterr().out
+    # the CI smoke's greppable chosen-backend line, one per preset
+    from repro.topology.presets import PRESETS
+    for preset in PRESETS:
+        assert f"preset={preset} p=8 nbytes=1048576 " \
+               f"collective=allreduce chosen=" in out
+    assert "global_frac=0.250" in out
+    # exactly the mispriced cell flagged
+    assert out.count("<-- RETUNE") == 1
+    flagged_line = [ln for ln in out.splitlines() if "<-- RETUNE" in ln][0]
+    assert f"allreduce/b{D.payload_bucket(1 << 20)}" in flagged_line
+    assert "fleet_tick_seconds" in out
+    # side outputs exist and parse
+    with open(trace) as f:
+        assert json.load(f)["traceEvents"]
+    with open(prom) as f:
+        assert "collective_calls_total" in f.read()
+
+
+def test_report_cli_unreadable_artifact(tmp_path, capsys):
+    assert R.main(["--artifact", str(tmp_path / "nope.json")]) == 1
+    assert "cannot read artifact" in capsys.readouterr().err
+
+
+def test_tune_hints_consumes_drift_store(tmp_path, capsys):
+    from repro.launch import tune as TU
+    ddir = _drift_store(tmp_path)
+    rc = TU.main(["--grid", "tiny", "--topology", "lumi", "--hints",
+                  "--drift-dir", ddir, "--dry"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "drift hint: allreduce p=8" in out
+    assert "measured/predicted=" in out
+    # the --dry grid is restricted to the drifted cell's axes: only
+    # allreduce rows at the flagged bucket's representative payload
+    grid = [ln for ln in out.splitlines() if ln.endswith("B")
+            and not ln.startswith("[tune]")]
+    assert grid and all(ln.startswith("allreduce ") for ln in grid)
+    assert all("p=8" in ln for ln in grid)
+    want = D.bucket_bytes(D.payload_bucket(1 << 20))
+    assert all(f"{want}B" in ln for ln in grid)
+
+
+def test_tune_hints_no_drift_exits_clean(tmp_path, capsys):
+    from repro.launch import tune as TU
+    empty = str(tmp_path / "empty")
+    os.makedirs(empty)
+    rc = TU.main(["--grid", "tiny", "--topology", "lumi", "--hints",
+                  "--drift-dir", empty, "--dry"])
+    assert rc == 0
+    assert "no drifted cells" in capsys.readouterr().out

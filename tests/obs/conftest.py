@@ -1,0 +1,39 @@
+"""obs test fixtures: isolate the process-default registry/timeline."""
+
+import pytest
+
+from repro.obs import metrics, timeline
+
+
+@pytest.fixture
+def fresh_registry(monkeypatch):
+    """Swap the default registry for an empty one (enabled) so tests can
+    assert exact contents without polluting — or being polluted by —
+    whatever the rest of the session recorded."""
+    reg = metrics.Registry()
+    monkeypatch.setattr(metrics, "_REGISTRY", reg)
+    prev = metrics.set_enabled(True)
+    yield reg
+    metrics.set_enabled(prev)
+
+
+@pytest.fixture
+def unwritable_dir():
+    """A store dir whose creation fails with OSError for ANY uid: a
+    read-only tmpdir via chmod is advisory under root (containers), so
+    point the store at a child of a regular FILE instead — makedirs
+    raises ENOTDIR there no matter who runs the tests."""
+    def make(tmp_path):
+        blocker = tmp_path / "blocker"
+        blocker.write_text("not a directory\n")
+        return str(blocker / "store")
+    return make
+
+
+@pytest.fixture
+def fresh_timeline(monkeypatch):
+    tl = timeline.Timeline()
+    monkeypatch.setattr(timeline, "_TIMELINE", tl)
+    prev = metrics.set_enabled(True)
+    yield tl
+    metrics.set_enabled(prev)

@@ -1,0 +1,151 @@
+"""Link-byte attribution: the cached block-count replay must equal the
+``core.traffic`` closed-form accounting EXACTLY for every registered
+(collective, algo) pair — the paper's headline metric cannot drift from
+its own offline tracer."""
+
+import pytest
+
+from repro.core import traffic
+from repro.core.schedules import COLLECTIVES, get_schedule, list_algos
+from repro.obs import collect, metrics
+from repro.topology.presets import get_topology
+
+PAYLOAD = 1 << 20  # pow2 so every replay term is an exact binary float
+
+
+def _spread(topo, p):
+    """One rank per group: forces nonzero global traffic at tiny p on
+    the production presets (group_size >= 124 swallows p <= 8 under the
+    identity placement)."""
+    return tuple(i * topo.group_size for i in range(p))
+
+
+def _cases():
+    for coll in COLLECTIVES:
+        for algo in list_algos(coll):
+            for p in (4, 8):
+                yield coll, algo, p
+
+
+@pytest.mark.parametrize("coll,algo,p", _cases(), ids=lambda v: str(v))
+def test_attribution_matches_traffic_global_bytes(coll, algo, p):
+    """Identity AND spread placements, grouped preset: the replayed
+    (local, global) attribution == core.traffic byte accounting."""
+    topo = get_topology("lumi", p)
+    sched = get_schedule(coll, algo, p)
+    for placement in (None, _spread(topo, p)):
+        want_total = traffic.total_bytes(sched, p, float(PAYLOAD))
+        want_global = traffic.global_bytes(sched, p, float(PAYLOAD), topo,
+                                           placement=placement)
+        loc, glo = collect.attributed_bytes(coll, algo, p, PAYLOAD, "lumi",
+                                            placement=placement)
+        assert glo == want_global, (coll, algo, p, placement)
+        assert loc + glo == want_total, (coll, algo, p, placement)
+
+
+def test_spread_placement_is_nonzero_global():
+    """The equality test must not pass vacuously: bine allreduce at p=8
+    with one rank per group puts real bytes on the global links."""
+    topo = get_topology("lumi", 8)
+    _, glo = collect.attributed_bytes("allreduce", "bine", 8, PAYLOAD,
+                                      "lumi", placement=_spread(topo, 8))
+    assert glo > 0
+
+
+def test_torus_routes_all_local():
+    """Torus presets have no group boundary: attribution lands in the
+    local slot, hop-weighted exactly like ``traffic.hop_bytes``."""
+    topo = get_topology("torus", 8)
+    sched = get_schedule("allreduce", "bine", 8)
+    loc, glo = collect.attributed_bytes("allreduce", "bine", 8, PAYLOAD,
+                                        "torus")
+    assert glo == 0
+    assert loc == traffic.hop_bytes(sched, 8, float(PAYLOAD), topo)
+
+
+def test_record_populates_registry_exactly(fresh_registry):
+    reg = fresh_registry
+    topo = get_topology("lumi", 8)
+    collect.record("allreduce", "bine", 8, PAYLOAD,
+                   topology="lumi", small_cutoff_bytes=0)
+    collect.record("allreduce", "bine", 8, PAYLOAD,
+                   topology="lumi", small_cutoff_bytes=0)
+    labels = dict(collective="allreduce", backend="bine", algo="bine",
+                  wire_dtype="float32", topology="lumi", p=8, source="api")
+    assert reg.counter_value("collective_calls", **labels) == 2.0
+    assert reg.counter_value("collective_payload_bytes",
+                             **labels) == 2.0 * PAYLOAD
+    sched = get_schedule("allreduce", "bine", 8)
+    want_global = traffic.global_bytes(sched, 8, float(PAYLOAD), topo)
+    want_total = traffic.total_bytes(sched, 8, float(PAYLOAD))
+    assert reg.counter_value("link_global_bytes",
+                             **labels) == 2.0 * want_global
+    assert (reg.counter_value("link_local_bytes", **labels)
+            + reg.counter_value("link_global_bytes", **labels)
+            ) == 2.0 * want_total
+
+
+def test_record_disabled_is_noop(fresh_registry):
+    with metrics.disabled():
+        collect.record("allreduce", "bine", 8, PAYLOAD, topology="lumi")
+    assert fresh_registry.counters == {}
+
+
+def test_unpriceable_backend_still_counts_and_warns_once(fresh_registry):
+    reg = fresh_registry
+    collect._WARNED_KEYS.clear()
+    try:
+        with pytest.warns(UserWarning, match="no link-byte attribution"):
+            collect.record("allreduce", "no_such_backend", 8, PAYLOAD,
+                           topology="lumi")
+        import warnings as W
+        with W.catch_warnings():
+            W.simplefilter("error")  # second record must not warn again
+            collect.record("allreduce", "no_such_backend", 8, PAYLOAD,
+                           topology="lumi")
+    finally:
+        collect._WARNED_KEYS.clear()
+    series = reg.series("collective_calls")
+    assert len(series) == 1
+    labels, value = series[0]
+    assert value == 2.0 and labels["algo"] == "unknown"
+    assert reg.series("link_global_bytes") == []
+
+
+def test_wire_dtype_scales_link_bytes_not_payload(fresh_registry):
+    from repro.collectives.compression import wire_factor
+    reg = fresh_registry
+    for wire in ("float32", "bfloat16"):
+        collect.record("reduce_scatter", "bine", 8, PAYLOAD,
+                       wire_dtype=wire, topology="lumi")
+    rows = {labels["wire_dtype"]: v
+            for labels, v in reg.series("link_local_bytes")}
+    assert rows["bfloat16"] == pytest.approx(
+        rows["float32"] * wire_factor("bfloat16"))
+    pay = {labels["wire_dtype"]: v
+           for labels, v in reg.series("collective_payload_bytes")}
+    assert pay["bfloat16"] == pay["float32"] == PAYLOAD
+
+
+def test_record_serve_plan_rows(fresh_registry):
+    reg = fresh_registry
+    collect.record_serve_plan(
+        [("allreduce", "bine", 8, 4096), ("allgather", "ring", 8, 8192)],
+        topology="lumi")
+    rows = {labels["collective"]: labels
+            for labels, _ in reg.series("collective_calls")}
+    assert rows["allreduce"]["source"] == "serve_plan"
+    assert rows["allgather"]["backend"] == "ring"
+
+
+def test_global_local_summary_aggregates_by_backend_topology():
+    reg = metrics.Registry()
+    reg.counters[("link_global_bytes",
+                  (("backend", "bine"), ("topology", "lumi")))] = 10.0
+    reg.counters[("link_local_bytes",
+                  (("backend", "bine"), ("topology", "lumi")))] = 30.0
+    reg.counters[("link_global_bytes",
+                  (("backend", "ring"), ("topology", "lumi")))] = 7.0
+    out = collect.global_local_summary(reg)
+    assert out[("bine", "lumi")] == {"global": 10.0, "local": 30.0}
+    assert out[("ring", "lumi")]["global"] == 7.0

@@ -1,0 +1,139 @@
+"""Drift detection: an artificially mis-priced decision-table cell must
+be flagged as a retune hint — and ONLY that cell — plus the tuner-store
+persistence contract (atomic write, quarantine, unwritable warn-once)."""
+
+import json
+import math
+import os
+import warnings
+
+import pytest
+
+from repro.obs import drift as D
+
+CELLS = [("allreduce", 1 << 12), ("allreduce", 1 << 20),
+         ("reduce_scatter", 1 << 20), ("allgather", 1 << 16)]
+
+
+def _dset(p=8, topology="lumi"):
+    return D.DriftSet(device_kind="cpu-test", topology=topology, p=p,
+                      provenance={"timestamp": "t0", "source": "test"})
+
+
+def test_mispriced_cell_flagged_and_only_that_cell():
+    ds = _dset()
+    for coll, nbytes in CELLS:
+        pred = D.predicted_time(coll, "bine", 8, nbytes, "lumi")
+        assert pred is not None and pred > 0
+        # healthy cells: measurement == model, several samples each
+        for _ in range(5):
+            assert D.observe(ds, coll, "bine", nbytes, pred) == 0.0
+    # misprice exactly one cell: 10x slower than the model says
+    coll_bad, nbytes_bad = CELLS[1]
+    pred_bad = D.predicted_time(coll_bad, "bine", 8, nbytes_bad, "lumi")
+    for _ in range(5):
+        D.observe(ds, coll_bad, "bine", nbytes_bad, pred_bad * 10.0)
+    out = D.hints(ds)
+    assert len(out) == 1
+    h = out[0]
+    assert (h.collective, h.bucket) == (coll_bad,
+                                        D.payload_bucket(nbytes_bad))
+    assert h.p == 8 and h.last_backend == "bine"
+    # EWMA of repeated ln(10) samples converges toward ln(10)
+    assert 1.0 < h.ewma_log_ratio <= math.log(10.0) + 1e-9
+    assert h.ratio == pytest.approx(math.exp(h.ewma_log_ratio))
+
+
+def test_threshold_is_two_sided():
+    ds = _dset()
+    pred = D.predicted_time("allreduce", "bine", 8, 1 << 20, "lumi")
+    for _ in range(10):
+        D.observe(ds, "allreduce", "bine", 1 << 20, pred / 10.0)  # too FAST
+    assert len(D.hints(ds)) == 1
+
+
+def test_observe_skips_unpriceable_and_degenerate():
+    ds = _dset()
+    assert D.observe(ds, "allreduce", "bine", 1 << 20, 0.0) is None
+    assert D.observe(ds, "allreduce", "no_such_backend", 1 << 20,
+                     1e-3) is None
+    assert ds.cells == {}
+
+
+def test_payload_bucket_matches_decision_table():
+    from repro.topology.table import SIZE_BUCKETS
+    for i, edge in enumerate(SIZE_BUCKETS):
+        assert D.payload_bucket(edge) == i
+        assert D.bucket_bytes(i) == edge
+    assert D.payload_bucket(SIZE_BUCKETS[-1] * 4) == len(SIZE_BUCKETS) - 1
+
+
+def test_ingest_measurements_from_probe_store():
+    from repro.tuner.store import Measurement, MeasurementSet
+    pred = D.predicted_time("allreduce", "bine", 8, 1 << 20, "lumi")
+    ms = MeasurementSet(
+        device_kind="cpu-test", topology="lumi", p=8,
+        provenance={"timestamp": "t1", "grid": "tiny"},
+        measurements=[Measurement("allreduce", "bine", 8, 1 << 20,
+                                  pred * 3.0)])
+    ds = D.ingest_measurements(ms)
+    assert ds.topology == "lumi" and ds.p == 8
+    cell = ds.cells["allreduce/b" + str(D.payload_bucket(1 << 20))]
+    assert cell.n == 1
+    assert cell.ewma_log_ratio == pytest.approx(math.log(3.0))
+    # base= continues an existing set instead of restarting the EWMA
+    ds2 = D.ingest_measurements(ms, base=ds)
+    assert ds2 is ds and cell.n == 2
+
+
+def test_save_load_roundtrip(tmp_path):
+    ds = _dset()
+    pred = D.predicted_time("allreduce", "bine", 8, 1 << 20, "lumi")
+    D.observe(ds, "allreduce", "bine", 1 << 20, pred * 2.0)
+    path = D.save_drift(ds, dir=str(tmp_path))
+    assert path is not None and os.path.exists(path)
+    back = D.load_drift("cpu-test", "lumi", 8, dir=str(tmp_path))
+    assert back is not None
+    assert back.to_json_dict() == ds.to_json_dict()
+    assert D.load_all_drift(dir=str(tmp_path))[0].key() == ds.key()
+    assert D.load_all_drift(topology="other", dir=str(tmp_path)) == []
+
+
+def test_corrupt_store_quarantined_with_one_warning(tmp_path):
+    ds = _dset()
+    path = D.drift_path(ds, dir=str(tmp_path))
+    with open(path, "w") as f:
+        f.write("{ torn write")
+    D._WARNED_PATHS.discard(path)
+    with pytest.warns(UserWarning, match="quarantined"):
+        assert D.load_drift("cpu-test", "lumi", 8, dir=str(tmp_path)) is None
+    assert os.path.exists(path + D.CORRUPT_SUFFIX)
+    assert not os.path.exists(path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second load: no warning, no raise
+        assert D.load_drift("cpu-test", "lumi", 8, dir=str(tmp_path)) is None
+
+
+def test_unwritable_dir_warns_once_returns_none(tmp_path, unwritable_dir):
+    ro = unwritable_dir(tmp_path)
+    ds = _dset()
+    D._WARNED_PATHS.discard(D.drift_path(ds, dir=ro))
+    with pytest.warns(UserWarning, match="NOT persisted"):
+        assert D.save_drift(ds, dir=ro) is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # warn ONCE: second save is silent
+        assert D.save_drift(ds, dir=ro) is None
+
+
+def test_format_version_gate(tmp_path):
+    d = _dset().to_json_dict()
+    d["format"] = 99
+    with pytest.raises(ValueError, match="unsupported drift format"):
+        D.DriftSet.from_json_dict(d)
+    path = os.path.join(str(tmp_path), _dset().key() + ".json")
+    with open(path, "w") as f:
+        json.dump(d, f)
+    D._WARNED_PATHS.discard(path)
+    with pytest.warns(UserWarning):
+        assert D.load_drift("cpu-test", "lumi", 8,
+                            dir=str(tmp_path)) is None

@@ -1,0 +1,96 @@
+"""Fleet/supervisor obs wiring on the replay-consistent fake engine:
+the acceptance run's 20-tick fleet with a chaos event must land tick
+spans, crash/chaos instants, retirement counters, and the MTTR gauge in
+ONE registry/timeline — and the chrome trace must render from it."""
+
+import json
+
+import pytest
+
+from repro.fleet import Fleet, FleetConfig
+from repro.obs import timeline as otl
+from repro.resilience import (ChaosSchedule, FaultEvent, FleetSupervisor,
+                              SupervisorConfig)
+from repro.resilience.fakes import FakeTimer, ReplayFakeFns, V
+from repro.serve.scheduler import poisson_trace
+
+
+@pytest.fixture
+def chaotic_run(fresh_registry, fresh_timeline):
+    import repro.configs.gemma3_4b  # noqa: F401  (registers the arch)
+    from repro.configs import base
+    model_cfg = base.reduced(base.get_config("gemma3-4b"))
+    fcfg = FleetConfig(n_replicas=2, n_slots=3, topology="lumi")
+    fleet = Fleet(model_cfg, ReplayFakeFns(3), None, fcfg,
+                  max_seq_len=64, timer=FakeTimer(1e-3))
+    trace = poisson_trace(10, rate=1.1, prompt_lens=(2, 8),
+                          max_new_tokens=5, vocab_size=V, seed=3)
+    fleet.submit_trace(trace)
+    sup = FleetSupervisor(fleet,
+                          ChaosSchedule([FaultEvent(4, "crash", 1)]),
+                          SupervisorConfig())
+    sup.run()
+    assert fleet.clock >= 5       # ran past the chaos tick
+    return fresh_registry, fresh_timeline, sup
+
+
+def test_timeline_has_tick_chaos_and_crash_events(chaotic_run):
+    _, tl, _ = chaotic_run
+    names = {e.name for e in tl.events}
+    assert {"fleet_tick", "chaos_crash", "replica_crash",
+            "replica_respawn"} <= names
+    spans = [e for e in tl.events if e.name == "fleet_tick"]
+    assert all(e.lane == "fleet" and e.dur_us == 1.0 for e in spans)
+    # the chaos instant lands exactly on the tick that armed it
+    chaos = [e for e in tl.events if e.name == "chaos_crash"]
+    assert chaos[0].ts_us == 4.0 and chaos[0].lane == "chaos"
+    assert chaos[0].track == "1"
+
+
+def test_registry_counters_and_mttr_gauge(chaotic_run):
+    reg, _, sup = chaotic_run
+    assert reg.counter_value("fleet_crashes", replica="1") == 1.0
+    assert reg.counter_value("chaos_events", kind="crash", target="1") == 1.0
+    assert reg.counter_value("fleet_respawns", replica="1") == 1.0
+    retired = sum(v for _, v in reg.series("serve_requests_retired"))
+    assert retired == 10.0
+    sup.report()
+    assert reg.gauge_value("fleet_mttr_ticks") == float(sup.mttr())
+
+
+def test_serve_collective_plan_records_link_bytes(fresh_registry):
+    """The engine's advisory decode plan attributes its per-step
+    collectives into the registry at build time (mesh stubbed: the plan
+    maths only reads axis sizes)."""
+    import repro.configs.gemma3_4b  # noqa: F401
+    from repro.configs import base
+    from repro.serve.engine import ServeConfig, collective_plan
+
+    class _Mesh:
+        shape = {"data": 4, "model": 2}
+
+    model_cfg = base.reduced(base.get_config("gemma3-4b"))
+    scfg = ServeConfig(dp_axes=("data",), backend="auto", topology="lumi")
+    plan = collective_plan(model_cfg, scfg, _Mesh(), B=3)
+    assert "logits_allgather" in plan and "token_scatter" in plan
+    rows = {(lb["collective"], lb["p"]): lb
+            for lb, _ in fresh_registry.series("collective_calls")
+            if lb["source"] == "serve_plan"}
+    assert ("allreduce", "2") in rows       # model-axis flash combine
+    assert ("allgather", "2") in rows       # vocab re-assembly
+    assert ("scatter", "4") in rows and ("gather", "4") in rows
+    assert any(v > 0 for lb, v in fresh_registry.series("link_local_bytes")
+               if lb["source"] == "serve_plan")
+
+
+def test_chrome_trace_renders_from_run(chaotic_run, tmp_path):
+    _, tl, _ = chaotic_run
+    path = str(tmp_path / "trace.json")
+    otl.dump_chrome_trace(tl, path)
+    with open(path) as f:
+        trace = json.load(f)
+    names = {r["name"] for r in trace["traceEvents"]}
+    assert {"fleet_tick", "chaos_crash", "process_name"} <= names
+    lanes = {r["args"]["name"] for r in trace["traceEvents"]
+             if r["name"] == "process_name"}
+    assert {"fleet", "chaos"} <= lanes

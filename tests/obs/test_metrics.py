@@ -1,0 +1,111 @@
+"""Registry semantics: quantiles vs a numpy oracle, label scoping,
+snapshot round-trips, and the master enable switch."""
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics
+from repro.obs.metrics import Histogram, Registry
+
+
+def _oracle_nearest_rank(xs, q):
+    """Nearest-rank percentile straight from the definition (the
+    serve.scheduler._pct convention the registry promises to match)."""
+    xs = np.sort(np.asarray(xs, dtype=float))
+    k = int(np.ceil(q / 100.0 * len(xs))) - 1
+    return float(xs[max(0, min(len(xs) - 1, k))])
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 10, 100, 101, 997])
+@pytest.mark.parametrize("q", [0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 100.0])
+def test_quantiles_match_numpy_oracle(n, q):
+    rng = np.random.RandomState(n)
+    xs = rng.randn(n) * 10.0
+    h = Histogram()
+    for x in xs:
+        h.observe(x)
+    assert h.quantile(q) == _oracle_nearest_rank(xs, q)
+
+
+def test_quantile_matches_scheduler_pct():
+    from repro.serve.scheduler import _pct
+    rng = np.random.RandomState(0)
+    xs = list(rng.rand(37) * 100)
+    h = Histogram()
+    for x in xs:
+        h.observe(x)
+    for q in (50, 90, 99):
+        assert h.quantile(q) == _pct(xs, q)
+
+
+def test_empty_histogram_quantile_is_zero():
+    assert Histogram().quantile(50) == 0.0
+    assert Histogram().count == 0
+
+
+def test_counters_and_gauges():
+    reg = Registry()
+    assert reg.inc("calls", 1.0, backend="bine") == 1.0
+    assert reg.inc("calls", 2.0, backend="bine") == 3.0
+    reg.inc("calls", 1.0, backend="ring")
+    assert reg.counter_value("calls", backend="bine") == 3.0
+    assert reg.counter_value("calls", backend="ring") == 1.0
+    assert reg.counter_value("calls", backend="nope") == 0.0
+    reg.set_gauge("mttr", 4.0)
+    reg.set_gauge("mttr", 2.0)
+    assert reg.gauge_value("mttr") == 2.0
+    assert reg.gauge_value("missing") is None
+
+
+def test_series_identity_is_sorted_labels():
+    reg = Registry()
+    reg.inc("x", 1.0, a="1", b="2")
+    reg.inc("x", 1.0, b="2", a="1")  # same series, either kwarg order
+    assert reg.counter_value("x", a="1", b="2") == 2.0
+    assert len(reg.series("x")) == 1
+
+
+def test_scope_labels_merge_and_nest():
+    reg = Registry()
+    with reg.scope(replica="0"):
+        reg.inc("ticks")
+        with reg.scope(replica="1", phase="drain"):
+            reg.inc("ticks")
+        # call-site labels win over scope frames
+        reg.inc("ticks", replica="9")
+    assert reg.counter_value("ticks", replica="0") == 1.0
+    assert reg.counter_value("ticks", replica="1", phase="drain") == 1.0
+    assert reg.counter_value("ticks", replica="9") == 1.0
+
+
+def test_snapshot_roundtrip_preserves_quantiles():
+    reg = Registry()
+    reg.inc("c", 5.0, k="v")
+    reg.set_gauge("g", 1.5)
+    rng = np.random.RandomState(1)
+    xs = rng.rand(23)
+    for x in xs:
+        reg.observe("lat", x, replica="0")
+    reg2 = Registry.from_snapshot(reg.snapshot())
+    assert reg2.counter_value("c", k="v") == 5.0
+    assert reg2.gauge_value("g") == 1.5
+    for q in (50, 99):
+        assert reg2.quantile("lat", q, replica="0") == \
+            _oracle_nearest_rank(xs, q)
+    # snapshot is pure data: json round-trip is lossless
+    import json
+    assert Registry.from_snapshot(
+        json.loads(json.dumps(reg.snapshot()))).snapshot() == reg.snapshot()
+
+
+def test_set_enabled_returns_previous_and_disabled_restores():
+    prev = metrics.set_enabled(True)
+    try:
+        assert metrics.set_enabled(False) is True
+        assert metrics.enabled() is False
+        metrics.set_enabled(True)
+        with metrics.disabled():
+            assert not metrics.enabled()
+        assert metrics.enabled()
+    finally:
+        metrics.set_enabled(prev)

@@ -1,0 +1,100 @@
+"""Unwritable-store degradation: every persistence layer (tuner
+measurements, fleet feedback, drift residuals) must warn ONCE with the
+path and return None — never raise, never silently drop — plus the
+feedback latency-summary round-trip and its old-format backcompat."""
+
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.fleet import feedback as FB
+from repro.tuner import store as ST
+
+
+def _ms():
+    return ST.MeasurementSet(
+        device_kind="cpu-test", topology="lumi", p=8,
+        provenance={"timestamp": "t0"},
+        measurements=[ST.Measurement("allreduce", "bine", 8, 1024, 1e-4)])
+
+
+def _fb(with_latency=True):
+    fb = FB.FleetFeedback(
+        device_kind="cpu-test", topology="lumi", p=8,
+        provenance={"timestamp": "t0"},
+        replicas={"0": FB.ReplicaStats(ticks=3, ewma_tick_s=0.01,
+                                       p50_tick_s=0.01, p99_tick_s=0.02)})
+    if with_latency:
+        fb.latency = {"requests": {"n": 10.0, "ttft_p50": 1.0,
+                                   "ttft_p99": 4.0, "e2e_p50": 6.0,
+                                   "e2e_p99": 12.0,
+                                   "admission_wait_p50": 0.0,
+                                   "admission_wait_p99": 1.0}}
+    return fb
+
+
+def test_save_measurements_unwritable_warns_once(tmp_path, unwritable_dir):
+    ro = unwritable_dir(tmp_path)
+    ms = _ms()
+    ST._WARNED_PATHS.discard(ST.measurement_path(ms, dir=ro))
+    with pytest.warns(UserWarning, match="NOT persisted"):
+        assert ST.save_measurements(ms, dir=ro) is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ST.save_measurements(ms, dir=ro) is None
+
+
+def test_save_measurements_warning_names_the_path(tmp_path,
+                                                  unwritable_dir):
+    ro = unwritable_dir(tmp_path)
+    ms = _ms()
+    path = ST.measurement_path(ms, dir=ro)
+    ST._WARNED_PATHS.discard(path)
+    with pytest.warns(UserWarning, match="measurement store"):
+        ST.save_measurements(ms, dir=ro)
+    assert path in ST._WARNED_PATHS
+
+
+def test_save_measurements_still_works_on_writable_dir(tmp_path):
+    ms = _ms()
+    path = ST.save_measurements(ms, dir=str(tmp_path / "fresh"))
+    assert path is not None and os.path.exists(path)
+
+
+def test_save_feedback_unwritable_warns_once(tmp_path, unwritable_dir):
+    ro = unwritable_dir(tmp_path)
+    fb = _fb()
+    FB._WARNED_PATHS.discard(FB.feedback_path(fb, dir=ro))
+    with pytest.warns(UserWarning, match="NOT persisted"):
+        assert FB.save_feedback(fb, dir=ro) is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert FB.save_feedback(fb, dir=ro) is None
+
+
+def test_feedback_latency_summary_roundtrip(tmp_path):
+    fb = _fb()
+    path = FB.save_feedback(fb, dir=str(tmp_path))
+    assert path is not None
+    back = FB.load_feedback("cpu-test", "lumi", 8, dir=str(tmp_path))
+    assert back.latency["requests"]["ttft_p99"] == 4.0
+    assert back.latency["requests"]["n"] == 10.0
+    assert back.warm_start() == {0: 0.01}
+
+
+def test_feedback_old_format_without_latency_loads(tmp_path):
+    """Files written before the ``latency`` field existed must keep
+    loading: drop the key from the serialized form on disk."""
+    fb = _fb(with_latency=False)
+    d = fb.to_json_dict()
+    assert "latency" not in d    # empty dict -> key omitted on disk
+    path = FB.feedback_path(fb, dir=str(tmp_path))
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(d, f)
+    back = FB.load_feedback("cpu-test", "lumi", 8, dir=str(tmp_path))
+    assert back is not None
+    assert back.latency == {}
+    assert back.replicas["0"].ticks == 3
